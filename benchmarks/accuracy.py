@@ -1,0 +1,220 @@
+"""Accuracy benchmarks — one function per paper table/figure.
+
+All numbers are measured for real on tiny models trained in this container
+(Zipf-Markov LM for perplexity tables, needle-retrieval model for the
+Longbench/RULER-style tables).  Budgets scale with the context (192-224
+tokens here vs 32k in the paper); the *relative* claims being validated are
+the paper's: Twilight prunes the base algorithm's over-selection with no
+accuracy loss, and p is the stable knob.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    csv_row,
+    eval_decode_ppl,
+    eval_needle_acc,
+    lm_model,
+    needle_model,
+    twilight_variant,
+)
+from repro.data import DataConfig, needle_batch, zipf_markov_tokens
+
+
+def _lm_eval_tokens(cfg, b=8, s=160, seed=123):
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=s, global_batch=b,
+                      seed=seed)
+    rng = np.random.default_rng(seed)
+    return zipf_markov_tokens(dcfg, rng, b)[:, :s]
+
+
+def fig2_budget_vs_ppl():
+    """Fig. 2: PPL vs fixed top-k budget per base algorithm, vs Twilight.
+
+    Reproduces the paper's point that the optimal fixed budget depends on
+    the algorithm, while top-p hits the knee adaptively.
+    """
+    cfg, params = lm_model()
+    toks = _lm_eval_tokens(cfg)
+    rows = []
+    full_ppl, _ = eval_decode_ppl(
+        params, twilight_variant(cfg, enabled=False), toks)
+    csv_row("fig2_full", 0.0, f"ppl={full_ppl:.3f};budget=159")
+    for sel in ("quest", "streaming"):
+        for budget in (16, 32, 64, 128):
+            c = twilight_variant(cfg, selector=sel, prune_enabled=False,
+                                 fixed_budget=budget)
+            ppl, b = eval_decode_ppl(params, c, toks)
+            rows.append((sel, budget, ppl))
+            csv_row(f"fig2_{sel}_k{budget}", 0.0,
+                    f"ppl={ppl:.3f};budget={b:.0f}")
+    c = twilight_variant(cfg, selector="quest", prune_enabled=True,
+                         candidate_frac=0.5, p=0.9)
+    ppl, b = eval_decode_ppl(params, c, toks)
+    csv_row("fig2_quest_twilight", 0.0, f"ppl={ppl:.3f};budget={b:.1f}")
+    return rows
+
+
+def tab2_longbench_proxy():
+    """Table 2: base algorithm @ budget sweep vs +Twilight (retrieval task).
+
+    Score = needle retrieval accuracy; 'Budget' column = mean pruned budget.
+    """
+    cfg, params = needle_model()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=160, global_batch=32,
+                      seed=7)
+    rng = np.random.default_rng(7)
+    batch = needle_batch(dcfg, rng, 32)
+
+    results = {}
+    acc, _ = eval_needle_acc(params, twilight_variant(cfg, enabled=False),
+                             batch)
+    results["full"] = acc
+    csv_row("tab2_full", 0.0, f"acc={acc:.3f};budget=160")
+    acc, b = eval_needle_acc(
+        params, twilight_variant(cfg, selector="full", p=0.95,
+                                 candidate_frac=1.0), batch)
+    results["full_twi"] = acc
+    csv_row("tab2_full_twilight", 0.0, f"acc={acc:.3f};budget={b:.1f}")
+    for sel in ("quest", "double_sparsity"):
+        for budget in (16, 48, 96):
+            c = twilight_variant(cfg, selector=sel, prune_enabled=False,
+                                 fixed_budget=budget)
+            acc, b = eval_needle_acc(params, c, batch)
+            csv_row(f"tab2_{sel}_k{budget}", 0.0,
+                    f"acc={acc:.3f};budget={b:.0f}")
+        c = twilight_variant(cfg, selector=sel, prune_enabled=True,
+                             candidate_frac=0.5, p=0.95)
+        acc, b = eval_needle_acc(params, c, batch)
+        results[f"{sel}_twi"] = acc
+        csv_row(f"tab2_{sel}_twilight", 0.0, f"acc={acc:.3f};budget={b:.1f}")
+    return results
+
+
+def tab3_ruler_proxy():
+    """Table 3: needle retrieval across context lengths (RULER niah-style).
+
+    Distractor-needle variants need a bigger model/training budget to bind
+    the queried key (measured: the 4L/128d model plateaus at chance on
+    n_needles=3), so this proxy sweeps context length at one needle —
+    the axis the paper's Table 3 varies."""
+    cfg, params = needle_model()
+    for s in (96, 160):
+        dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=s,
+                          global_batch=32, seed=11)
+        rng = np.random.default_rng(11)
+        batch = needle_batch(dcfg, rng, 32, n_needles=1)
+        for name, c in [
+            ("full", twilight_variant(cfg, enabled=False)),
+            ("quest_k32", twilight_variant(cfg, selector="quest",
+                                           prune_enabled=False,
+                                           fixed_budget=32)),
+            ("quest_twi", twilight_variant(cfg, selector="quest", p=0.95,
+                                           candidate_frac=0.5)),
+            ("ds_twi", twilight_variant(cfg, selector="double_sparsity",
+                                        p=0.95, candidate_frac=0.5)),
+        ]:
+            acc, b = eval_needle_acc(params, c, batch)
+            csv_row(f"tab3_{name}_s{s}", 0.0, f"acc={acc:.3f};budget={b:.1f}")
+
+
+def tab4_medium_context():
+    """Table 4: medium-context PPL, pruner-only comparison at budget ~16."""
+    cfg, params = lm_model()
+    toks = _lm_eval_tokens(cfg, s=128)
+    rows = {}
+    for name, c in [
+        ("full", twilight_variant(cfg, enabled=False)),
+        ("quest_k16", twilight_variant(cfg, selector="quest",
+                                       prune_enabled=False, fixed_budget=16)),
+        ("ds_k16", twilight_variant(cfg, selector="double_sparsity",
+                                    prune_enabled=False, fixed_budget=16)),
+        ("twilight", twilight_variant(cfg, selector="full", p=0.9,
+                                      candidate_frac=1.0)),
+    ]:
+        ppl, b = eval_decode_ppl(params, c, toks)
+        rows[name] = ppl
+        csv_row(f"tab4_{name}", 0.0, f"ppl={ppl:.3f};budget={b:.1f}")
+    return rows
+
+
+def fig6_quant_bits():
+    """Fig. 6: kept attention mass under estimate precisions, p=0.85."""
+    import jax.numpy as jnp
+
+    from repro.core import TwilightPruner, masked_softmax
+    cfg, params = lm_model()
+    del cfg, params
+    rng = np.random.default_rng(3)
+    b, hq, hkv, n, d = 4, 4, 2, 512, 64
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    # Plant focus so the distribution is realistic.
+    Kn = np.array(K)
+    Kn[:, 13] = 2.5 * np.asarray(q).reshape(b, hkv, 2, d).mean(2)
+    K = jnp.asarray(Kn)
+    exact_scores = TwilightPruner(estimate_bits=16).estimate_scores(q, K, None)
+    w_exact = masked_softmax(exact_scores, None)
+    cand = jnp.ones((b, hkv, n), bool)
+    for bits, sim_noise in ((2, None), (4, None), (8, None), (16, None)):
+        if bits in (4, 16):
+            pruner = TwilightPruner(p=0.85, estimate_bits=bits)
+            mask, stats = pruner.prune(q, cand, keys=K)
+        else:
+            # Simulate 2/8-bit by quantizing K at that precision.
+            from repro.core.quant import QuantizedTensor
+            levels = 2 ** bits - 1
+            Kf = np.asarray(K)
+            lo, hi = Kf.min(-1, keepdims=True), Kf.max(-1, keepdims=True)
+            scale = np.maximum((hi - lo) / levels, 1e-8)
+            Kq = np.round((Kf - lo) / scale).clip(0, levels) * scale + lo
+            pruner = TwilightPruner(p=0.85, estimate_bits=16)
+            mask, stats = pruner.prune(q, cand, keys=jnp.asarray(Kq))
+        mask_q = jnp.repeat(mask, hq // hkv, axis=1)
+        kept = np.where(np.asarray(mask_q), np.asarray(w_exact), 0).sum(-1)
+        csv_row(f"fig6_bits{bits}", 0.0,
+                f"kept_mass={kept.mean():.4f};budget={float(stats.pruned_budget.mean()):.1f}")
+
+
+def fig9_p_sensitivity():
+    """Fig. 9: PPL and pruned budget (-> latency) as p sweeps."""
+    from benchmarks.common import attn_bytes_quest_twi, bytes_to_us
+    cfg, params = lm_model()
+    toks = _lm_eval_tokens(cfg)
+    for p in (0.5, 0.7, 0.8, 0.85, 0.9, 0.95, 0.99):
+        c = twilight_variant(cfg, selector="full", p=p, candidate_frac=1.0)
+        ppl, b = eval_decode_ppl(params, c, toks)
+        # Project the measured budget ratio onto the paper's 32k scenario.
+        b1 = int(32768 * b / 160)
+        us = bytes_to_us(attn_bytes_quest_twi(32768, 8, 128, 8192, b1))
+        csv_row(f"fig9_p{p}", us, f"ppl={ppl:.3f};budget={b:.1f}")
+
+
+def tabD_token_dropping():
+    """Appendix D: token-dropping (StreamingLLM-style) vs token-selecting
+    (+Twilight) on the retrieval task — dropping loses the needle whenever
+    it falls outside sink+recent; Twilight keeps it."""
+    cfg, params = needle_model()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=160, global_batch=32,
+                      seed=17)
+    rng = np.random.default_rng(17)
+    batch = needle_batch(dcfg, rng, 32)
+    for name, c in [
+        ("streaming_k48", twilight_variant(cfg, selector="streaming",
+                                           prune_enabled=False,
+                                           fixed_budget=48)),
+        ("streaming_k96", twilight_variant(cfg, selector="streaming",
+                                           prune_enabled=False,
+                                           fixed_budget=96)),
+        ("h2o_k48", twilight_variant(cfg, selector="h2o",
+                                     prune_enabled=False, fixed_budget=48)),
+        ("ds_twilight", twilight_variant(cfg, selector="double_sparsity",
+                                         p=0.95, candidate_frac=0.5)),
+    ]:
+        try:
+            acc, b = eval_needle_acc(params, c, batch)
+            csv_row(f"tabD_{name}", 0.0, f"acc={acc:.3f};budget={b:.1f}")
+        except ValueError as e:
+            csv_row(f"tabD_{name}", 0.0, f"skipped={e}")

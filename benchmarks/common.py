@@ -1,0 +1,182 @@
+"""Shared benchmark utilities: tiny trained models (cached), decode-time
+PPL / retrieval evaluation under arbitrary Twilight configs, timing, and
+the TPU-v5e analytic latency model used for the efficiency tables.
+
+This container is CPU-only, so operator *speedups* are reported from the
+memory-traffic cost model (decode attention is memory-bound — the paper's
+own premise); accuracy numbers are measured for real on models trained
+here, and algorithm microbenchmarks (top-p search etc.) are wall-clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_smoke_config
+from repro.core import TwilightConfig
+from repro.data import DataConfig, needle_batch, synthetic_lm_batches
+from repro.models import decode_step, init_params, prefill
+from repro.training import TrainConfig, train_loop
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                         "bench_cache")
+
+# TPU v5e hardware model (per chip) — see repro.launch.mesh.
+HBM_BW = 819e9
+PEAK_FLOPS = 197e12
+
+
+def bench_config(vocab=512, layers=4):
+    """The tiny LM all accuracy benches share (dense GQA, qwen2 family)."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    return cfg.replace(
+        n_layers=layers, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=vocab,
+        twilight=TwilightConfig(selector="quest", p=0.9, page_size=8,
+                                min_candidate=16),
+    )
+
+
+def _train(cfg, data_iter, steps, tag, lr=3e-3):
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    ckpt_dir = os.path.join(CACHE_DIR, tag)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    step = latest_step(ckpt_dir)
+    if step == steps:
+        return restore_checkpoint(ckpt_dir, steps, params)
+    tcfg = TrainConfig(peak_lr=lr, warmup_steps=max(1, steps // 10),
+                       total_steps=steps, remat=False)
+    params, _ = train_loop(params, cfg, tcfg, data_iter, log_every=steps)
+    save_checkpoint(ckpt_dir, steps, params)
+    return params
+
+
+def lm_model(steps=300, seq=192, batch=16):
+    """Tiny LM trained on the Zipf-Markov corpus (PG-19 stand-in)."""
+    cfg = bench_config()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                      global_batch=batch, seed=0)
+    params = _train(cfg, synthetic_lm_batches(dcfg, steps), steps, "lm")
+    return cfg, params
+
+
+def needle_model(steps=800, seq=160, batch=16):
+    """Tiny LM trained on the needle-retrieval task (RULER stand-in).
+
+    Training sequences end with (QUERY_MARK, key) and the loss supervises
+    ONLY the answer token — the model must form the induction circuit
+    (attend back to the needle site) to score; the filler is uniform noise
+    and carries no gradient (labels = -1)."""
+    cfg = bench_config()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                      global_batch=batch, seed=1)
+    rng = np.random.default_rng(1)
+
+    def batches():
+        for i in range(steps):
+            nb = needle_batch(dcfg, rng, batch)
+            inputs = nb["tokens"]  # ends with (QUERY_MARK, key)
+            labels = np.full_like(inputs, -1)
+            labels[:, -1] = nb["answers"]  # predict the value after the key
+            yield {"tokens": inputs, "labels": labels}
+
+    params = _train(cfg, batches(), steps, "needle", lr=3e-3)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Decode-time evaluation under a Twilight config
+# ---------------------------------------------------------------------------
+
+def eval_decode_ppl(params, cfg, tokens: np.ndarray, *, warm: int = 32,
+                    capacity: int | None = None):
+    """Teacher-forced decode PPL + mean pruned budget.
+
+    tokens: (b, s).  The first ``warm`` tokens prefill; the rest decode one
+    by one through the full Twilight pipeline (this is what makes sparse
+    attention affect the score).
+    """
+    b, s = tokens.shape
+    capacity = capacity or s
+    toks = jnp.asarray(tokens)
+    dec = jax.jit(lambda p, st, t: decode_step(p, cfg, st, t))
+    _, state = jax.jit(lambda p, tk: prefill(p, cfg, {"tokens": tk}, capacity)
+                       )(params, toks[:, :warm])
+    nll, count, budgets = 0.0, 0, []
+    for t in range(warm, s - 1):
+        logits, state, stats = dec(params, state, toks[:, t])
+        logp = jax.nn.log_softmax(logits[:, :cfg.vocab_size].astype(jnp.float32))
+        nll -= float(jnp.take_along_axis(
+            logp, toks[:, t + 1][:, None], axis=-1).mean())
+        count += 1
+        budgets.append(float(stats["mean_pruned_budget"]))
+    return float(np.exp(nll / max(count, 1))), float(np.mean(budgets))
+
+
+def eval_needle_acc(params, cfg, batch: dict, *, capacity: int | None = None):
+    """Retrieval accuracy: the token decoded after the query must be the
+    planted value."""
+    toks = jnp.asarray(batch["tokens"])
+    b, s = toks.shape
+    capacity = capacity or s
+    _, state = jax.jit(lambda p, tk: prefill(p, cfg, {"tokens": tk}, capacity)
+                       )(params, toks[:, :s - 1])
+    logits, state, stats = jax.jit(
+        lambda p, st, t: decode_step(p, cfg, st, t))(params, state,
+                                                     toks[:, s - 1])
+    pred = np.asarray(jnp.argmax(logits[:, :cfg.vocab_size], axis=-1))
+    acc = float((pred == batch["answers"]).mean())
+    return acc, float(stats["mean_pruned_budget"])
+
+
+def twilight_variant(cfg, **kw):
+    return cfg.replace(twilight=dataclasses.replace(cfg.twilight, **kw))
+
+
+# ---------------------------------------------------------------------------
+# Analytic decode-attention latency model (paper §4.3 adapted to v5e)
+# ---------------------------------------------------------------------------
+
+def attn_bytes_full(n, hkv, d, bytes_kv=2):
+    """Full attention: read all of K and V."""
+    return 2 * n * hkv * d * bytes_kv
+
+
+def attn_bytes_quest(n, hkv, d, b0, page=64, bytes_kv=2):
+    """Quest: page metadata (2 vectors/page) + selected K,V."""
+    meta = 2 * (n // page) * hkv * d * bytes_kv
+    return meta + 2 * b0 * hkv * d * bytes_kv
+
+
+def attn_bytes_quest_twi(n, hkv, d, b0, b1, page=64, bytes_kv=2):
+    """Quest+Twilight: metadata + INT4 estimate over B0 + final K,V over B1
+    + the top-p pass over B0 weights (f32)."""
+    meta = 2 * (n // page) * hkv * d * bytes_kv
+    est = b0 * hkv * (d // 2 + 8)  # packed nibbles + scale/zero
+    topp = 4 * b0 * hkv
+    final = 2 * b1 * hkv * d * bytes_kv
+    return meta + est + topp + final
+
+
+def bytes_to_us(nbytes, batch=1):
+    return batch * nbytes / HBM_BW * 1e6
+
+
+def timed(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def csv_row(name: str, us: float, derived: str):
+    print(f"{name},{us:.2f},{derived}")

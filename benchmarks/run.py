@@ -1,0 +1,69 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Accuracy tables run for real
+on tiny models trained in this container (cached under results/bench_cache);
+efficiency tables use the TPU-v5e HBM-traffic cost model (decode attention
+is memory-bound — the paper's premise); Algorithm-1 rows are wall-clock.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig7 tab2  # subset
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import accuracy, latency
+
+TABLES = {
+    "fig2": accuracy.fig2_budget_vs_ppl,  # budget-vs-ppl per algorithm
+    "tab2": accuracy.tab2_longbench_proxy,  # Longbench-style retrieval
+    "tab3": accuracy.tab3_ruler_proxy,  # RULER-style multi-needle
+    "tab4": accuracy.tab4_medium_context,  # medium-context PPL
+    "fig6": accuracy.fig6_quant_bits,  # estimate-precision ablation
+    "tabD": accuracy.tabD_token_dropping,  # Appendix D: dropping vs selecting
+    "fig9": accuracy.fig9_p_sensitivity,  # p sweep
+    "fig7": latency.fig7_attention_speedup,  # operator speedups
+    "fig8": latency.fig8_e2e_tpot,  # end-to-end TPOT
+    "fig10": latency.fig10_time_breakdown,  # select/prune/attend split
+    "tabE": latency.tabE_offload,  # offloading scenario
+    "alg1": latency.alg1_topp_microbench,  # top-p binary search wall-clock
+    "kernels": latency.kernels_interpret_sanity,  # Pallas interpret sanity
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(TABLES)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        fn = TABLES[name]
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {name} done in {time.time() - t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            print(f"# {name} FAILED: {e}")
+    # Roofline summary appended when the dry-run results exist.
+    try:
+        from benchmarks import roofline
+        rows = roofline.full_table()
+        for r in rows:
+            csv = (f"roofline_{r['arch']}_{r['shape']},0.00,"
+                   f"compute={r['compute_s']:.3e};memory={r['memory_s']:.3e};"
+                   f"collective={r['collective_s']:.3e};"
+                   f"dominant={r['dominant']};useful={r['useful_ratio']:.2f}")
+            print(csv)
+        print("# roofline done")
+    except Exception as e:  # noqa: BLE001
+        print(f"# roofline skipped: {e}")
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

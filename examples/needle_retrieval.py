@@ -1,0 +1,42 @@
+"""Long-context retrieval under sparse attention: trains a small model on
+the needle task, then compares Full / Quest-top-k / Quest+Twilight on
+retrieval accuracy and attention budget — the paper's Tables 2/3 story in
+miniature.
+
+    PYTHONPATH=src python examples/needle_retrieval.py
+"""
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import eval_needle_acc, needle_model, twilight_variant
+from repro.data import DataConfig, needle_batch
+
+
+def main():
+    cfg, params = needle_model()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=160, global_batch=32,
+                      seed=42)
+    rng = np.random.default_rng(42)
+    batch = needle_batch(dcfg, rng, 32)
+
+    rows = [
+        ("full attention", twilight_variant(cfg, enabled=False)),
+        ("quest top-k=16", twilight_variant(cfg, selector="quest",
+                                            prune_enabled=False,
+                                            fixed_budget=16)),
+        ("quest top-k=96", twilight_variant(cfg, selector="quest",
+                                            prune_enabled=False,
+                                            fixed_budget=96)),
+        ("quest + twilight p=.95", twilight_variant(
+            cfg, selector="quest", p=0.95, candidate_frac=0.5)),
+    ]
+    print(f"{'method':24s} {'retrieval acc':>13s} {'budget':>7s}")
+    for name, c in rows:
+        acc, budget = eval_needle_acc(params, c, batch)
+        print(f"{name:24s} {acc:13.3f} {budget:7.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+from repro.analysis.costs import (
+    decode_flops,
+    decode_hbm_bytes,
+    forward_flops,
+    model_flops_6nd,
+    param_count_estimate,
+    train_hbm_bytes,
+)
+
+__all__ = [
+    "decode_flops",
+    "decode_hbm_bytes",
+    "forward_flops",
+    "model_flops_6nd",
+    "param_count_estimate",
+    "train_hbm_bytes",
+]

@@ -1,0 +1,274 @@
+"""Analytic FLOP / HBM-byte accounting per architecture and input shape.
+
+Why analytic: XLA's ``cost_analysis()`` counts ``while``-loop bodies once,
+and every layer stack here is a ``lax.scan`` (plus grad-accumulation and
+time-scan loops), so the HLO numbers undercount by the trip counts.  The
+roofline's compute/memory terms therefore come from this module — exact
+matmul accounting from the configs — while the dry-run's HLO numbers serve
+as per-iteration cross-checks and the collective bytes are parsed from the
+HLO (scaled by the known loop factors).
+
+Conventions: FLOPs count multiply+add as 2; train = 3x forward (fwd + 2x
+bwd); attention for causal training uses the n/2 average context.
+"""
+
+from __future__ import annotations
+
+from repro.models.common import ModelConfig
+from repro.models.model import layer_schedule
+
+BYTES_BF16 = 2
+BYTES_F32 = 4
+
+
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    d_inner = int(cfg.xlstm.proj_factor * cfg.d_model)
+    d_inner -= d_inner % cfg.n_heads
+    return d_inner, cfg.n_heads, d_inner // cfg.n_heads
+
+
+def param_count_estimate(cfg: ModelConfig) -> int:
+    """Total parameters (matches init_params to ~1%)."""
+    specs, repeats = layer_schedule(cfg)
+    d, dh, hq, hkv = cfg.d_model, cfg.d_head, cfg.n_heads, cfg.n_kv_heads
+    total = cfg.padded_vocab * d  # embed
+    if not cfg.tie_embeddings:
+        total += d * cfg.padded_vocab
+    per_period = 0
+    for spec in specs:
+        if spec.kind == "attn":
+            per_period += d * dh * (hq + 2 * hkv) + hq * dh * d
+            if spec.has_cross:
+                per_period += d * dh * (hq + 2 * hkv) + hq * dh * d
+        elif spec.kind == "mamba":
+            di = cfg.ssm.expand * d
+            dt_rank = cfg.ssm.dt_rank or max(1, -(-d // 16))
+            per_period += (d * 2 * di + cfg.ssm.d_conv * di
+                           + di * (dt_rank + 2 * cfg.ssm.d_state)
+                           + dt_rank * di + di * cfg.ssm.d_state
+                           + di * d)
+        elif spec.kind == "mlstm":
+            di, nh, dhx = _mlstm_dims(cfg)
+            per_period += d * 2 * di + 3 * di * di + di * 2 * nh + di * di \
+                + di * d + cfg.xlstm.conv_kernel * di
+        elif spec.kind == "slstm":
+            nh, dhx = cfg.n_heads, d // cfg.n_heads
+            per_period += d * 4 * d + 4 * nh * dhx * dhx + d * d
+        if spec.kind in ("attn", "mamba"):
+            if spec.is_moe:
+                moe = cfg.moe
+                d_e = moe.d_expert or cfg.d_ff
+                per_period += d * moe.n_experts  # router
+                per_period += moe.n_experts * 3 * d * d_e
+                per_period += moe.n_shared * 3 * d * d_e
+            else:
+                d_ff = (cfg.moe.dense_d_ff if cfg.moe else 0) or cfg.d_ff
+                per_period += 3 * d * d_ff
+    total += per_period * repeats
+    if cfg.encoder_layers:
+        total += cfg.encoder_layers * (
+            d * dh * (hq + 2 * hkv) + hq * dh * d + 3 * d * cfg.d_ff)
+    return int(total)
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top-k + shared experts only)."""
+    if cfg.moe is None:
+        return param_count_estimate(cfg)
+    moe = cfg.moe
+    d_e = moe.d_expert or cfg.d_ff
+    inactive_per_moe_layer = (moe.n_experts - moe.top_k) * 3 * cfg.d_model * d_e
+    specs, repeats = layer_schedule(cfg)
+    n_moe_layers = sum(s.is_moe for s in specs) * repeats
+    return param_count_estimate(cfg) - n_moe_layers * inactive_per_moe_layer
+
+
+def _layer_flops_fwd(cfg: ModelConfig, spec, tokens: int, ctx: int) -> float:
+    """Forward FLOPs of one layer over ``tokens`` with average context ctx."""
+    d, dh, hq, hkv = cfg.d_model, cfg.d_head, cfg.n_heads, cfg.n_kv_heads
+    f = 0.0
+    if spec.kind == "attn":
+        f += 2 * tokens * d * dh * (hq + 2 * hkv)  # qkv proj
+        f += 2 * tokens * hq * dh * d  # out proj
+        f += 2 * 2 * tokens * ctx * hq * dh  # qk^T and pv
+        if spec.has_cross:
+            f *= 2  # cross-attention of similar size
+    elif spec.kind == "mamba":
+        di = cfg.ssm.expand * d
+        ds = cfg.ssm.d_state
+        dt_rank = cfg.ssm.dt_rank or max(1, -(-d // 16))
+        f += 2 * tokens * d * 2 * di + 2 * tokens * di * (dt_rank + 2 * ds)
+        f += 2 * tokens * dt_rank * di
+        f += tokens * di * ds * 6  # discretize + scan update + readout
+        f += 2 * tokens * di * d
+        f += tokens * di * cfg.ssm.d_conv * 2
+    elif spec.kind == "mlstm":
+        di, nh, dhx = _mlstm_dims(cfg)
+        f += 2 * tokens * d * 2 * di + 3 * 2 * tokens * di * di
+        f += tokens * nh * dhx * dhx * 6  # C update + readout
+        f += 2 * tokens * di * d
+    elif spec.kind == "slstm":
+        nh, dhx = cfg.n_heads, d // cfg.n_heads
+        f += 2 * tokens * d * 4 * d + 2 * tokens * 4 * nh * dhx * dhx
+        f += 2 * tokens * d * d
+    if spec.kind in ("attn", "mamba"):
+        if spec.is_moe:
+            moe = cfg.moe
+            d_e = moe.d_expert or cfg.d_ff
+            f += 2 * tokens * cfg.d_model * moe.n_experts  # router
+            f += 2 * 3 * tokens * moe.top_k * moe.capacity_factor \
+                * cfg.d_model * d_e
+            f += 2 * 3 * tokens * moe.n_shared * cfg.d_model * d_e
+        else:
+            d_ff = (cfg.moe.dense_d_ff if cfg.moe else 0) or cfg.d_ff
+            f += 2 * 3 * tokens * cfg.d_model * d_ff
+    return f
+
+
+def forward_flops(cfg: ModelConfig, batch: int, seq: int) -> float:
+    """Forward pass over (batch, seq) with causal attention (avg ctx = s/2)."""
+    specs, repeats = layer_schedule(cfg)
+    tokens = batch * seq
+    f = sum(_layer_flops_fwd(cfg, s, tokens, seq / 2) for s in specs) * repeats
+    f += 2 * tokens * cfg.d_model * cfg.padded_vocab  # lm head
+    if cfg.encoder_layers:
+        from repro.models.model import LayerSpec
+        enc_spec = LayerSpec("attn", False, False)
+        f += cfg.encoder_layers * _layer_flops_fwd(cfg, enc_spec, tokens, seq)
+    return f
+
+
+def train_step_flops(cfg: ModelConfig, batch: int, seq: int) -> float:
+    return 3.0 * forward_flops(cfg, batch, seq)
+
+
+def decode_flops(cfg: ModelConfig, batch: int, ctx: int) -> float:
+    """One decode step: forward over `batch` tokens with full context `ctx`,
+    including the Twilight estimate (q·K̃ over the candidate set) and the
+    pruned sparse attention."""
+    specs, repeats = layer_schedule(cfg)
+    f = sum(_layer_flops_fwd(cfg, s, batch, 0) for s in specs) * repeats
+    # Attention context terms, per attention layer.
+    n_attn = sum(s.kind == "attn" for s in specs) * repeats
+    dh, hq, hkv = cfg.d_head, cfg.n_heads, cfg.n_kv_heads
+    tw = cfg.twilight
+    if tw.enabled:
+        b0 = tw.candidate_budget(ctx)
+        b1 = max(1, int(0.02 * ctx))  # ~2% survives top-p (paper Tab. 2)
+        est = 2 * batch * hq * b0 * dh  # INT4 SpGEMV estimate
+        topp = batch * hq * b0 * tw.topp_iters  # fused select+sum passes
+        attn = 2 * 2 * batch * b1 * hq * dh
+        f += n_attn * (est + topp + attn)
+    else:
+        f += n_attn * 2 * 2 * batch * ctx * hq * dh
+    f += 2 * batch * cfg.d_model * cfg.padded_vocab
+    return f
+
+
+def decode_hbm_bytes(cfg: ModelConfig, batch: int, ctx: int) -> float:
+    """HBM traffic of one decode step: weights once + per-seq KV traffic."""
+    specs, repeats = layer_schedule(cfg)
+    n_attn = sum(s.kind == "attn" for s in specs) * repeats
+    weights = active_param_count(cfg) * BYTES_BF16
+    dh, hkv = cfg.d_head, cfg.n_kv_heads
+    tw = cfg.twilight
+    per_seq = 0.0
+    if tw.enabled:
+        b0 = tw.candidate_budget(ctx)
+        b1 = max(1, int(0.02 * ctx))
+        meta = 2 * (ctx // tw.page_size) * hkv * dh * BYTES_BF16  # Quest
+        est = b0 * hkv * (dh // 2 + 8)  # packed INT4 + scale/zero
+        topp = b0 * hkv * BYTES_F32
+        final = 2 * b1 * hkv * dh * BYTES_BF16
+        per_seq = meta + est + topp + final
+    else:
+        per_seq = 2 * ctx * hkv * dh * BYTES_BF16
+    return weights + batch * n_attn * per_seq
+
+
+def prefill_hbm_bytes(cfg: ModelConfig, batch: int, seq: int) -> float:
+    weights = param_count_estimate(cfg) * BYTES_BF16
+    acts = 12 * batch * seq * cfg.d_model * cfg.n_layers * BYTES_BF16
+    return weights + acts
+
+
+def train_hbm_bytes(cfg: ModelConfig, batch: int, seq: int) -> float:
+    """Params fwd+bwd reads + grad write + Adam read/write + activations."""
+    p = param_count_estimate(cfg)
+    param_traffic = p * (2 * BYTES_BF16 + BYTES_BF16 + 4 * BYTES_F32)
+    acts = 24 * batch * seq * cfg.d_model * cfg.n_layers * BYTES_BF16
+    return param_traffic + acts
+
+
+def model_flops_6nd(cfg: ModelConfig, tokens: int, *, train: bool) -> float:
+    """The 6·N·D (train) / 2·N·D (inference) convention, N = active params."""
+    n = active_param_count(cfg)
+    return (6.0 if train else 2.0) * n * tokens
+
+
+# ---------------------------------------------------------------------------
+# Collective traffic model (per chip, per step)
+# ---------------------------------------------------------------------------
+
+def collective_bytes_per_chip(cfg: ModelConfig, kind: str, batch: int,
+                              seq: int, *, fsdp: int = 16, tensor: int = 16,
+                              seq_parallel: bool | None = None,
+                              grad_accum: int = 1) -> dict[str, float]:
+    """Analytic per-chip collective bytes for one step on the 16x16 mesh.
+
+    Terms:
+      * fsdp_params — all-gather of FSDP-sharded weights before use
+        (x2 for train fwd+bwd-recompute) + gradient reduce-scatter.
+        Per chip: (param_bytes / tensor) x (fsdp-1)/fsdp per pass.
+      * seq_parallel — Megatron-SP gather/scatter of the residual around
+        each block (train/prefill with sequence-sharded residuals).
+      * inner_allreduce — contractions over tensor-sharded dims (attention
+        out-proj, FFN down-proj, SSM x_proj): all-reduce of the block
+        output per layer.
+    """
+    p_bytes = param_count_estimate(cfg) * BYTES_BF16
+    b_loc = max(1, batch // fsdp)
+    d = cfg.d_model
+    specs, repeats = layer_schedule(cfg)
+    n_layers = len(specs) * repeats
+
+    passes = 3.0 if kind == "train" else 1.0  # fwd + bwd recompute + grad RS
+    # FSDP-sharded weights: the partitioner picks the cheaper of
+    # (a) all-gathering the weight shards before each use, or
+    # (b) computing partial products and all-reducing the *activations*.
+    # Training batches make (a) cheaper; single-token decode makes (b)
+    # nearly free.  Weights are re-gathered every grad-accum microstep;
+    # activation terms are per *global* batch (microbatching conserves
+    # total tokens).
+    tokens_loc_all = b_loc * (seq if kind in ("train", "prefill") else 1)
+    gather_bytes = passes * (p_bytes / tensor) * (fsdp - 1) / fsdp
+    if kind == "train":
+        gather_bytes *= grad_accum
+    # ~4 sharded matmul outputs per layer of width ~d.
+    partial_ar_bytes = passes * n_layers * 4 * tokens_loc_all * d * BYTES_F32 \
+        * (fsdp - 1) / fsdp
+    fsdp_params = min(gather_bytes, partial_ar_bytes)
+
+    if seq_parallel is None:
+        seq_parallel = (kind in ("train", "prefill")
+                        and cfg.ssm is None and cfg.xlstm is None
+                        and cfg.frontend != "vision")
+    sp = 0.0
+    ar = 0.0
+    act_bytes = b_loc * (seq if kind in ("train", "prefill") else 1) \
+        * d * BYTES_BF16
+    if seq_parallel and kind in ("train", "prefill"):
+        # Megatron-SP: 4 gather/scatter per layer fwd, 4 bwd; these REPLACE
+        # the tensor-parallel activation all-reduces.
+        per_layer = (8 if kind == "train" else 4) * act_bytes \
+            * (tensor - 1) / tensor
+        sp = per_layer * n_layers
+    else:
+        # Plain TP: 2 activation all-reduces per layer (out-proj, ffn-down),
+        # x3 for train (fwd + bwd has two).
+        ar = n_layers * act_bytes * 2 * (3 if kind == "train" else 1) \
+            * (tensor - 1) / tensor
+
+    return {"fsdp_params": fsdp_params, "seq_parallel": sp,
+            "inner_allreduce": ar,
+            "total": fsdp_params + sp + ar}

@@ -1,0 +1,88 @@
+"""Dependency-free checkpointing: flattened pytree -> npz.
+
+Tree paths become npz keys ("blocks/0/mixer/wq"), dtypes (incl. bfloat16,
+stored as uint16 views with a dtype sidecar) round-trip exactly.  Each save
+is atomic (tmp + rename).  For multi-host production this layer would shard
+per process; on this single-host container it writes one file per step.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+
+
+def _flatten(tree: Tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    dtypes = {}
+    arrays = {}
+    for k, v in flat.items():
+        if v.dtype == jnp.bfloat16:
+            arrays[k] = v.view(np.uint16)
+            dtypes[k] = "bfloat16"
+        else:
+            arrays[k] = v
+            dtypes[k] = str(v.dtype)
+    path = os.path.join(ckpt_dir, f"step_{step}.npz")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, __dtypes__=json.dumps(dtypes), **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like: Tree) -> Tree:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    path = os.path.join(ckpt_dir, f"step_{step}.npz")
+    with np.load(path, allow_pickle=False) as data:
+        dtypes = json.loads(str(data["__dtypes__"]))
+        flat = {}
+        for k in data.files:
+            if k == "__dtypes__":
+                continue
+            arr = data[k]
+            if dtypes[k] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            flat[k] = arr
+
+    ref = _flatten(like)
+    if set(ref) != set(flat):
+        missing = set(ref) ^ set(flat)
+        raise ValueError(f"checkpoint/tree key mismatch: {sorted(missing)[:5]}")
+    leaves_ref, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_k, leaf in leaves_ref:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
+        arr = flat[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := _STEP_RE.search(f))]
+    return max(steps) if steps else None

@@ -1,0 +1,46 @@
+"""Assigned-architecture registry.
+
+``get_config(arch_id)`` returns the exact full config from the public pool;
+``get_smoke_config(arch_id)`` returns the reduced same-family variant used by
+the CPU smoke tests (≤2 layers, d_model ≤ 512, ≤4 experts).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.common import ModelConfig
+
+ARCH_IDS = [
+    "deepseek-moe-16b",
+    "qwen2-1.5b",
+    "llama4-scout-17b-a16e",
+    "starcoder2-15b",
+    "moonshot-v1-16b-a3b",
+    "jamba-1.5-large-398b",
+    "qwen3-32b",
+    "seamless-m4t-medium",
+    "xlstm-350m",
+    "internvl2-1b",
+]
+
+
+def _module(arch_id: str):
+    return importlib.import_module(
+        "repro.configs." + arch_id.replace("-", "_").replace(".", "_"))
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCH_IDS:
+        raise ValueError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    return _module(arch_id).config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCH_IDS:
+        raise ValueError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    return _module(arch_id).smoke_config()
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)

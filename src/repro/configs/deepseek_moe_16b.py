@@ -1,0 +1,32 @@
+"""DeepSeek-MoE 16B [arXiv:2401.06066] — fine-grained MoE, 2 shared + 64
+routed top-6 experts, MHA (kv = 16 = n_heads)."""
+
+from repro.core.twilight import TwilightConfig
+from repro.models.common import ArchType, MoEConfig, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-moe-16b",
+        arch_type=ArchType.MOE,
+        n_layers=28,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=1408,
+        vocab_size=102400,
+        moe=MoEConfig(n_experts=64, top_k=6, n_shared=2, d_expert=1408,
+                      period=1),
+        twilight=TwilightConfig(selector="quest", p=0.95),
+        citation="arXiv:2401.06066",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=64,
+        vocab_size=512,
+        moe=MoEConfig(n_experts=4, top_k=2, n_shared=1, d_expert=64, period=1),
+        twilight=TwilightConfig(selector="quest", p=0.9, page_size=8,
+                                min_candidate=16),
+    )

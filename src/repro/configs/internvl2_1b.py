@@ -1,0 +1,35 @@
+"""InternVL2-1B [arXiv:2404.16821] — Qwen2-0.5B-family language decoder
+consuming InternViT patch embeddings (vision encoder stubbed; the LM sees
+a 256-token patch-embedding prefix from `input_specs()`)."""
+
+from repro.core.twilight import TwilightConfig
+from repro.models.common import ArchType, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-1b",
+        arch_type=ArchType.VLM,
+        n_layers=24,
+        d_model=896,
+        n_heads=14,
+        n_kv_heads=2,
+        d_ff=4864,
+        vocab_size=151655,
+        qkv_bias=True,
+        rope_theta=1e6,
+        tie_embeddings=True,
+        frontend="vision",
+        n_prefix_tokens=256,
+        twilight=TwilightConfig(selector="quest", p=0.95),
+        citation="arXiv:2404.16821",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=512, n_prefix_tokens=16,
+        twilight=TwilightConfig(selector="quest", p=0.9, page_size=8,
+                                min_candidate=16),
+    )

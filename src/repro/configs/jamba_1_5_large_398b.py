@@ -1,0 +1,37 @@
+"""Jamba-1.5-Large 398B [arXiv:2403.19887] — hybrid Mamba:attention 1:7
+interleave, MoE 16 experts top-2 on every other layer."""
+
+from repro.core.twilight import TwilightConfig
+from repro.models.common import ArchType, MoEConfig, ModelConfig, SSMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b",
+        arch_type=ArchType.HYBRID,
+        n_layers=72,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=24576,
+        vocab_size=65536,
+        attn_period=8,  # 1 attention per 8 layers (1:7)
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+        moe=MoEConfig(n_experts=16, top_k=2, n_shared=0, d_expert=24576,
+                      period=2, dense_d_ff=24576),
+        twilight=TwilightConfig(selector="quest", p=0.95),
+        citation="arXiv:2403.19887",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=512,
+        attn_period=4,
+        ssm=SSMConfig(d_state=4, d_conv=2, expand=2),
+        moe=MoEConfig(n_experts=4, top_k=2, n_shared=0, d_expert=128,
+                      period=2, dense_d_ff=128),
+        twilight=TwilightConfig(selector="quest", p=0.9, page_size=8,
+                                min_candidate=16),
+    )

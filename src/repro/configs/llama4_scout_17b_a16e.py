@@ -1,0 +1,33 @@
+"""Llama-4 Scout 17B-A16E [hf:meta-llama/Llama-4-Scout-17B-16E] — MoE 16
+experts top-1 + shared expert, GQA kv=8."""
+
+from repro.core.twilight import TwilightConfig
+from repro.models.common import ArchType, MoEConfig, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-17b-a16e",
+        arch_type=ArchType.MOE,
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab_size=202048,
+        rope_theta=5e5,
+        moe=MoEConfig(n_experts=16, top_k=1, n_shared=1, d_expert=8192,
+                      period=1),
+        twilight=TwilightConfig(selector="quest", p=0.95),
+        citation="hf:meta-llama/Llama-4-Scout-17B-16E",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=128, n_heads=8, n_kv_heads=2, d_ff=128,
+        vocab_size=512,
+        moe=MoEConfig(n_experts=4, top_k=1, n_shared=1, d_expert=128, period=1),
+        twilight=TwilightConfig(selector="quest", p=0.9, page_size=8,
+                                min_candidate=16),
+    )

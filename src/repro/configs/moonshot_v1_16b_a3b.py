@@ -1,0 +1,37 @@
+"""Moonlight-16B-A3B [hf:moonshotai/Moonlight-16B-A3B] — DeepSeek-MoE-family
+fine-grained MoE (64 routed top-6 + 2 shared).
+
+Pool tag says [dense] but the config line specifies "MoE 64e top-6"; the
+released Moonlight model is MoE, so we implement MoE and record the tag
+inconsistency in DESIGN.md §Arch-applicability.
+"""
+
+from repro.core.twilight import TwilightConfig
+from repro.models.common import ArchType, MoEConfig, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="moonshot-v1-16b-a3b",
+        arch_type=ArchType.MOE,
+        n_layers=48,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=1408,
+        vocab_size=163840,
+        moe=MoEConfig(n_experts=64, top_k=6, n_shared=2, d_expert=1408,
+                      period=1),
+        twilight=TwilightConfig(selector="double_sparsity", p=0.95),
+        citation="hf:moonshotai/Moonlight-16B-A3B",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=64,
+        vocab_size=512,
+        moe=MoEConfig(n_experts=4, top_k=2, n_shared=1, d_expert=64, period=1),
+        twilight=TwilightConfig(selector="double_sparsity", p=0.9, page_size=8,
+                                min_candidate=16),
+    )

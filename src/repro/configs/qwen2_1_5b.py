@@ -1,0 +1,31 @@
+"""Qwen2-1.5B [arXiv:2407.10671] — dense GQA (kv=2) with QKV bias."""
+
+from repro.core.twilight import TwilightConfig
+from repro.models.common import ArchType, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-1.5b",
+        arch_type=ArchType.DENSE,
+        n_layers=28,
+        d_model=1536,
+        n_heads=12,
+        n_kv_heads=2,
+        d_ff=8960,
+        vocab_size=151936,
+        qkv_bias=True,
+        rope_theta=1e6,
+        tie_embeddings=True,
+        twilight=TwilightConfig(selector="quest", p=0.95),
+        citation="arXiv:2407.10671",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=512,
+        twilight=TwilightConfig(selector="quest", p=0.9, page_size=8,
+                                min_candidate=16),
+    )

@@ -1,0 +1,32 @@
+"""Qwen3-32B [hf:Qwen/Qwen3-8B family] — dense GQA kv=8 with qk-norm,
+explicit head_dim=128."""
+
+from repro.core.twilight import TwilightConfig
+from repro.models.common import ArchType, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-32b",
+        arch_type=ArchType.DENSE,
+        n_layers=64,
+        d_model=5120,
+        n_heads=64,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=25600,
+        vocab_size=151936,
+        qk_norm=True,
+        rope_theta=1e6,
+        twilight=TwilightConfig(selector="quest", p=0.95),
+        citation="hf:Qwen/Qwen3-8B",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_head=32,
+        d_ff=256, vocab_size=512,
+        twilight=TwilightConfig(selector="quest", p=0.9, page_size=8,
+                                min_candidate=16),
+    )

@@ -1,0 +1,32 @@
+"""SeamlessM4T-medium [arXiv:2308.11596] — encoder-decoder over audio frame
+embeddings (speech encoder stubbed; `input_specs()` supplies frame
+embeddings of shape (b, s_enc, d_model))."""
+
+from repro.core.twilight import TwilightConfig
+from repro.models.common import ArchType, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium",
+        arch_type=ArchType.AUDIO,
+        n_layers=12,  # decoder layers (pool spec); encoder adds 12 more
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=4096,
+        vocab_size=256206,
+        encoder_layers=12,
+        frontend="audio",
+        twilight=TwilightConfig(selector="quest", p=0.95),
+        citation="arXiv:2308.11596",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+        vocab_size=512, encoder_layers=2,
+        twilight=TwilightConfig(selector="quest", p=0.9, page_size=8,
+                                min_candidate=16),
+    )

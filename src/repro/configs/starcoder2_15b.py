@@ -1,0 +1,29 @@
+"""StarCoder2-15B [arXiv:2402.19173] — dense GQA kv=4, RoPE."""
+
+from repro.core.twilight import TwilightConfig
+from repro.models.common import ArchType, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-15b",
+        arch_type=ArchType.DENSE,
+        n_layers=40,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=4,
+        d_ff=24576,
+        vocab_size=49152,
+        rope_theta=1e5,
+        twilight=TwilightConfig(selector="quest", p=0.95),
+        citation="arXiv:2402.19173",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=192, n_heads=6, n_kv_heads=2, d_ff=384,
+        vocab_size=512,
+        twilight=TwilightConfig(selector="quest", p=0.9, page_size=8,
+                                min_candidate=16),
+    )

@@ -1,0 +1,33 @@
+"""xLSTM-350M [arXiv:2405.04517] — sLSTM + mLSTM block stack (7:1), no FFN
+(d_ff = 0; the blocks carry their own projections).
+
+The Twilight technique is inapplicable (no attention weights / KV cache at
+decode); the config keeps twilight.enabled=False and the model decodes via
+its O(1) recurrent state (DESIGN.md §Arch-applicability).
+"""
+
+from repro.core.twilight import TwilightConfig
+from repro.models.common import ArchType, ModelConfig, XLSTMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-350m",
+        arch_type=ArchType.SSM,
+        n_layers=24,
+        d_model=1024,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=0,
+        vocab_size=50304,
+        xlstm=XLSTMConfig(slstm_every=8, proj_factor=2.0, conv_kernel=4),
+        twilight=TwilightConfig(enabled=False),
+        citation="arXiv:2405.04517",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, vocab_size=512,
+        xlstm=XLSTMConfig(slstm_every=2, proj_factor=2.0, conv_kernel=2),
+    )

@@ -1,0 +1,77 @@
+"""Twilight core: adaptive attention sparsity with hierarchical top-p pruning.
+
+Public API of the paper's contribution.  Everything here is a pure function
+over jax arrays (jit/shard/scan-safe); stateful cache plumbing lives in
+``repro.serving``.
+"""
+
+from repro.core.attention import (
+    attention_error,
+    full_decode_attention,
+    gathered_sparse_decode_attention,
+    masked_sparse_decode_attention,
+    mha_attention,
+)
+from repro.core.pruner import PrunerStats, TwilightPruner
+from repro.core.quant import QuantizedTensor, dequantize_int4, quantize_int4
+from repro.core.selectors import (
+    DoubleSparsitySelector,
+    FullSelector,
+    H2OSelector,
+    PageMeta,
+    QuestSelector,
+    SelectionContext,
+    StreamingSelector,
+    TokenSelector,
+    build_page_meta,
+    calibrate_ds_channels,
+    group_union,
+    selector_from_name,
+    topk_mask,
+)
+from repro.core.topp import (
+    ToppResult,
+    masked_softmax,
+    oracle_topp_mask,
+    topp_mask,
+    topp_threshold,
+)
+from repro.core.twilight import (
+    TwilightConfig,
+    TwilightOutput,
+    twilight_decode_attention,
+)
+
+__all__ = [
+    "attention_error",
+    "full_decode_attention",
+    "gathered_sparse_decode_attention",
+    "masked_sparse_decode_attention",
+    "mha_attention",
+    "PrunerStats",
+    "TwilightPruner",
+    "QuantizedTensor",
+    "dequantize_int4",
+    "quantize_int4",
+    "DoubleSparsitySelector",
+    "FullSelector",
+    "H2OSelector",
+    "PageMeta",
+    "QuestSelector",
+    "SelectionContext",
+    "StreamingSelector",
+    "TokenSelector",
+    "build_page_meta",
+    "calibrate_ds_channels",
+    "group_union",
+    "selector_from_name",
+    "topk_mask",
+    "ToppResult",
+    "masked_softmax",
+    "oracle_topp_mask",
+    "topp_mask",
+    "topp_threshold",
+    "TwilightConfig",
+    "TwilightOutput",
+    "twilight_decode_attention",
+]

@@ -1,0 +1,74 @@
+"""INT4 asymmetric quantization of the K cache (§4.2, Appendix B.1).
+
+Per-(token, head) *dynamic* asymmetric quantization over the head dim:
+``q = round((k - zero) / scale)`` with ``q in [0, 15]``; two 4-bit codes are
+packed per byte along the head dim (even index -> low nibble, odd -> high),
+mirroring the paper's interleaved uint8 packing.  Scale/zero are stored per
+(token, head) in the cache dtype.
+
+The pure-jnp functions here are the reference; ``repro.kernels.quant`` holds
+the Pallas TPU kernel and ``repro.kernels.spgemv`` consumes the packed layout
+directly (dequant-in-VMEM).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantizedTensor",
+    "quantize_int4",
+    "dequantize_int4",
+    "packed_nbytes",
+]
+
+_LEVELS = 15  # 4-bit unsigned range [0, 15]
+
+
+class QuantizedTensor(NamedTuple):
+    """INT4-packed tensor.  ``packed`` has the quantized axis halved."""
+
+    packed: jax.Array  # uint8 (..., d // 2)
+    scale: jax.Array  # f32 (..., 1)
+    zero: jax.Array  # f32 (..., 1)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.packed.size + self.scale.size * 4 + self.zero.size * 4)
+
+
+def quantize_int4(x: jax.Array) -> QuantizedTensor:
+    """Asymmetric INT4 quantization over the last axis (must be even)."""
+    if x.shape[-1] % 2:
+        raise ValueError(f"last dim must be even for nibble packing, got {x.shape}")
+    xf = x.astype(jnp.float32)
+    lo = jnp.min(xf, axis=-1, keepdims=True)
+    hi = jnp.max(xf, axis=-1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / _LEVELS, 1e-8)
+    zero = lo
+    codes = jnp.clip(jnp.round((xf - zero) / scale), 0, _LEVELS).astype(jnp.uint8)
+    even = codes[..., 0::2]
+    odd = codes[..., 1::2]
+    packed = (even | (odd << 4)).astype(jnp.uint8)
+    return QuantizedTensor(packed=packed, scale=scale, zero=zero)
+
+
+def dequantize_int4(q: QuantizedTensor, dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """Unpack and dequantize back to ``(..., d)``."""
+    even = (q.packed & 0x0F).astype(jnp.float32)
+    odd = (q.packed >> 4).astype(jnp.float32)
+    d2 = q.packed.shape[-1]
+    codes = jnp.stack([even, odd], axis=-1).reshape(*q.packed.shape[:-1], 2 * d2)
+    return (codes * q.scale + q.zero).astype(dtype)
+
+
+def packed_nbytes(shape: tuple[int, ...]) -> int:
+    """Bytes used by an INT4 cache of logical shape ``shape`` (last dim = d)."""
+    *lead, d = shape
+    n = 1
+    for s in lead:
+        n *= s
+    return n * (d // 2) + n * 8  # nibbles + f32 scale/zero

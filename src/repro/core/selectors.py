@@ -1,0 +1,246 @@
+"""Token Selectors — the black-box *base algorithms* Twilight wraps (§4.1).
+
+A selector produces a **candidate mask** over cached tokens at KV-head
+granularity (GQA group-union semantics, Appendix B.2): query-aware selectors
+score per query head and the group's final candidate set is the union over
+its query heads.
+
+Budgets are *static* Python ints (conservative B0, e.g. seq/4) so all shapes
+stay static for TPU; dynamism lives in the *values* of the masks, which is
+exactly the paper's "dynamic budget as data, not shape" adaptation for SPMD
+hardware.
+
+Implemented base algorithms (paper §2 baselines):
+
+* :class:`FullSelector`        — keeps everything ("Full+Twilight" row).
+* :class:`QuestSelector`       — page-level min/max metadata upper bound [9].
+* :class:`DoubleSparsitySelector` — offline label channels, low-rank q·K [12].
+* :class:`StreamingSelector`   — attention sinks + recent window [17].
+* :class:`H2OSelector`         — accumulated-weight heavy hitters [8].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Protocol
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PageMeta",
+    "SelectionContext",
+    "TokenSelector",
+    "FullSelector",
+    "QuestSelector",
+    "DoubleSparsitySelector",
+    "StreamingSelector",
+    "H2OSelector",
+    "build_page_meta",
+    "calibrate_ds_channels",
+    "group_union",
+    "topk_mask",
+    "selector_from_name",
+]
+
+
+class PageMeta(NamedTuple):
+    """Per-page elementwise min/max of K (Quest metadata)."""
+
+    kmax: jax.Array  # (b, n_pages, hkv, d)
+    kmin: jax.Array  # (b, n_pages, hkv, d)
+    page_size: int
+
+
+class SelectionContext(NamedTuple):
+    """Everything a selector may consult.  Unused fields may be None."""
+
+    keys: jax.Array | None  # (b, n, hkv, d) full-precision K (DS/oracle use)
+    page_meta: PageMeta | None
+    accum_scores: jax.Array | None  # (b, hkv, n) running attention mass (H2O)
+    length: jax.Array | None  # (b,) valid lengths; None = all valid
+    ds_channels: jax.Array | None  # (hkv, r) label channel indices (DS)
+
+
+class TokenSelector(Protocol):
+    name: str
+
+    def select(self, q: jax.Array, ctx: SelectionContext, budget: int) -> jax.Array:
+        """q: (b, hq, d) -> bool candidate mask (b, hkv, n)."""
+        ...
+
+
+def _length_mask(n: int, length: jax.Array | None, like: jax.Array) -> jax.Array:
+    if length is None:
+        return jnp.ones((1, 1, n), bool)
+    pos = jnp.arange(n)
+    return (pos[None, :] < length[:, None])[:, None, :]
+
+
+def group_union(per_qhead_mask: jax.Array, n_kv_heads: int) -> jax.Array:
+    """(b, hq, n) -> (b, hkv, n): union over each GQA group (Appendix B.2)."""
+    b, hq, n = per_qhead_mask.shape
+    if hq % n_kv_heads:
+        raise ValueError(f"hq={hq} not divisible by hkv={n_kv_heads}")
+    g = hq // n_kv_heads
+    return per_qhead_mask.reshape(b, n_kv_heads, g, n).any(axis=2)
+
+
+def topk_mask(scores: jax.Array, k: int) -> jax.Array:
+    """Boolean mask of the k largest entries along the last axis (ties kept)."""
+    n = scores.shape[-1]
+    if k >= n:
+        return jnp.ones_like(scores, bool)
+    kth = jax.lax.top_k(scores, k)[0][..., -1:]
+    return scores >= kth
+
+
+def build_page_meta(keys: jax.Array, page_size: int) -> PageMeta:
+    """Compute Quest per-page min/max metadata from K (b, n, hkv, d)."""
+    b, n, hkv, d = keys.shape
+    if n % page_size:
+        raise ValueError(f"n={n} not divisible by page_size={page_size}")
+    paged = keys.reshape(b, n // page_size, page_size, hkv, d)
+    return PageMeta(kmax=paged.max(axis=2), kmin=paged.min(axis=2), page_size=page_size)
+
+
+def calibrate_ds_channels(keys: jax.Array, r: int) -> jax.Array:
+    """Double Sparsity offline calibration: per KV head, the r channels with
+    the largest mean |K| (outlier channels carry most of the q·K signal)."""
+    stat = jnp.mean(jnp.abs(keys), axis=(0, 1))  # (hkv, d)
+    return jax.lax.top_k(stat, r)[1]  # (hkv, r)
+
+
+@dataclasses.dataclass(frozen=True)
+class FullSelector:
+    """Trivial selector: every valid token is a candidate."""
+
+    name: str = "full"
+
+    def select(self, q: jax.Array, ctx: SelectionContext, budget: int) -> jax.Array:
+        del budget
+        b, hq, _ = q.shape
+        if ctx.keys is not None:
+            n, hkv = ctx.keys.shape[1], ctx.keys.shape[2]
+        elif ctx.page_meta is not None:
+            n = ctx.page_meta.kmax.shape[1] * ctx.page_meta.page_size
+            hkv = ctx.page_meta.kmax.shape[2]
+        else:
+            raise ValueError("FullSelector needs keys or page_meta for shapes")
+        return jnp.broadcast_to(_length_mask(n, ctx.length, q), (b, hkv, n))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuestSelector:
+    """Quest [9]: page-granular upper bound max(q*kmax, q*kmin) summed over d."""
+
+    name: str = "quest"
+
+    def select(self, q: jax.Array, ctx: SelectionContext, budget: int) -> jax.Array:
+        if ctx.page_meta is None:
+            raise ValueError("QuestSelector requires page metadata")
+        pm = ctx.page_meta
+        b, hq, d = q.shape
+        hkv = pm.kmax.shape[2]
+        group = hq // hkv
+        # Upper bound of q·k over each page (Quest): per-channel max of
+        # q*kmax and q*kmin, summed over channels.  Each query head scores
+        # only its own KV head's pages.
+        qg = q.reshape(b, hkv, group, 1, d)  # (b, hkv, g, 1, d)
+        kmax = jnp.moveaxis(pm.kmax, 1, 2)[:, :, None].astype(q.dtype)  # (b,hkv,1,p,d)
+        kmin = jnp.moveaxis(pm.kmin, 1, 2)[:, :, None].astype(q.dtype)
+        ub = jnp.sum(jnp.maximum(qg * kmax, qg * kmin), axis=-1)  # (b,hkv,g,p)
+        n_pages = ub.shape[-1]
+        pages_budget = max(1, budget // pm.page_size)
+        per_head_pages = topk_mask(ub, pages_budget)  # (b, hkv, group, n_pages)
+        page_mask = per_head_pages.any(axis=2)  # union over group
+        tok = jnp.repeat(page_mask, pm.page_size, axis=-1)
+        return tok & _length_mask(n_pages * pm.page_size, ctx.length, q)
+
+
+@dataclasses.dataclass(frozen=True)
+class DoubleSparsitySelector:
+    """Double Sparsity [12]: q·K restricted to offline-calibrated label channels."""
+
+    name: str = "double_sparsity"
+
+    def select(self, q: jax.Array, ctx: SelectionContext, budget: int) -> jax.Array:
+        if ctx.keys is None or ctx.ds_channels is None:
+            raise ValueError("DoubleSparsitySelector requires keys and ds_channels")
+        keys, ch = ctx.keys, ctx.ds_channels  # (b, n, hkv, d), (hkv, r)
+        b, n, hkv, d = keys.shape
+        hq = q.shape[1]
+        group = hq // hkv
+        # Gather label channels.
+        k_lab = jnp.take_along_axis(keys, ch[None, None, :, :], axis=-1)  # (b,n,hkv,r)
+        qg = q.reshape(b, hkv, group, d)
+        q_lab = jnp.take_along_axis(qg, ch[None, :, None, :], axis=-1)  # (b,hkv,g,r)
+        scores = jnp.einsum("bhgr,bnhr->bhgn", q_lab, k_lab.astype(q.dtype))
+        scores = jnp.where(_length_mask(n, ctx.length, q)[:, :, None], scores,
+                           jnp.finfo(scores.dtype).min)
+        per_head = topk_mask(scores, budget)  # (b, hkv, g, n)
+        return per_head.any(axis=2) & _length_mask(n, ctx.length, q)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingSelector:
+    """StreamingLLM [17]: attention sinks + recent window (query-agnostic)."""
+
+    n_sink: int = 4
+    name: str = "streaming"
+
+    def select(self, q: jax.Array, ctx: SelectionContext, budget: int) -> jax.Array:
+        if ctx.keys is not None:
+            b, n, hkv, _ = ctx.keys.shape
+        else:
+            pm = ctx.page_meta
+            b = q.shape[0]
+            n = pm.kmax.shape[1] * pm.page_size
+            hkv = pm.kmax.shape[2]
+        pos = jnp.arange(n)
+        length = ctx.length if ctx.length is not None else jnp.full((b,), n)
+        recent = budget - self.n_sink
+        mask = (pos[None, :] < self.n_sink) | (pos[None, :] >= (length[:, None] - recent))
+        mask &= pos[None, :] < length[:, None]
+        return jnp.broadcast_to(mask[:, None, :], (b, hkv, n))
+
+
+@dataclasses.dataclass(frozen=True)
+class H2OSelector:
+    """H2O [8]: heavy hitters by accumulated attention mass + recent window."""
+
+    recent_frac: float = 0.5
+    name: str = "h2o"
+
+    def select(self, q: jax.Array, ctx: SelectionContext, budget: int) -> jax.Array:
+        if ctx.accum_scores is None:
+            raise ValueError("H2OSelector requires accum_scores")
+        b, hkv, n = ctx.accum_scores.shape
+        n_recent = int(budget * self.recent_frac)
+        n_heavy = budget - n_recent
+        pos = jnp.arange(n)
+        length = ctx.length if ctx.length is not None else jnp.full((b,), n)
+        recent = (pos[None, :] >= (length[:, None] - n_recent)) & (
+            pos[None, :] < length[:, None]
+        )
+        valid = _length_mask(n, ctx.length, q)
+        scores = jnp.where(valid, ctx.accum_scores, jnp.finfo(jnp.float32).min)
+        heavy = topk_mask(scores, n_heavy)
+        return (heavy | recent[:, None, :]) & valid
+
+
+_REGISTRY = {
+    "full": FullSelector,
+    "quest": QuestSelector,
+    "double_sparsity": DoubleSparsitySelector,
+    "ds": DoubleSparsitySelector,
+    "streaming": StreamingSelector,
+    "h2o": H2OSelector,
+}
+
+
+def selector_from_name(name: str, **kwargs) -> TokenSelector:
+    try:
+        return _REGISTRY[name](**kwargs)
+    except KeyError:
+        raise ValueError(f"unknown selector {name!r}; have {sorted(_REGISTRY)}") from None

@@ -1,0 +1,148 @@
+"""Twilight: the hierarchical Select-then-Prune pipeline (§4.1, Figure 5).
+
+    q, KV cache ──► Token Selector (base algo, conservative B0)
+                  ──► Twilight Pruner (INT4 estimate + top-p)
+                  ──► Sparse Attention Kernel (pruned set only)
+
+The pipeline is a pure function over arrays so it jits/shards/scans freely;
+stateful concerns (paged cache, INT4 shadow cache maintenance, H2O stats)
+live in ``repro.serving``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as quant_lib
+from repro.core.attention import full_decode_attention, masked_sparse_decode_attention
+from repro.core.pruner import PrunerStats, TwilightPruner
+from repro.core.selectors import (
+    SelectionContext,
+    TokenSelector,
+    selector_from_name,
+)
+
+__all__ = ["TwilightConfig", "TwilightOutput", "twilight_decode_attention"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TwilightConfig:
+    """Configuration of the full pipeline.
+
+    ``candidate_frac`` is the conservative Token Selector sparsity (paper
+    suggests 1/4); ``candidate_budget_cap`` bounds B0 absolutely so 500k+
+    contexts stay tractable (pages-worth of tokens, see DESIGN §5).
+    """
+
+    enabled: bool = True
+    selector: str = "quest"
+    p: float = 0.95
+    candidate_frac: float = 0.25
+    candidate_budget_cap: int = 65536
+    page_size: int = 64
+    estimate_bits: int = 4
+    topp_iters: int = 24
+    min_candidate: int = 64
+    # prune_enabled=False degrades the pipeline to the *base algorithm
+    # alone* (pure top-k: Quest/DS/... without the Twilight Pruner) — the
+    # paper's baselines.  fixed_budget overrides candidate_frac with an
+    # absolute token budget (the paper's budget-sweep rows).
+    prune_enabled: bool = True
+    fixed_budget: int = 0
+    # Beyond-paper (suggested in §4.3 as future work): compute the *final*
+    # attention against the INT4 shadow K instead of the fp16 K cache —
+    # halves the final K read and, combined with offloading, removes the
+    # need to keep fp16 K resident at all.  V stays full precision.
+    reuse_int4_for_attention: bool = False
+
+    def candidate_budget(self, n: int) -> int:
+        if self.fixed_budget:
+            return min(self.fixed_budget, n)
+        b0 = int(n * self.candidate_frac)
+        b0 = max(self.min_candidate, min(b0, self.candidate_budget_cap))
+        return min(b0, n)
+
+    def make_selector(self, **kwargs) -> TokenSelector:
+        return selector_from_name(self.selector, **kwargs)
+
+    def make_pruner(self) -> TwilightPruner:
+        return TwilightPruner(p=self.p, iters=self.topp_iters,
+                              estimate_bits=self.estimate_bits)
+
+
+class TwilightOutput(NamedTuple):
+    out: jax.Array  # (b, hq, d)
+    candidate_mask: jax.Array  # (b, hkv, n)
+    pruned_mask: jax.Array  # (b, hkv, n)
+    stats: PrunerStats
+
+
+def twilight_decode_attention(
+    q: jax.Array,  # (b, hq, d)
+    keys: jax.Array,  # (b, n, hkv, d)
+    values: jax.Array,  # (b, n, hkv, d)
+    cfg: TwilightConfig,
+    *,
+    ctx: SelectionContext | None = None,
+    qkeys: quant_lib.QuantizedTensor | None = None,
+    length: jax.Array | None = None,
+) -> TwilightOutput:
+    """One decode-step of Twilight-optimized sparse attention.
+
+    When ``cfg.enabled`` is False this degrades to exact full attention with
+    trivial masks/stats — the "Full" baseline rows of Tables 2–4.
+    """
+    b, n, hkv, d = keys.shape
+    hq = q.shape[1]
+
+    if not cfg.enabled:
+        out = full_decode_attention(q, keys, values, length=length)
+        ones = jnp.ones((b, hkv, n), bool)
+        stats = PrunerStats(
+            candidate_budget=jnp.full((b, hkv), n, jnp.int32),
+            pruned_budget=jnp.full((b, hkv), n, jnp.int32),
+            threshold=jnp.zeros((b, hq), jnp.float32),
+            weights=jnp.zeros((b, hq, n), jnp.float32),
+        )
+        return TwilightOutput(out=out, candidate_mask=ones, pruned_mask=ones,
+                              stats=stats)
+
+    if ctx is None:
+        # Ergonomic fallback: derive selector metadata from the keys.  The
+        # serving engine maintains these incrementally instead.
+        from repro.core.selectors import build_page_meta, calibrate_ds_channels
+        pm = (build_page_meta(keys, cfg.page_size)
+              if n % cfg.page_size == 0 else None)
+        ds = (calibrate_ds_channels(keys, 16)
+              if cfg.selector in ("ds", "double_sparsity") else None)
+        ctx = SelectionContext(keys=keys, page_meta=pm, accum_scores=None,
+                               length=length, ds_channels=ds)
+
+    selector = cfg.make_selector()
+    b0 = cfg.candidate_budget(n)
+    candidate_mask = selector.select(q, ctx, b0)  # (b, hkv, n)
+
+    if not cfg.prune_enabled:
+        # Base algorithm alone (pure top-k baseline rows of Tables 2-4).
+        pruned_mask = candidate_mask
+        stats = PrunerStats(
+            candidate_budget=candidate_mask.sum(-1).astype(jnp.int32),
+            pruned_budget=candidate_mask.sum(-1).astype(jnp.int32),
+            threshold=jnp.zeros((b, hq), jnp.float32),
+            weights=jnp.zeros((b, hq, n), jnp.float32),
+        )
+    else:
+        pruner = cfg.make_pruner()
+        pruned_mask, stats = pruner.prune(q, candidate_mask, keys=keys,
+                                          qkeys=qkeys)
+
+    attn_keys = keys
+    if cfg.reuse_int4_for_attention and qkeys is not None:
+        attn_keys = quant_lib.dequantize_int4(qkeys, dtype=keys.dtype)
+    out = masked_sparse_decode_attention(q, attn_keys, values, pruned_mask)
+    return TwilightOutput(out=out, candidate_mask=candidate_mask,
+                          pruned_mask=pruned_mask, stats=stats)

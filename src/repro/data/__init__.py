@@ -1,0 +1,15 @@
+from repro.data.pipeline import (
+    DataConfig,
+    batch_for_arch,
+    needle_batch,
+    synthetic_lm_batches,
+    zipf_markov_tokens,
+)
+
+__all__ = [
+    "DataConfig",
+    "batch_for_arch",
+    "needle_batch",
+    "synthetic_lm_batches",
+    "zipf_markov_tokens",
+]

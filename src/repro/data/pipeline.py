@@ -1,0 +1,134 @@
+"""Synthetic data pipeline.
+
+Two corpora, both deterministic given a seed and generated on the host in
+numpy (no jax allocations until sharding):
+
+* **Zipf-Markov LM** — tokens follow a Zipfian unigram prior mixed with a
+  first-order Markov "phrase" structure, giving a learnable next-token
+  signal (a ~100M model drops loss quickly) while keeping entropy realistic.
+  Used for the perplexity-style benchmarks (PG-19 stand-in).
+
+* **Needle retrieval** — long filler contexts with embedded (key, value)
+  pairs and a final query; exact-match accuracy of the generated value is
+  the long-context retrieval metric (RULER/Longbench stand-in).  Sparse
+  attention quality is directly visible on this task: focused attention on
+  the needle is what top-p keeps and top-k over/under-selects around.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    n_states: int = 256  # Markov phrase states
+
+
+def _zipf_probs(vocab: int, a: float) -> np.ndarray:
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = ranks ** (-a)
+    return p / p.sum()
+
+
+_SUCC_PROBS = np.array([0.5, 0.25, 0.15, 0.10])
+
+
+def _successor_table(vocab: int) -> np.ndarray:
+    """Fixed per-vocab first-order Markov successor table (v, 4).
+
+    Depends ONLY on the vocab so every DataConfig seed shares one
+    "language" — train and eval streams must be mutually predictable
+    (sampling randomness comes from the caller's rng)."""
+    r = np.random.default_rng(0x5EED + vocab)
+    return r.integers(0, vocab, size=(vocab, len(_SUCC_PROBS)))
+
+
+def zipf_markov_tokens(cfg: DataConfig, rng: np.random.Generator,
+                       batch: int) -> np.ndarray:
+    """(batch, seq_len+1) int32 order-1 Markov token stream.
+
+    Each token has 4 fixed likely successors (probs .5/.25/.15/.1) plus 10%
+    Zipf-distributed noise: per-token entropy ~2.2 nats, so a competent LM
+    reaches ppl ~10 while unigram-only models stay near ~vocab.  The
+    successor table is a deterministic function of the vocab alone, so all
+    seeds (train and eval streams) share the same language.
+    """
+    v, s = cfg.vocab_size, cfg.seq_len + 1
+    succ = _successor_table(v)
+    zipf = _zipf_probs(v, cfg.zipf_a)
+    toks = np.empty((batch, s), np.int64)
+    toks[:, 0] = rng.choice(v, size=batch, p=zipf)
+    choice = rng.choice(len(_SUCC_PROBS), size=(batch, s), p=_SUCC_PROBS)
+    noise_mask = rng.random((batch, s)) < 0.10
+    noise = rng.choice(v, size=(batch, s), p=zipf)
+    for t in range(1, s):
+        nxt = succ[toks[:, t - 1], choice[:, t]]
+        toks[:, t] = np.where(noise_mask[:, t], noise[:, t], nxt)
+    return toks.astype(np.int32)
+
+
+def synthetic_lm_batches(cfg: DataConfig, steps: int
+                         ) -> Iterator[dict[str, np.ndarray]]:
+    """Yield {"tokens", "labels"} host batches; labels are next tokens."""
+    rng = np.random.default_rng(cfg.seed)
+    for _ in range(steps):
+        toks = zipf_markov_tokens(cfg, rng, cfg.global_batch)
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def needle_batch(cfg: DataConfig, rng: np.random.Generator, batch: int,
+                 *, n_needles: int = 1) -> dict[str, np.ndarray]:
+    """Retrieval task: ... KEY k ... VALUE v ... QUERY k -> expect v.
+
+    Token roles: [0, 8) control tokens; filler draws from the lower half of
+    the vocab and keys/values from the upper half — disjoint ranges, so the
+    query key's only other occurrence is at its needle (a clean induction
+    signal; with shared ranges chance filler collisions poison the copy
+    circuit and the task never trains at this scale).
+    Returns tokens (batch, seq_len) and the expected value ids (batch,).
+    """
+    v, s = cfg.vocab_size, cfg.seq_len
+    KEY_MARK, QUERY_MARK = 1, 2
+    mid = 8 + (v - 8) // 2
+    filler = rng.integers(8, mid, size=(batch, s))
+    keys = np.stack([rng.choice(np.arange(mid, v), size=n_needles,
+                                replace=False) for _ in range(batch)])
+    vals = rng.integers(mid, v, size=(batch, n_needles))
+    tokens = filler.copy()
+    # Place needles uniformly in [s//8, 6*s//8); query goes at the end.
+    for i in range(batch):
+        pos = rng.choice(np.arange(s // 8, 6 * s // 8, 3), size=n_needles,
+                         replace=False)
+        for j, p in enumerate(pos):
+            tokens[i, p] = KEY_MARK
+            tokens[i, p + 1] = keys[i, j]
+            tokens[i, p + 2] = vals[i, j]
+    tokens[:, -2] = QUERY_MARK
+    tokens[:, -1] = keys[:, 0]
+    return {"tokens": tokens.astype(np.int32),
+            "answers": vals[:, 0].astype(np.int32)}
+
+
+def batch_for_arch(cfg_model, data_cfg: DataConfig, rng: np.random.Generator
+                   ) -> dict[str, np.ndarray]:
+    """A host train batch including modality-frontend stub embeddings."""
+    toks = zipf_markov_tokens(data_cfg, rng, data_cfg.global_batch)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg_model.frontend == "audio":
+        batch["frames"] = rng.normal(size=(
+            data_cfg.global_batch, data_cfg.seq_len, cfg_model.d_model)
+        ).astype(np.float32)
+    elif cfg_model.frontend == "vision":
+        batch["patches"] = rng.normal(size=(
+            data_cfg.global_batch, cfg_model.n_prefix_tokens, cfg_model.d_model)
+        ).astype(np.float32)
+    return batch

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the Twilight hot path (§4.2).
+
+Four kernels, each a subpackage with ``kernel.py`` (pl.pallas_call +
+BlockSpec), ``ops.py`` (jit'd public wrapper) and ``ref.py`` (pure-jnp
+oracle used by the tests):
+
+* ``quant``       — INT4 asymmetric quantization + nibble packing of K.
+* ``spgemv``      — q · K̃ᵀ score estimation over the packed INT4 cache,
+                    dequantization folded into the matmul epilogue.
+* ``topp``        — Algorithm 1 binary-search threshold over weight rows.
+* ``sparse_attn`` — single-query flash-decode attention with top-p mask and
+                    page-granular early-out.
+
+All kernels run under ``interpret=True`` on CPU (how this container
+validates them) and compile for TPU with MXU/VPU-aligned tiles.
+"""

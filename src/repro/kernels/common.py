@@ -1,0 +1,36 @@
+"""Shared helpers for the Pallas kernels."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["default_interpret", "NEG_INF", "pick_block"]
+
+# Large-negative finite stand-in for -inf inside kernels (avoids NaNs from
+# exp(-inf - -inf) in the online-softmax recurrences).
+NEG_INF = -1e30
+
+
+def default_interpret() -> bool:
+    """Kernels execute in interpret mode everywhere except a real TPU.
+
+    ``REPRO_FORCE_INTERPRET=1`` forces interpretation (useful for debugging
+    on TPU); this container is CPU-only so interpret=True is the validated
+    path, with TPU lowering exercised structurally by the dry-run.
+    """
+    if os.environ.get("REPRO_FORCE_INTERPRET"):
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def pick_block(n: int, preferred: int, align: int = 128) -> int:
+    """Largest divisor block of ``n`` that is <= preferred, favoring
+    MXU/VPU-aligned multiples of ``align`` when possible."""
+    if n <= preferred:
+        return n
+    for cand in range(preferred, 0, -1):
+        if n % cand == 0 and (cand % align == 0 or cand < align):
+            return cand
+    return 1

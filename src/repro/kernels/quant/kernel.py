@@ -1,0 +1,67 @@
+"""Pallas kernel: per-row asymmetric INT4 quantization + nibble packing.
+
+Rows are (token, head) pairs; the quantized axis is the head dim ``d``.
+Packing matches ``repro.core.quant``: even channel -> low nibble, odd
+channel -> high nibble of byte ``d//2`` (Appendix B.1 interleaved layout).
+
+TPU notes: the row block lives in VMEM; min/max/round/clip are VPU ops and
+the nibble merge is an integer shift+or.  ``block_rows`` should be a
+multiple of 8 (f32 sublane) and ``d`` a multiple of 256 packs to a
+128-lane-aligned uint8 tile; d=128 (the common head dim) packs to 64 lanes,
+which Mosaic handles via lane folding.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LEVELS = 15.0
+
+
+def _quant_kernel(x_ref, packed_ref, scale_ref, zero_ref):
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, d)
+    lo = jnp.min(x, axis=-1, keepdims=True)
+    hi = jnp.max(x, axis=-1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / _LEVELS, 1e-8)
+    codes = jnp.clip(jnp.round((x - lo) / scale), 0.0, _LEVELS).astype(jnp.uint8)
+    r, d = codes.shape
+    pairs = codes.reshape(r, d // 2, 2)
+    packed_ref[...] = pairs[..., 0] | (pairs[..., 1] << 4)
+    scale_ref[...] = scale
+    zero_ref[...] = lo
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize_int4_rows(
+    x: jax.Array,  # (rows, d), d even
+    *,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    rows, d = x.shape
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        # Fall back to a divisor block; rows is caller-padded in the engine.
+        while rows % block_rows:
+            block_rows -= 1
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, d // 2), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, d // 2), jnp.uint8),
+            jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+            jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

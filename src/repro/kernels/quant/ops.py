@@ -1,0 +1,34 @@
+"""Public jit'd wrapper for the INT4 quantization kernel.
+
+Accepts the cache layout (b, n, hkv, d) and returns a
+``repro.core.quant.QuantizedTensor`` with the same leading shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor
+from repro.kernels.common import default_interpret
+from repro.kernels.quant.kernel import quantize_int4_rows
+
+
+def quantize_cache(
+    keys: jax.Array,  # (b, n, hkv, d)
+    *,
+    block_rows: int = 256,
+    interpret: bool | None = None,
+) -> QuantizedTensor:
+    if interpret is None:
+        interpret = default_interpret()
+    b, n, hkv, d = keys.shape
+    rows = keys.reshape(b * n * hkv, d)
+    packed, scale, zero = quantize_int4_rows(
+        rows, block_rows=block_rows, interpret=interpret
+    )
+    return QuantizedTensor(
+        packed=packed.reshape(b, n, hkv, d // 2),
+        scale=scale.reshape(b, n, hkv, 1),
+        zero=zero.reshape(b, n, hkv, 1),
+    )

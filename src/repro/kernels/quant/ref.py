@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the INT4 quantization kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import quantize_int4
+
+
+def quantize_int4_rows_ref(x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    qt = quantize_int4(x)
+    return qt.packed, qt.scale.astype(jnp.float32), qt.zero.astype(jnp.float32)

@@ -1,0 +1,109 @@
+"""Pallas kernel: single-query sparse decode attention with page early-out.
+
+TPU adaptation of the paper's head-wise varlen sparse attention kernel
+(§4.2, Appendix B.2).  The GPU version gathers a per-head variable-length
+token list (FlashInfer varlen scheduling); on TPU shapes must be static, so
+the kernel consumes the *mask* produced by the top-p pruner and processes
+the KV cache in fixed pages:
+
+* online-softmax (flash-decoding) accumulation across page-grid steps,
+* tokens outside the top-p set are masked to -inf,
+* **page skip**: if an entire page is masked out (the common case — the
+  pruner keeps ~2 % of tokens), the whole matmul+softmax update for that
+  page is skipped behind a ``lax.cond``.  On TPU the page's K/V tiles are
+  still streamed by the grid pipeline, but the MXU work is elided; the
+  gather-based engine path (`ops.gathered_attention`) additionally avoids
+  the traffic by compacting candidate pages first.
+
+One query *group* (the GQA unit — budgets are group-wise, Appendix B.2)
+per grid row; pages iterate on the minor grid axis with VMEM accumulators.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import NEG_INF
+
+
+def _sparse_attn_kernel(q_ref, k_ref, v_ref, mask_ref, out_ref,
+                        m_scr, l_scr, acc_scr, *, sm_scale: float):
+    j = pl.program_id(1)
+    nblocks = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    mask = mask_ref[0] != 0  # (block_n,)
+
+    def _update():
+        q = q_ref[0].astype(jnp.float32)  # (group, d)
+        k = k_ref[0].astype(jnp.float32)  # (block_n, d)
+        v = v_ref[0].astype(jnp.float32)  # (block_n, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        s = jnp.where(mask[None, :], s, NEG_INF)  # (group, block_n)
+        m_prev = m_scr[...]  # (group, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p_ij = jnp.exp(s - m_new)
+        p_ij = jnp.where(mask[None, :], p_ij, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p_ij, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p_ij, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    # Page-granular early-out: skip fully-pruned pages entirely.
+    jax.lax.cond(jnp.any(mask), _update, lambda: None)
+
+    @pl.when(j == nblocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)
+        out_ref[0] = jnp.where(l > 0.0, out, 0.0).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "block_n", "interpret"))
+def sparse_decode_attention(
+    q: jax.Array,  # (B, group, d) — B = batch * kv_heads
+    keys: jax.Array,  # (B, n, d)
+    values: jax.Array,  # (B, n, d)
+    mask: jax.Array,  # (B, n) int8/bool — top-p kept set
+    *,
+    sm_scale: float,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, group, d = q.shape
+    n = keys.shape[1]
+    block_n = min(block_n, n)
+    while n % block_n:
+        block_n -= 1
+    grid = (B, n // block_n)
+    mask = mask.astype(jnp.int8)
+    return pl.pallas_call(
+        functools.partial(_sparse_attn_kernel, sm_scale=sm_scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, group, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_n, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_n, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, group, d), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),  # m — running max
+            pltpu.VMEM((group, 1), jnp.float32),  # l — running denominator
+            pltpu.VMEM((group, d), jnp.float32),  # acc — unnormalized output
+        ],
+        interpret=interpret,
+    )(q, keys, values, mask)

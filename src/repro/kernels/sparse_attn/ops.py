@@ -1,0 +1,90 @@
+"""Public wrappers for sparse decode attention.
+
+* :func:`masked_attention` — mask-driven kernel over the full cache layout.
+* :func:`gathered_attention` — engine fast path: candidate pages are first
+  compacted (gather) into a (B, B0) buffer so HBM traffic scales with the
+  *candidate* budget, then the kernel applies the top-p mask inside.  This
+  mirrors the paper's hierarchy: selector bounds traffic, pruner bounds
+  compute.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.sparse_attn.kernel import sparse_decode_attention
+
+
+def _to_bhkv(x: jax.Array) -> jax.Array:
+    """(b, n, hkv, d) -> (b*hkv, n, d)."""
+    b, n, hkv, d = x.shape
+    return jnp.moveaxis(x, 2, 1).reshape(b * hkv, n, d)
+
+
+def masked_attention(
+    q: jax.Array,  # (b, hq, d)
+    keys: jax.Array,  # (b, n, hkv, d)
+    values: jax.Array,  # (b, n, hkv, d)
+    mask: jax.Array,  # (b, hkv, n) bool — pruned set
+    *,
+    sm_scale: float | None = None,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    b, hq, d = q.shape
+    hkv = keys.shape[2]
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, group, d).reshape(b * hkv, group, d)
+    out = sparse_decode_attention(
+        qg,
+        _to_bhkv(keys),
+        _to_bhkv(values),
+        mask.reshape(b * hkv, -1),
+        sm_scale=float(sm_scale),
+        block_n=block_n,
+        interpret=interpret,
+    )
+    return out.reshape(b, hq, d)
+
+
+def gathered_attention(
+    q: jax.Array,  # (b, hq, d)
+    keys: jax.Array,  # (b, n, hkv, d)
+    values: jax.Array,  # (b, n, hkv, d)
+    indices: jax.Array,  # (b, hkv, m) i32 candidate positions (selector output)
+    valid: jax.Array,  # (b, hkv, m) bool — live slots AND top-p kept
+    *,
+    sm_scale: float | None = None,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Compact candidates first, then run the kernel on the small buffer."""
+    if interpret is None:
+        interpret = default_interpret()
+    b, hq, d = q.shape
+    hkv = keys.shape[2]
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    kh = jnp.moveaxis(keys, 2, 1)  # (b, hkv, n, d)
+    vh = jnp.moveaxis(values, 2, 1)
+    kg = jnp.take_along_axis(kh, indices[..., None], axis=2)  # (b, hkv, m, d)
+    vg = jnp.take_along_axis(vh, indices[..., None], axis=2)
+    m = indices.shape[-1]
+    qg = q.reshape(b, hkv, group, d).reshape(b * hkv, group, d)
+    out = sparse_decode_attention(
+        qg,
+        kg.reshape(b * hkv, m, d),
+        vg.reshape(b * hkv, m, d),
+        valid.reshape(b * hkv, m),
+        sm_scale=float(sm_scale),
+        block_n=block_n,
+        interpret=interpret,
+    )
+    return out.reshape(b, hq, d)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the sparse decode attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topp import masked_softmax
+
+
+def sparse_decode_attention_ref(
+    q: jax.Array,  # (B, group, d)
+    keys: jax.Array,  # (B, n, d)
+    values: jax.Array,  # (B, n, d)
+    mask: jax.Array,  # (B, n) bool
+    *,
+    sm_scale: float,
+) -> jax.Array:
+    s = jnp.einsum(
+        "bgd,bnd->bgn", q.astype(jnp.float32), keys.astype(jnp.float32)
+    ) * sm_scale
+    w = masked_softmax(s, mask[:, None, :].astype(bool))
+    out = jnp.einsum("bgn,bnd->bgd", w, values.astype(jnp.float32))
+    return out.astype(q.dtype)

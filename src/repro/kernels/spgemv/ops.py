@@ -1,0 +1,46 @@
+"""Public wrapper: estimated attention scores from the INT4 shadow cache.
+
+Adapts the model/cache layout — q (b, hq, d), QuantizedTensor over
+(b, n, hkv, d) — to the kernel's (B=b*hkv, group, ...) layout, including the
+query de-interleave that matches the nibble packing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor
+from repro.kernels.common import default_interpret
+from repro.kernels.spgemv.kernel import spgemv_scores
+
+
+def estimate_scores(
+    q: jax.Array,  # (b, hq, d)
+    qkeys: QuantizedTensor,  # packed (b, n, hkv, d//2)
+    *,
+    sm_scale: float | None = None,
+    block_n: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Returns (b, hq, n) f32 estimated scores (pre-softmax)."""
+    if interpret is None:
+        interpret = default_interpret()
+    b, hq, d = q.shape
+    _, n, hkv, d2 = qkeys.packed.shape
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, hkv, group, d).reshape(b * hkv, group, d)
+    q_even = qg[..., 0::2]
+    q_odd = qg[..., 1::2]
+    packed = jnp.moveaxis(qkeys.packed, 2, 1).reshape(b * hkv, n, d2)
+    scale = jnp.moveaxis(qkeys.scale[..., 0], 2, 1).reshape(b * hkv, n)
+    zero = jnp.moveaxis(qkeys.zero[..., 0], 2, 1).reshape(b * hkv, n)
+
+    scores = spgemv_scores(
+        q_even, q_odd, packed, scale, zero,
+        sm_scale=float(sm_scale), block_n=block_n, interpret=interpret,
+    )  # (b*hkv, group, n)
+    return scores.reshape(b, hkv, group, n).reshape(b, hq, n)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the INT4 SpGEMV kernel: dequantize then einsum."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor, dequantize_int4
+
+
+def spgemv_scores_ref(
+    q: jax.Array,  # (B, group, d)
+    packed: jax.Array,  # (B, n, d//2) uint8
+    scale: jax.Array,  # (B, n)
+    zero: jax.Array,  # (B, n)
+    *,
+    sm_scale: float,
+) -> jax.Array:
+    qt = QuantizedTensor(packed=packed, scale=scale[..., None], zero=zero[..., None])
+    k = dequantize_int4(qt)  # (B, n, d)
+    return jnp.einsum("bgd,bnd->bgn", q.astype(jnp.float32), k) * sm_scale

@@ -1,0 +1,30 @@
+"""Public wrapper: top-p mask over (b, heads, n) normalized weights."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topp import ToppResult
+from repro.kernels.common import default_interpret
+from repro.kernels.topp.kernel import topp_threshold_rows
+
+
+def topp_mask(
+    weights: jax.Array,  # (b, h, n) normalized attention weights
+    p: jax.Array | float,
+    *,
+    iters: int = 24,
+    interpret: bool | None = None,
+) -> ToppResult:
+    if interpret is None:
+        interpret = default_interpret()
+    b, h, n = weights.shape
+    rows = weights.reshape(b * h, n).astype(jnp.float32)
+    thresh, budget = topp_threshold_rows(
+        rows, jnp.asarray(p, jnp.float32), iters=iters, interpret=interpret
+    )
+    thresh = thresh.reshape(b, h)
+    mask = weights >= thresh[..., None]
+    return ToppResult(mask=mask, threshold=thresh,
+                      budget=budget.reshape(b, h))

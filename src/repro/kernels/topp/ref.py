@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the top-p kernel: the core binary search plus the
+sort-based Definition 3.3 oracle for semantic checks."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topp import oracle_topp_mask, topp_threshold
+
+
+def topp_threshold_rows_ref(
+    weights: jax.Array, p: jax.Array, *, iters: int = 24
+) -> tuple[jax.Array, jax.Array]:
+    thresh = topp_threshold(weights, p, iters=iters)[:, None]
+    budget = jnp.sum(weights >= thresh, axis=-1, keepdims=True).astype(jnp.int32)
+    return thresh, budget
+
+
+def topp_budget_oracle(weights: jax.Array, p: float) -> jax.Array:
+    return oracle_topp_mask(weights, p).budget[:, None].astype(jnp.int32)

@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+The two lines above MUST stay first (before any jax import) — jax locks the
+device count at first init, and only the dry-run wants 512 placeholder
+devices.
+
+For each cell this prints/records:
+  * memory_analysis()  — per-device bytes (proves the config fits),
+  * cost_analysis()    — FLOPs / bytes accessed (roofline numerator),
+  * collective bytes   — parsed from the optimized HLO per collective kind.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import get_config, list_archs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import (  # noqa: E402
+    INPUT_SHAPES,
+    build_step_plan,
+    eligible,
+)
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\S+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type, incl. tuple types."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return int(total)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-operand bytes of every collective op in the optimized HLO."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2).lower()
+        out[kind] = out.get(kind, 0) + _type_bytes(type_str)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             *, verbose: bool = True, overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = eligible(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        plan = build_step_plan(cfg, shape, mesh, overrides=overrides)
+        jitted = jax.jit(plan.fn,
+                         in_shardings=plan.in_shardings,
+                         out_shardings=plan.out_shardings,
+                         donate_argnums=plan.donate_argnums)
+        lowered = jitted.lower(*plan.arg_structs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh.devices.size,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", -1.0)) if cost else -1.0,
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)) if cost else -1.0,
+        "collective_bytes": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+    }
+    if verbose:
+        gb = 1 << 30
+        peak = result["memory"]["temp_bytes"]
+        print(f"[dryrun] {arch:24s} {shape_name:12s} mesh={result['mesh']:8s} "
+              f"compile={t_compile:6.1f}s flops={result['flops']:.3e} "
+              f"temp={0 if peak is None else peak / gb:.2f}GiB "
+              f"coll={ {k: round(v / gb, 3) for k, v in coll.items()} }")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true", help="all archs × shapes")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None, help="write JSONL results here")
+    ap.add_argument("--override", action="append", default=[],
+                    help="hillclimb knob, e.g. seq_parallel=false, "
+                         "grad_accum=4, param_layout=model_only, "
+                         "twilight.p=0.9")
+    args = ap.parse_args()
+
+    overrides: dict = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        if v.lower() in ("true", "false"):
+            v = v.lower() == "true"
+        elif v.isdigit():
+            v = int(v)
+        else:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        if k.startswith("twilight."):
+            overrides.setdefault("twilight", {})[k.split(".", 1)[1]] = v
+        else:
+            overrides[k] = v
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                try:
+                    results.append(run_cell(arch, shape_name, multi_pod,
+                                            overrides=overrides or None))
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    failures += 1
+                    print(f"[dryrun] FAIL {arch} {shape_name} "
+                          f"multi_pod={multi_pod}: {e}")
+                    traceback.print_exc()
+                    results.append({"arch": arch, "shape": shape_name,
+                                    "mesh": "2x16x16" if multi_pod else "16x16",
+                                    "error": str(e)})
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out + ".jsonl", "w") as f:
+            for r in results:
+                f.write(json.dumps(r) + "\n")
+        print(f"[dryrun] wrote {len(results)} results to {args.out}.jsonl")
+    print(f"[dryrun] done: {len(results) - failures}/{len(results)} cells OK")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh definitions (TPU v5e-like pods).
+
+Functions, not module-level constants — importing this module never touches
+jax device state, so tests/benches keep their single CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# Hardware constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over however many devices the current backend exposes."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,283 @@
+"""Input shapes, ShapeDtypeStruct stand-ins, and jit-able step builders.
+
+The four assigned input shapes map to three step kinds:
+
+  train_4k    -> train_step(params, opt_state, batch)
+  prefill_32k -> prefill(params, batch) -> (logits, decode_state)
+  decode_32k  -> decode_step(params, state, token)   (KV cache = 32k)
+  long_500k   -> decode_step(params, state, token)   (KV cache = 512k)
+
+Everything here is ShapeDtypeStruct-only (weak-type-correct, shardable, no
+allocation); the dry-run lowers and compiles against these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import (
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    prefill,
+)
+from repro.models.common import ModelConfig
+from repro.optim import adamw_init
+from repro.sharding import (
+    MeshAxes,
+    batch_specs,
+    decode_state_specs,
+    param_specs,
+)
+from repro.sharding.act import activation_rules
+from repro.training import TrainConfig, make_train_step
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+# Fixed encoder memory length for the enc-dec arch in decode shapes (the
+# decoder self-KV carries the full seq_len; see DESIGN.md).
+ENC_MEMORY_LEN = 4096
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_struct(cfg: ModelConfig, shape: InputShape, *, with_labels: bool
+                 ) -> dict[str, jax.ShapeDtypeStruct]:
+    """Host-batch ShapeDtypeStructs for train/prefill."""
+    b, s = shape.global_batch, shape.seq_len
+    text = s - cfg.n_prefix_tokens if cfg.frontend == "vision" else s
+    out = {"tokens": _struct((b, text), jnp.int32)}
+    if with_labels:
+        out["labels"] = _struct((b, text), jnp.int32)
+    if cfg.frontend == "audio":
+        out["frames"] = _struct((b, s, cfg.d_model), jnp.float32)
+    elif cfg.frontend == "vision":
+        out["patches"] = _struct((b, cfg.n_prefix_tokens, cfg.d_model),
+                                 jnp.float32)
+    return out
+
+
+def params_struct(cfg: ModelConfig) -> Tree:
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def decode_state_struct(cfg: ModelConfig, shape: InputShape) -> Tree:
+    n_enc = ENC_MEMORY_LEN if cfg.encoder_layers else 0
+    return jax.eval_shape(functools.partial(
+        init_decode_state, cfg, shape.global_batch, shape.seq_len,
+        n_enc=n_enc))
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """Everything the dry-run needs to lower one (arch, shape, mesh) cell."""
+
+    fn: Callable
+    arg_structs: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+def activation_rule_set(cfg: ModelConfig, mesh, axes: MeshAxes,
+                        *, seq_len: int = 0, seq_parallel: bool = True) -> dict:
+    """Logical activation shardings installed while tracing the step.
+
+    ``seq_parallel`` shards the residual's sequence dim over the tensor
+    axis between blocks (Megatron-SP): the 28-deep saved-residual stack of
+    the remat scan drops by 16x per device, at the cost of
+    gather/scatter collectives around each block's matmuls.
+    """
+    t = mesh.shape[axes.tensor]
+    vocab_ax = axes.tensor if cfg.padded_vocab % t == 0 else None
+    heads_ax = axes.tensor if cfg.n_heads % t == 0 else None
+    kv_heads_ax = axes.tensor if cfg.n_kv_heads % t == 0 else None
+    seq_ax = (axes.tensor
+              if seq_parallel and seq_len and seq_len % t == 0 else None)
+    rules = {
+        "residual": P(axes.batch, seq_ax, None),
+        "logits": P(axes.batch, None, vocab_ax),
+        "heads": P(axes.batch, None, heads_ax, None),
+        "kv_heads": P(axes.batch, None, kv_heads_ax, None),
+    }
+    if cfg.moe is not None:
+        # Shard-local dispatch: groups over the batch axes, experts over the
+        # tensor axis; gathers/scatters stay group-local (see moe_apply).
+        e_ax = axes.tensor if cfg.moe.n_experts % t == 0 else None
+        rules["moe_shards"] = 1  # overwritten by build_step_plan
+        rules["moe_tokens"] = P(axes.batch, None, None)
+        rules["moe_dispatch"] = P(axes.batch, e_ax, None, None)
+    if cfg.ssm is not None:
+        d_inner = cfg.ssm.expand * cfg.d_model
+        inner_ax = axes.tensor if d_inner % t == 0 else None
+        rules["ssm_inner"] = P(axes.batch, None, inner_ax, None)
+        rules["ssm_y"] = P(axes.batch, None, inner_ax)
+    return rules
+
+
+def _with_rules(fn, rules):
+    def wrapped(*args):
+        with activation_rules(rules):
+            return fn(*args)
+    return wrapped
+
+
+def build_step_plan(cfg: ModelConfig, shape: InputShape,
+                    mesh: jax.sharding.Mesh,
+                    overrides: dict | None = None) -> StepPlan:
+    """Overrides (the §Perf hillclimb knobs):
+      seq_parallel: bool — force Megatron-SP residuals on/off
+      no_act_rules: bool — drop all activation constraints (XLA free choice)
+      grad_accum:   int  — force the microbatch count
+      param_layout: "fsdp" | "model_only"
+      twilight:     dict — dataclasses.replace fields on cfg.twilight
+    """
+    ov = overrides or {}
+    if ov.get("twilight"):
+        import dataclasses as _dc
+        cfg = cfg.replace(twilight=_dc.replace(cfg.twilight, **ov["twilight"]))
+    axes = MeshAxes.for_mesh(mesh)
+    ns = lambda spec: NamedSharding(mesh, spec)  # noqa: E731
+    tree_ns = lambda specs: jax.tree_util.tree_map(  # noqa: E731
+        ns, specs, is_leaf=lambda x: isinstance(x, P))
+    seq_for_rules = shape.seq_len if shape.kind in ("train", "prefill") else 0
+    if cfg.frontend == "vision":
+        seq_for_rules = 0  # prefix+text concat: keep batch-only sharding
+    if cfg.ssm is not None or cfg.xlstm is not None:
+        # Recurrent blocks scan over time and shard their inner width over
+        # the tensor axis instead — sequence-parallel residuals would fight
+        # them for the same axis (measured: 2.3 TB of all-gathers on Jamba).
+        seq_for_rules = 0
+    if ov.get("seq_parallel") is False:
+        seq_for_rules = 0
+    rules = activation_rule_set(cfg, mesh, axes, seq_len=seq_for_rules)
+    if cfg.moe is not None:
+        fsdp_size = _axes_size(axes.batch, mesh)
+        if shape.global_batch % fsdp_size == 0:
+            rules["moe_shards"] = fsdp_size
+    if ov.get("no_act_rules"):
+        rules = {k: v for k, v in rules.items() if not isinstance(v, P)}
+
+    p_struct = params_struct(cfg)
+    p_specs = param_specs(p_struct, cfg, mesh,
+                          layout=ov.get("param_layout", "fsdp"))
+
+    if shape.kind == "train":
+        o_struct = jax.eval_shape(adamw_init, p_struct)
+        o_specs = {"m": p_specs, "v": p_specs, "step": P()}
+        b_struct = batch_struct(cfg, shape, with_labels=True)
+        b_specs = batch_specs(b_struct, axes)
+        n_params = sum(x.size for x in jax.tree_util.tree_leaves(p_struct))
+        accum = ov.get("grad_accum", 0)
+        if not accum:
+            accum = 1
+            if n_params > 100e9:
+                accum = 8
+            elif n_params > 20e9:
+                accum = 2
+        while shape.global_batch % (accum * _axes_size(axes.batch, mesh)):
+            accum //= 2
+        tcfg = TrainConfig(remat=True, grad_accum=max(1, accum))
+        step = make_train_step(cfg, tcfg)
+        metrics_specs = {k: P() for k in
+                         ("loss", "ce", "moe_aux", "ppl", "grad_norm", "lr")}
+        return StepPlan(
+            fn=_with_rules(step, rules),
+            arg_structs=(p_struct, o_struct, b_struct),
+            in_shardings=(tree_ns(p_specs), tree_ns(o_specs), tree_ns(b_specs)),
+            out_shardings=(tree_ns(p_specs), tree_ns(o_specs),
+                           tree_ns(metrics_specs)),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        b_struct = batch_struct(cfg, shape, with_labels=False)
+        b_specs = batch_specs(b_struct, axes)
+        st_struct = decode_state_struct(cfg, shape)
+        st_specs = decode_state_specs(st_struct, cfg, mesh,
+                                      batch=shape.global_batch,
+                                      capacity=shape.seq_len)
+        logits_sp = P(axes.batch, None,
+                      "model" if cfg.padded_vocab % mesh.shape["model"] == 0
+                      else None)
+
+        def fn(params, batch):
+            return prefill(params, cfg, batch, shape.seq_len)
+
+        return StepPlan(
+            fn=_with_rules(fn, rules),
+            arg_structs=(p_struct, b_struct),
+            in_shardings=(tree_ns(p_specs), tree_ns(b_specs)),
+            out_shardings=(ns(logits_sp), tree_ns(st_specs)),
+        )
+
+    # decode
+    st_struct = decode_state_struct(cfg, shape)
+    st_specs = decode_state_specs(st_struct, cfg, mesh,
+                                  batch=shape.global_batch,
+                                  capacity=shape.seq_len,
+                                  kv_seq_shard=ov.get("kv_seq_shard", True))
+    tok_struct = _struct((shape.global_batch,), jnp.int32)
+    b_ax = (axes.batch
+            if shape.global_batch % _axes_size(axes.batch, mesh) == 0
+            and shape.global_batch > 1 else None)
+    logits_sp = P(b_ax, "model" if cfg.padded_vocab % mesh.shape["model"] == 0
+                  else None)
+
+    def fn(params, state, token):
+        return decode_step(params, cfg, state, token)
+
+    stats_specs = {"mean_pruned_budget": P()}
+    return StepPlan(
+        fn=_with_rules(fn, rules),
+        arg_structs=(p_struct, st_struct, tok_struct),
+        in_shardings=(tree_ns(p_specs), tree_ns(st_specs), ns(P(b_ax))),
+        out_shardings=(ns(logits_sp), tree_ns(st_specs), tree_ns(stats_specs)),
+        donate_argnums=(1,),
+    )
+
+
+def _axes_size(axes_names, mesh) -> int:
+    size = 1
+    names = axes_names if isinstance(axes_names, tuple) else (axes_names,)
+    for a in names:
+        if a is not None:
+            size *= mesh.shape[a]
+    return size
+
+
+def eligible(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Arch × shape applicability (DESIGN §5).
+
+    Every pair is eligible here: dense archs run long_500k via Twilight's
+    bounded-candidate sparse decode (the paper's technique), SSM/hybrid run
+    it natively.  Kept as a function so future encoder-only archs can skip.
+    """
+    del cfg, shape
+    return True, ""

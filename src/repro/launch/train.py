@@ -1,0 +1,61 @@
+"""Training launcher.
+
+Production mode lowers the pjit'd train step on the 16x16 (or 2x16x16) mesh;
+on this CPU container use ``--smoke`` to actually execute a reduced config:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --steps 50 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import DataConfig, batch_for_arch
+from repro.models import count_params, init_params
+from repro.training import TrainConfig, train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config, runs for real on CPU")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    print(f"[train] {cfg.name}: {count_params(params):,} params "
+          f"({'smoke' if args.smoke else 'full'})")
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+
+    def batches():
+        for _ in range(args.steps):
+            yield batch_for_arch(cfg, dcfg, rng)
+
+    tcfg = TrainConfig(peak_lr=args.lr, warmup_steps=max(1, args.steps // 10),
+                       total_steps=args.steps, remat=not args.smoke)
+    params, history = train_loop(params, cfg, tcfg, batches())
+    if args.ckpt_dir:
+        from repro.checkpoint import save_checkpoint
+        path = save_checkpoint(args.ckpt_dir, args.steps, params)
+        print(f"[train] checkpoint -> {path}")
+    print(f"[train] final loss {history[-1]['loss']:.4f} "
+          f"(start {history[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

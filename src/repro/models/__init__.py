@@ -1,0 +1,45 @@
+"""Model zoo: every assigned architecture family, pure JAX.
+
+Families: dense GQA transformer, fine-grained MoE, Mamba/attention hybrid
+(Jamba), xLSTM (sLSTM+mLSTM), encoder-decoder (Seamless), and multimodal
+backbones (audio/VLM) consuming stub frontend embeddings.
+
+The public entry points are in :mod:`repro.models.model`:
+
+* ``init_params(cfg, key)``
+* ``forward(params, cfg, batch)``            — teacher-forcing logits
+* ``init_decode_state(cfg, batch, max_len)`` — caches for serving
+* ``decode_step(params, cfg, state, token)`` — one token w/ Twilight
+"""
+
+from repro.models.common import (
+    ArchType,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    XLSTMConfig,
+    block_pattern,
+)
+from repro.models.model import (
+    count_params,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    prefill,
+)
+
+__all__ = [
+    "ArchType",
+    "MoEConfig",
+    "ModelConfig",
+    "SSMConfig",
+    "XLSTMConfig",
+    "block_pattern",
+    "count_params",
+    "decode_step",
+    "forward",
+    "init_decode_state",
+    "init_params",
+    "prefill",
+]

@@ -1,0 +1,152 @@
+"""Unified model configuration covering all assigned architecture families."""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Literal
+
+from repro.core.twilight import TwilightConfig
+
+__all__ = [
+    "ArchType",
+    "MoEConfig",
+    "SSMConfig",
+    "XLSTMConfig",
+    "ModelConfig",
+    "block_pattern",
+]
+
+
+class ArchType(str, enum.Enum):
+    DENSE = "dense"
+    MOE = "moe"
+    HYBRID = "hybrid"
+    SSM = "ssm"
+    AUDIO = "audio"
+    VLM = "vlm"
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Fine-grained mixture of experts (DeepSeek-MoE style)."""
+
+    n_experts: int
+    top_k: int
+    n_shared: int = 0  # always-active shared experts
+    d_expert: int = 0  # per-expert FFN width (0 -> use d_ff)
+    period: int = 1  # MoE every `period` layers (Jamba: 2), dense otherwise
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    dense_d_ff: int = 0  # FFN width of the non-MoE layers when period > 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-1 selective SSM (Jamba's recurrent block)."""
+
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block stack: mLSTM (matrix memory) + sLSTM (scalar memory)."""
+
+    slstm_every: int = 8  # one sLSTM block per this many layers (7:1 ratio)
+    proj_factor: float = 2.0  # mLSTM up-projection
+    conv_kernel: int = 4
+
+
+BlockKind = Literal["attn", "mamba", "mlstm", "slstm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config to rule all ten architectures.
+
+    Only the fields relevant to an arch family are consulted by the model
+    code; configs set the rest to their defaults.
+    """
+
+    name: str
+    arch_type: ArchType
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0  # 0 -> d_model // n_heads (qwen3 overrides to 128)
+
+    # Attention details.
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+
+    # MoE / SSM / xLSTM sub-configs (None when unused).
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    xlstm: XLSTMConfig | None = None
+
+    # Hybrid interleave: one attention layer per `attn_period` layers
+    # (Jamba: 8); remaining layers are Mamba.  0 -> all layers attention.
+    attn_period: int = 0
+
+    # Encoder-decoder (Seamless): number of encoder layers (0 = decoder-only).
+    encoder_layers: int = 0
+
+    # Modality frontend stub: embeddings are supplied by input_specs().
+    frontend: Literal["none", "audio", "vision"] = "none"
+    n_prefix_tokens: int = 0  # patch/frame prefix length consumed by the LM
+
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+
+    # The paper's technique, integrated as a first-class feature.
+    twilight: TwilightConfig = dataclasses.field(default_factory=TwilightConfig)
+
+    # Provenance (source paper / model card), kept for DESIGN/EXPERIMENTS.
+    citation: str = ""
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+        if self.n_heads % self.n_kv_heads:
+            raise ValueError("n_heads must be divisible by n_kv_heads")
+
+    @property
+    def group_size(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the embedding/LM-head
+        shard evenly over the tensor axis (standard production padding;
+        Seamless' 256206 and InternVL's 151655 are not 16-divisible).
+        Logits beyond ``vocab_size`` are dead rows — the loss never selects
+        them and the engine slices them off before sampling."""
+        return -(-self.vocab_size // 256) * 256
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def block_pattern(cfg: ModelConfig) -> list[BlockKind]:
+    """Per-layer block kinds for the full depth."""
+    kinds: list[BlockKind] = []
+    for i in range(cfg.n_layers):
+        if cfg.xlstm is not None:
+            every = cfg.xlstm.slstm_every
+            kinds.append("slstm" if (i + 1) % every == 0 else "mlstm")
+        elif cfg.attn_period and cfg.attn_period > 1:
+            # Jamba: attention on layer index attn_period//2 within each
+            # period (matches the released 1:7 interleave placement).
+            kinds.append("attn" if i % cfg.attn_period == cfg.attn_period // 2
+                         else "mamba")
+        else:
+            kinds.append("attn")
+    return kinds

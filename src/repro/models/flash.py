@@ -1,0 +1,146 @@
+"""Memory-efficient (flash) attention for the train/prefill path.
+
+Pure-JAX blockwise attention with a custom VJP: the forward stores only
+(o, logsumexp) — O(s·d) residuals instead of the O(s²) score matrix — and
+the backward recomputes per-block scores.  This is the XLA-level analogue
+of FlashAttention-2 [39]; the Pallas decode kernel covers the single-query
+path, this covers full sequences.
+
+GQA is handled natively: scores are computed per KV head against the whole
+query group, and dk/dv sum over the group.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _blockify(x: jax.Array, block: int) -> jax.Array:
+    """(b, s, h, d) -> (nb, b, block, h, d)."""
+    b, s, h, d = x.shape
+    return jnp.moveaxis(x.reshape(b, s // block, block, h, d), 1, 0)
+
+
+def _scores(qb, k, hkv, sm_scale):
+    """qb: (b, blk, hq, d), k: (b, n, hkv, d) -> (b, hkv, g, blk, n) f32."""
+    b, blk, hq, d = qb.shape
+    g = hq // hkv
+    qg = qb.reshape(b, blk, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bnhd->bhgqn", qg, k.astype(jnp.float32))
+    return s * sm_scale
+
+
+def _causal_mask(blk_idx, block, n, q_offset):
+    qpos = blk_idx * block + jnp.arange(block) + q_offset
+    return qpos[:, None] >= jnp.arange(n)[None, :]  # (block, n)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, q_block: int = 512,
+                    q_offset: int = 0) -> jax.Array:
+    """q: (b, s, hq, d), k/v: (b, n, hkv, d) -> (b, s, hq, d)."""
+    o, _ = _flash_fwd_impl(q, k, v, causal, q_block, q_offset)
+    return o
+
+
+def _flash_fwd_impl(q, k, v, causal, q_block, q_offset):
+    b, s, hq, d = q.shape
+    n, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    q_block = min(q_block, s)
+    while s % q_block:
+        q_block -= 1
+    sm_scale = d ** -0.5
+    qb_all = _blockify(q, q_block)  # (nb, b, blk, hq, d)
+
+    def one_block(blk_idx, qb):
+        sc = _scores(qb, k, hkv, sm_scale)  # (b, hkv, g, blk, n)
+        if causal:
+            m = _causal_mask(blk_idx, q_block, n, q_offset)
+            sc = jnp.where(m[None, None, None], sc, NEG_INF)
+        mx = jnp.max(sc, axis=-1, keepdims=True)
+        p = jnp.exp(sc - mx)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        lse = (mx + jnp.log(jnp.maximum(l, 1e-30)))[..., 0]  # (b,hkv,g,blk)
+        ob = jnp.einsum("bhgqn,bnhd->bhgqd", p / jnp.maximum(l, 1e-30),
+                        v.astype(jnp.float32))
+        return ob, lse
+
+    def scan_body(_, inp):
+        blk_idx, qb = inp
+        return None, one_block(blk_idx, qb)
+
+    nb = s // q_block
+    _, (ob, lse) = jax.lax.scan(
+        scan_body, None, (jnp.arange(nb), qb_all))
+    # ob: (nb, b, hkv, g, blk, d) -> (b, s, hq, d)
+    o = jnp.moveaxis(ob, 0, 3)  # (b, hkv, g, nb, blk, d)
+    o = o.reshape(b, hkv, g, s, d)
+    o = jnp.moveaxis(o.reshape(b, hq, s, d), 1, 2).astype(q.dtype)
+    lse = jnp.moveaxis(lse, 0, 3).reshape(b, hkv, g, s)  # (b,hkv,g,s)
+    return o, lse
+
+
+def _flash_fwd(q, k, v, causal, q_block, q_offset):
+    o, lse = _flash_fwd_impl(q, k, v, causal, q_block, q_offset)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, q_block, q_offset, res, do):
+    q, k, v, o, lse = res
+    b, s, hq, d = q.shape
+    n, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    q_block = min(q_block, s)
+    while s % q_block:
+        q_block -= 1
+    sm_scale = d ** -0.5
+    nb = s // q_block
+
+    qb_all = _blockify(q, q_block)
+    do_all = _blockify(do.astype(jnp.float32), q_block)
+    o_all = _blockify(o.astype(jnp.float32), q_block)
+    # lse (b, hkv, g, s) -> (nb, b, hkv, g, blk)
+    lse_all = jnp.moveaxis(
+        lse.reshape(b, hkv, g, nb, q_block), 3, 0)
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def scan_body(carry, inp):
+        dk, dv = carry
+        blk_idx, qb, dob, ob, lseb = inp
+        sc = _scores(qb, k, hkv, sm_scale)  # (b,hkv,g,blk,n)
+        if causal:
+            m = _causal_mask(blk_idx, q_block, n, q_offset)
+            sc = jnp.where(m[None, None, None], sc, NEG_INF)
+        p = jnp.exp(sc - lseb[..., None])  # (b,hkv,g,blk,n)
+        dog = jnp.moveaxis(dob.reshape(b, q_block, hkv, g, d), 1, 3)
+        og = jnp.moveaxis(ob.reshape(b, q_block, hkv, g, d), 1, 3)
+        dp = jnp.einsum("bhgqd,bnhd->bhgqn", dog, vf)
+        delta = jnp.sum(dog * og, axis=-1, keepdims=True)  # (b,hkv,g,blk,1)
+        ds = p * (dp - delta) * sm_scale
+        dqb = jnp.einsum("bhgqn,bnhd->bhgqd", ds, kf)
+        dqb = jnp.moveaxis(dqb, 3, 1).reshape(b, q_block, hq, d)
+        dk = dk + jnp.einsum("bhgqn,bhgqd->bnhd", ds,
+                             jnp.moveaxis(qb.reshape(
+                                 b, q_block, hkv, g, d), 1, 3).astype(jnp.float32))
+        dv = dv + jnp.einsum("bhgqn,bhgqd->bnhd", p, dog)
+        return (dk, dv), dqb
+
+    dk0 = jnp.zeros((b, n, hkv, d), jnp.float32)
+    dv0 = jnp.zeros((b, n, hkv, d), jnp.float32)
+    (dk, dv), dq_blocks = jax.lax.scan(
+        scan_body, (dk0, dv0),
+        (jnp.arange(nb), qb_all, do_all, o_all, lse_all))
+    dq = jnp.moveaxis(dq_blocks, 0, 1).reshape(b, s, hq, d)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,245 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, MLP, MoE.
+
+Params are plain nested dicts of jax arrays (pytrees) — no framework — so
+they stack/scan/shard transparently.  Compute-sensitive reductions run in
+f32; params and activations default to the config dtype (bf16).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import mha_attention
+from repro.models.common import ModelConfig
+from repro.models.flash import flash_attention
+from repro.sharding.act import constrain
+from repro.sharding.act import get_value as act_get_value
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * (d_in ** -0.5)).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (b, s, h, d), positions: (b, s) or (s,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (b, s, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (train path; the decode path lives in serving/decode.py where the
+# Twilight pipeline owns the KV cache)
+# ---------------------------------------------------------------------------
+
+def attn_init(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p: Params = {
+        "wq": dense_init(ks[0], d, hq * dh, dtype),
+        "wk": dense_init(ks[1], d, hkv * dh, dtype),
+        "wv": dense_init(ks[2], d, hkv * dh, dtype),
+        "wo": dense_init(ks[3], hq * dh, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def attn_qkv(params: Params, cfg: ModelConfig, x: jax.Array,
+             positions: jax.Array | None) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Project to (b, s, hq, dh), (b, s, hkv, dh) x2 with bias/qk-norm/RoPE."""
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(params: Params, cfg: ModelConfig, x: jax.Array,
+               positions: jax.Array, *, causal: bool = True,
+               memory: tuple[jax.Array, jax.Array] | None = None) -> jax.Array:
+    """Self-attention (memory=None) or cross-attention (memory=(k, v))."""
+    b, s, _ = x.shape
+    if memory is None:
+        q, k, v = attn_qkv(params, cfg, x, positions)
+    else:
+        q, _, _ = attn_qkv(params, cfg, x, None)
+        k, v = memory
+        causal = False
+    q = constrain(q, "heads")
+    k = constrain(k, "kv_heads")
+    v = constrain(v, "kv_heads")
+    if s >= 256:  # flash path: O(s·d) residuals instead of O(s²) scores
+        out = flash_attention(q, k, v, causal, 512, 0)
+    else:
+        out = mha_attention(q, k, v, causal=causal)
+    return out.reshape(b, s, cfg.n_heads * cfg.d_head) @ params["wo"]
+
+
+def cross_kv(params: Params, cfg: ModelConfig, memory: jax.Array
+             ) -> tuple[jax.Array, jax.Array]:
+    """Precompute cross-attention K/V from encoder output (b, n, d_model)."""
+    b, n, _ = memory.shape
+    k = (memory @ params["wk"]).reshape(b, n, cfg.n_kv_heads, cfg.d_head)
+    v = (memory @ params["wv"]).reshape(b, n, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qkv_bias:
+        k = k + params["bk"].reshape(cfg.n_kv_heads, cfg.d_head)
+        v = v + params["bv"].reshape(cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(cfg: ModelConfig, key, d_ff: int | None = None) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(ks[0], cfg.d_model, d_ff, dtype),
+        "wg": dense_init(ks[1], cfg.d_model, d_ff, dtype),
+        "wo": dense_init(ks[2], d_ff, cfg.d_model, dtype),
+    }
+
+
+def mlp_apply(params: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Fine-grained MoE (DeepSeek-MoE / Llama-4 / Jamba)
+# ---------------------------------------------------------------------------
+
+def moe_init(cfg: ModelConfig, key) -> Params:
+    moe = cfg.moe
+    assert moe is not None
+    dtype = jnp.dtype(cfg.dtype)
+    d_e = moe.d_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    e = moe.n_experts
+    p: Params = {
+        "router": dense_init(ks[0], cfg.d_model, e, jnp.float32),
+        "wi": (jax.random.normal(ks[1], (e, cfg.d_model, d_e), jnp.float32)
+               * (cfg.d_model ** -0.5)).astype(dtype),
+        "wg": (jax.random.normal(ks[2], (e, cfg.d_model, d_e), jnp.float32)
+               * (cfg.d_model ** -0.5)).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (e, d_e, cfg.d_model), jnp.float32)
+               * (d_e ** -0.5)).astype(dtype),
+    }
+    if moe.n_shared:
+        p["shared"] = mlp_init(cfg, ks[4], d_ff=d_e * moe.n_shared)
+    return p
+
+
+def moe_apply(params: Params, cfg: ModelConfig, x: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+    """Capacity-based expert-parallel dispatch, shard-local.
+
+    Tokens are grouped into ``moe_shards`` dispatch groups aligned with the
+    data axis (launch hint via ``repro.sharding.act``; 1 when unsharded);
+    each group routes its own tokens to a per-group expert capacity.  All
+    gathers/scatters are *batched over the sharded group dim*, so under
+    pjit they stay shard-local — the only cross-device traffic is the
+    expert-parallel einsum layout (experts over ``model``) and the
+    sequence all-gather/reduce-scatter at the block boundary (Megatron-SP
+    pattern).  Per-group capacity is the per-device capacity of real
+    expert-parallel systems; dropped tokens fall through with zero routed
+    contribution (the shared experts remain dense).
+
+    Returns (y, router aux loss).
+    """
+    moe = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e = moe.n_experts
+    g = act_get_value("moe_shards", 1)
+    if b % g:
+        g = 1
+    tl = t // g  # tokens per dispatch group
+
+    xt = constrain(x.reshape(g, tl, d), "moe_tokens")
+    logits = (xt.astype(jnp.float32) @ params["router"])  # (g, tl, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, moe.top_k)  # (g, tl, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # gates (g, tl, e): renormalized top-k probabilities, 0 elsewhere.
+    gates = jnp.zeros((g, tl, e), jnp.float32)
+    gates = jax.vmap(jax.vmap(lambda gr, i, v: gr.at[i].set(v)))(
+        gates, topi, topv)
+
+    cap = int(moe.capacity_factor * moe.top_k * tl / e)
+    cap = max(1, min(cap, tl))
+    # Per (group, expert): top-C tokens by gate weight (static shapes).
+    gv, token_idx = jax.lax.top_k(jnp.swapaxes(gates, 1, 2), cap)  # (g, e, cap)
+    xe = jnp.take_along_axis(xt[:, None], token_idx[..., None], axis=2)
+    xe = constrain(xe, "moe_dispatch")  # (g, e, cap, d)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["wg"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, params["wi"])
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"])  # (g, e, cap, d)
+    combine = jnp.where(gv > 0, gv, 0.0).astype(x.dtype)
+    ye = constrain(ye * combine[..., None], "moe_dispatch")
+
+    # Scatter-add back to tokens, batched over the group dim.
+    def combine_group(ye_g, idx_g):
+        return jnp.zeros((tl, d), x.dtype).at[idx_g.reshape(-1)].add(
+            ye_g.reshape(-1, d))
+
+    yt = constrain(jax.vmap(combine_group)(ye, token_idx), "moe_tokens")
+
+    if "shared" in params:
+        yt = yt + mlp_apply(params["shared"], xt)
+
+    # Load-balance aux loss (Switch-style): e * sum(f_i * P_i).
+    importance = probs.mean((0, 1))
+    load = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0) \
+        / (t * moe.top_k)
+    aux = e * jnp.sum(importance * load) * moe.router_aux_weight
+    return yt.reshape(b, s, d).astype(x.dtype), aux

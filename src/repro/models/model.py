@@ -1,0 +1,553 @@
+"""Unified model: init / train forward / prefill / Twilight decode.
+
+All ten architectures are instances of one block calculus:
+
+    layer = mixer (attn | mamba | mlstm | slstm) [+ cross-attn] [+ ffn|moe]
+
+Layers repeat with period P (Jamba: 8 = 7 mamba + 1 attn, MoE every 2nd;
+xLSTM: 7 mLSTM + 1 sLSTM; everything else: P=1).  Parameters are stacked
+per position-in-period and the depth dimension is a single ``lax.scan`` —
+HLO size and compile time are O(P), not O(L), which is what makes 80
+(arch × shape × mesh) dry-run compiles tractable.
+
+Decode integrates the paper's pipeline as a first-class feature: the KV
+cache carries an INT4 shadow cache + Quest page metadata, and attention
+layers run Select-then-Prune (``repro.core.twilight``) every step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as quant_lib
+from repro.core.attention import full_decode_attention, mha_attention
+from repro.core.selectors import PageMeta, SelectionContext
+from repro.core.twilight import twilight_decode_attention
+from repro.models import layers as ly
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.common import ModelConfig, block_pattern
+from repro.sharding.act import constrain
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Layer-stack schedule
+# ---------------------------------------------------------------------------
+
+class LayerSpec(NamedTuple):
+    kind: str  # attn | mamba | mlstm | slstm
+    is_moe: bool
+    has_cross: bool
+
+
+def layer_schedule(cfg: ModelConfig) -> tuple[list[LayerSpec], int]:
+    """Per-position specs for one period, plus the repeat count."""
+    pattern = block_pattern(cfg)
+    moe_period = cfg.moe.period if cfg.moe else 0
+
+    def spec(i: int) -> LayerSpec:
+        is_moe = bool(cfg.moe) and (i % cfg.moe.period == cfg.moe.period - 1)
+        return LayerSpec(kind=pattern[i], is_moe=is_moe,
+                         has_cross=cfg.encoder_layers > 0)
+
+    # Find the smallest period P consistent with both interleaves.
+    candidates = [p for p in range(1, cfg.n_layers + 1) if cfg.n_layers % p == 0]
+    for p in candidates:
+        if all(spec(i) == spec(i % p) for i in range(cfg.n_layers)):
+            return [spec(i) for i in range(p)], cfg.n_layers // p
+    raise ValueError(f"no repeating period found for {cfg.name}")
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _mixer_init(cfg: ModelConfig, kind: str, key) -> Params:
+    if kind == "attn":
+        return ly.attn_init(cfg, key)
+    if kind == "mamba":
+        return ssm_lib.mamba_init(cfg, key)
+    if kind == "mlstm":
+        return xlstm_lib.mlstm_init(cfg, key)
+    if kind == "slstm":
+        return xlstm_lib.slstm_init(cfg, key)
+    raise ValueError(kind)
+
+
+def _block_init(cfg: ModelConfig, spec: LayerSpec, key) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "mixer": _mixer_init(cfg, spec.kind, ks[0]),
+    }
+    if spec.has_cross and spec.kind == "attn":
+        p["cross"] = ly.attn_init(cfg, ks[1])
+        p["norm_cross"] = jnp.ones((cfg.d_model,), dtype)
+    if spec.kind in ("attn", "mamba"):  # xLSTM blocks have no separate FFN
+        if spec.is_moe:
+            p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+            p["ffn"] = ly.moe_init(cfg, ks[2])
+        else:
+            d_ff = (cfg.moe.dense_d_ff if cfg.moe else 0) or cfg.d_ff
+            if d_ff:
+                p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+                p["ffn"] = ly.mlp_init(cfg, ks[2], d_ff=d_ff)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    specs, repeats = layer_schedule(cfg)
+    keys = jax.random.split(key, 8)
+
+    params: Params = {
+        "embed": (jax.random.normal(keys[0], (cfg.padded_vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = ly.dense_init(keys[1], cfg.d_model,
+                                          cfg.padded_vocab, dtype)
+
+    blocks = []
+    for p_idx, spec in enumerate(specs):
+        layer_keys = jax.random.split(
+            jax.random.fold_in(keys[2], p_idx), repeats)
+        stacked = jax.vmap(lambda k, s=spec: _block_init(cfg, s, k))(layer_keys)
+        blocks.append(stacked)
+    params["blocks"] = blocks
+
+    if cfg.encoder_layers:
+        enc_cfg = cfg.replace(n_layers=cfg.encoder_layers, moe=None,
+                              attn_period=0, encoder_layers=0)
+        enc_keys = jax.random.split(keys[3], cfg.encoder_layers)
+        enc_spec = LayerSpec(kind="attn", is_moe=False, has_cross=False)
+        params["encoder"] = {
+            "blocks": jax.vmap(
+                lambda k: _block_init(enc_cfg, enc_spec, k))(enc_keys),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+    return params
+
+
+def count_params(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill forward
+# ---------------------------------------------------------------------------
+
+def _block_apply_train(bp: Params, cfg: ModelConfig, spec: LayerSpec,
+                       x: jax.Array, positions: jax.Array,
+                       memory: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence block.  Returns (x, moe aux loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = ly.rms_norm(x, bp["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        mix = ly.attn_apply(bp["mixer"], cfg, h, positions, causal=True)
+    elif spec.kind == "mamba":
+        # Chunked selective scan for long sequences: per-chunk carries
+        # instead of per-timestep (the sequential scan would stash the
+        # (b, d_inner, d_state) state 4096x for the backward pass).
+        chunked = x.shape[1] >= 1024 and x.shape[1] % 256 == 0
+        mix = ssm_lib.mamba_apply(bp["mixer"], cfg, h, chunked=chunked,
+                                  chunk=256)
+    elif spec.kind == "mlstm":
+        mix = xlstm_lib.mlstm_apply(bp["mixer"], cfg, h)
+    else:
+        mix = xlstm_lib.slstm_apply(bp["mixer"], cfg, h)
+    x = x + mix
+    if "cross" in bp and memory is not None:
+        hc = ly.rms_norm(x, bp["norm_cross"], cfg.norm_eps)
+        mem_kv = ly.cross_kv(bp["cross"], cfg, memory)
+        x = x + ly.attn_apply(bp["cross"], cfg, hc, positions, memory=mem_kv)
+    if "ffn" in bp:
+        h2 = ly.rms_norm(x, bp["norm2"], cfg.norm_eps)
+        if spec.is_moe:
+            y, aux = ly.moe_apply(bp["ffn"], cfg, h2)
+        else:
+            y = ly.mlp_apply(bp["ffn"], h2)
+        x = x + y
+    return x, aux
+
+
+def _run_stack(params_blocks, cfg: ModelConfig, specs, repeats: int,
+               x: jax.Array, positions: jax.Array,
+               memory: jax.Array | None, *, remat: bool) -> tuple[jax.Array, jax.Array]:
+    block_fns = []
+    for spec in specs:
+        def block_fn(bp, x, spec=spec):
+            return _block_apply_train(bp, cfg, spec, x, positions, memory)
+        # Long periods (Jamba: 8 blocks) additionally remat per block —
+        # the period backward otherwise holds all 8 blocks' internals.
+        if remat and len(specs) > 1:
+            block_fn = jax.checkpoint(block_fn)
+        block_fns.append(block_fn)
+
+    def period_body(carry, stacked_slice):
+        x, aux = carry
+        for p_idx, fn in enumerate(block_fns):
+            x, a = fn(stacked_slice[p_idx], x)
+            x = constrain(x, "residual")
+            aux = aux + a
+        return (x, aux), None
+
+    if remat:
+        period_body = jax.checkpoint(period_body)
+
+    (x, aux), _ = jax.lax.scan(
+        period_body, (x, jnp.zeros((), jnp.float32)), params_blocks,
+        length=repeats)
+    return x, aux
+
+
+def _encode(params: Params, cfg: ModelConfig, frames: jax.Array,
+            *, remat: bool) -> jax.Array:
+    """Bidirectional encoder over frontend embeddings (b, s_enc, d_model)."""
+    enc = params["encoder"]
+    positions = jnp.arange(frames.shape[1])
+    spec = LayerSpec(kind="attn", is_moe=False, has_cross=False)
+
+    def body(x, bp):
+        h = ly.rms_norm(x, bp["norm1"], cfg.norm_eps)
+        x = x + ly.attn_apply(bp["mixer"], cfg, h, positions, causal=False)
+        if "ffn" in bp:
+            h2 = ly.rms_norm(x, bp["norm2"], cfg.norm_eps)
+            x = x + ly.mlp_apply(bp["ffn"], h2)
+        return x, None
+
+    del spec
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, frames.astype(jnp.dtype(cfg.dtype)),
+                        enc["blocks"])
+    return ly.rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array],
+            *, remat: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Teacher-forcing logits.
+
+    batch: {"tokens": (b, s)} plus, per modality,
+      audio:  {"frames":  (b, s_enc, d_model)}  — encoder memory
+      vision: {"patches": (b, n_prefix, d_model)} — prefix embeddings
+    Returns (logits (b, s_total, vocab), moe aux loss).
+    """
+    specs, repeats = layer_schedule(cfg)
+    tokens = batch["tokens"]
+    x = constrain(jnp.take(params["embed"], tokens, axis=0), "residual")
+
+    memory = None
+    if cfg.frontend == "audio" and cfg.encoder_layers:
+        memory = _encode(params, cfg, batch["frames"], remat=remat)
+    elif cfg.frontend == "vision":
+        x = jnp.concatenate(
+            [batch["patches"].astype(x.dtype), x], axis=1)
+
+    positions = jnp.arange(x.shape[1])
+    x, aux = _run_stack(params["blocks"], cfg, specs, repeats, x, positions,
+                        memory, remat=remat)
+    x = ly.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain(x @ head, "logits")
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode state (paged-capacity caches + Twilight shadow structures)
+# ---------------------------------------------------------------------------
+
+def _attn_cache_init(cfg: ModelConfig, batch: int, n_max: int) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+    tw = cfg.twilight
+    if n_max % tw.page_size:
+        raise ValueError(f"cache capacity {n_max} not divisible by page size "
+                         f"{tw.page_size}")
+    n_pages = n_max // tw.page_size
+    cache: Params = {
+        "k": jnp.zeros((batch, n_max, hkv, dh), dtype),
+        "v": jnp.zeros((batch, n_max, hkv, dh), dtype),
+    }
+    if tw.enabled:
+        # INT4 shadow K cache (+1/8 memory, §4.3) and Quest page metadata.
+        cache["qk_packed"] = jnp.zeros((batch, n_max, hkv, dh // 2), jnp.uint8)
+        cache["qk_scale"] = jnp.zeros((batch, n_max, hkv, 1), jnp.float32)
+        cache["qk_zero"] = jnp.zeros((batch, n_max, hkv, 1), jnp.float32)
+        cache["pmax"] = jnp.zeros((batch, n_pages, hkv, dh), dtype)
+        cache["pmin"] = jnp.zeros((batch, n_pages, hkv, dh), dtype)
+        cache["ds_channels"] = jnp.zeros((hkv, 16), jnp.int32)
+    return cache
+
+
+def _mixer_state_init(cfg: ModelConfig, kind: str, batch: int, n_max: int) -> Params:
+    if kind == "attn":
+        return _attn_cache_init(cfg, batch, n_max)
+    if kind == "mamba":
+        return ssm_lib.mamba_init_state(cfg, batch)
+    if kind == "mlstm":
+        return xlstm_lib.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm_lib.slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, n_max: int,
+                      *, n_enc: int = 0) -> Params:
+    """Decode-time state pytree: per-layer caches stacked per period position."""
+    specs, repeats = layer_schedule(cfg)
+
+    def tile(tree):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (repeats,) + x.shape), tree)
+
+    blocks = []
+    for spec in specs:
+        st = _mixer_state_init(cfg, spec.kind, batch, n_max)
+        if spec.has_cross and spec.kind == "attn":
+            dtype = jnp.dtype(cfg.dtype)
+            st["cross_k"] = jnp.zeros((batch, n_enc, cfg.n_kv_heads, cfg.d_head),
+                                      dtype)
+            st["cross_v"] = jnp.zeros((batch, n_enc, cfg.n_kv_heads, cfg.d_head),
+                                      dtype)
+        blocks.append(tile(st))
+    return {"pos": jnp.zeros((), jnp.int32), "blocks": blocks}
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def _selection_ctx(cfg: ModelConfig, cache: Params, length: jax.Array
+                   ) -> tuple[SelectionContext, quant_lib.QuantizedTensor | None]:
+    tw = cfg.twilight
+    if not tw.enabled:
+        return SelectionContext(None, None, None, length, None), None
+    pm = PageMeta(kmax=cache["pmax"], kmin=cache["pmin"], page_size=tw.page_size)
+    qkeys = quant_lib.QuantizedTensor(
+        packed=cache["qk_packed"], scale=cache["qk_scale"], zero=cache["qk_zero"])
+    ctx = SelectionContext(keys=cache["k"], page_meta=pm, accum_scores=None,
+                           length=length, ds_channels=cache["ds_channels"])
+    return ctx, qkeys
+
+
+def _attn_decode(bp: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
+                 pos: jax.Array) -> tuple[jax.Array, Params, jax.Array]:
+    """x: (b, 1, d_model).  Returns (out, cache, mean pruned budget)."""
+    b = x.shape[0]
+    positions = jnp.asarray(pos)[None]  # (1,)
+    q, k, v = ly.attn_qkv(bp, cfg, x, positions)  # (b,1,hq,dh), (b,1,hkv,dh)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+
+    tw = cfg.twilight
+    if tw.enabled:
+        qt = quant_lib.quantize_int4(k.astype(jnp.float32))
+        cache["qk_packed"] = jax.lax.dynamic_update_slice(
+            cache["qk_packed"], qt.packed, (0, pos, 0, 0))
+        cache["qk_scale"] = jax.lax.dynamic_update_slice(
+            cache["qk_scale"], qt.scale, (0, pos, 0, 0))
+        cache["qk_zero"] = jax.lax.dynamic_update_slice(
+            cache["qk_zero"], qt.zero, (0, pos, 0, 0))
+        page = pos // tw.page_size
+        old_max = jax.lax.dynamic_slice(
+            cache["pmax"], (0, page, 0, 0), (b, 1) + cache["pmax"].shape[2:])
+        old_min = jax.lax.dynamic_slice(
+            cache["pmin"], (0, page, 0, 0), (b, 1) + cache["pmin"].shape[2:])
+        fresh = (pos % tw.page_size) == 0
+        new_max = jnp.where(fresh, k, jnp.maximum(old_max, k))
+        new_min = jnp.where(fresh, k, jnp.minimum(old_min, k))
+        cache["pmax"] = jax.lax.dynamic_update_slice(
+            cache["pmax"], new_max, (0, page, 0, 0))
+        cache["pmin"] = jax.lax.dynamic_update_slice(
+            cache["pmin"], new_min, (0, page, 0, 0))
+
+    length = jnp.full((b,), pos + 1, jnp.int32)
+    ctx, qkeys = _selection_ctx(cfg, cache, length)
+    tw_out = twilight_decode_attention(
+        q[:, 0], cache["k"], cache["v"], tw, ctx=ctx, qkeys=qkeys, length=length)
+    out = tw_out.out.reshape(b, 1, cfg.n_heads * cfg.d_head) @ bp["wo"]
+    budget = tw_out.stats.pruned_budget.astype(jnp.float32).mean()
+    return out.astype(x.dtype), cache, budget
+
+
+def _block_apply_decode(bp: Params, cfg: ModelConfig, spec: LayerSpec,
+                        x: jax.Array, st: Params, pos: jax.Array
+                        ) -> tuple[jax.Array, Params, jax.Array]:
+    """x: (b, 1, d_model) single-token block step."""
+    budget = jnp.zeros((), jnp.float32)
+    h = ly.rms_norm(x, bp["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        mix, st, budget = _attn_decode(bp["mixer"], cfg, h, st, pos)
+    elif spec.kind == "mamba":
+        mix1, mixer_st = ssm_lib.mamba_decode_step(
+            bp["mixer"], cfg, h[:, 0], {"conv": st["conv"], "ssm": st["ssm"]})
+        mix = mix1[:, None]
+        st = {**st, **mixer_st}
+    elif spec.kind == "mlstm":
+        keys4 = ("C", "n", "m", "conv")
+        mix1, mixer_st = xlstm_lib.mlstm_decode_step(
+            bp["mixer"], cfg, h[:, 0], {k: st[k] for k in keys4})
+        mix = mix1[:, None]
+        st = {**st, **mixer_st}
+    else:  # slstm
+        keys4 = ("c", "n", "h", "m")
+        mix1, mixer_st = xlstm_lib.slstm_decode_step(
+            bp["mixer"], cfg, h[:, 0], {k: st[k] for k in keys4})
+        mix = mix1[:, None]
+        st = {**st, **mixer_st}
+    x = x + mix
+
+    if "cross" in bp:
+        hc = ly.rms_norm(x, bp["norm_cross"], cfg.norm_eps)
+        qc, _, _ = ly.attn_qkv(bp["cross"], cfg, hc, None)
+        co = full_decode_attention(qc[:, 0], st["cross_k"], st["cross_v"])
+        co = co.reshape(x.shape[0], 1, -1) @ bp["cross"]["wo"]
+        x = x + co.astype(x.dtype)
+
+    if "ffn" in bp:
+        h2 = ly.rms_norm(x, bp["norm2"], cfg.norm_eps)
+        if spec.is_moe:
+            y, _ = ly.moe_apply(bp["ffn"], cfg, h2)
+        else:
+            y = ly.mlp_apply(bp["ffn"], h2)
+        x = x + y
+    return x, st, budget
+
+
+def decode_step(params: Params, cfg: ModelConfig, state: Params,
+                token: jax.Array) -> tuple[jax.Array, Params, dict[str, jax.Array]]:
+    """One serving step: token (b,) i32 -> (logits (b, vocab), state, stats)."""
+    specs, repeats = layer_schedule(cfg)
+    pos = state["pos"]
+    x = jnp.take(params["embed"], token, axis=0)[:, None, :]  # (b, 1, d)
+
+    def period_body(carry, xs_slice):
+        x, budget_sum, n_attn = carry
+        bp_slice, st_slice = xs_slice
+        new_states = []
+        for p_idx, spec in enumerate(specs):
+            x, st, budget = _block_apply_decode(
+                bp_slice[p_idx], cfg, spec, x, st_slice[p_idx], pos)
+            new_states.append(st)
+            if spec.kind == "attn":
+                budget_sum = budget_sum + budget
+                n_attn = n_attn + 1.0
+        return (x, budget_sum, n_attn), new_states
+
+    (x, budget_sum, n_attn), new_blocks = jax.lax.scan(
+        period_body,
+        (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (params["blocks"], state["blocks"]), length=repeats)
+
+    x = ly.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head)[:, 0]
+    new_state = {"pos": pos + 1, "blocks": new_blocks}
+    stats = {"mean_pruned_budget": budget_sum / jnp.maximum(n_attn, 1.0)}
+    return logits, new_state, stats
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence forward that also fills the decode caches
+# ---------------------------------------------------------------------------
+
+def _attn_prefill(bp: Params, cfg: ModelConfig, h: jax.Array,
+                  positions: jax.Array, n_max: int) -> tuple[jax.Array, Params]:
+    b, s, _ = h.shape
+    q, k, v = ly.attn_qkv(bp, cfg, h, positions)
+    out = mha_attention(q, k, v, causal=True)
+    out = out.reshape(b, s, cfg.n_heads * cfg.d_head) @ bp["wo"]
+
+    cache = _attn_cache_init(cfg, b, n_max)
+    cache["k"] = cache["k"].at[:, :s].set(k)
+    cache["v"] = cache["v"].at[:, :s].set(v)
+    tw = cfg.twilight
+    if tw.enabled:
+        qt = quant_lib.quantize_int4(k.astype(jnp.float32))
+        cache["qk_packed"] = cache["qk_packed"].at[:, :s].set(qt.packed)
+        cache["qk_scale"] = cache["qk_scale"].at[:, :s].set(qt.scale)
+        cache["qk_zero"] = cache["qk_zero"].at[:, :s].set(qt.zero)
+        ps = tw.page_size
+        n_pages_live = s // ps
+        if n_pages_live:
+            kp = k[:, :n_pages_live * ps].reshape(b, n_pages_live, ps,
+                                                  cfg.n_kv_heads, cfg.d_head)
+            cache["pmax"] = cache["pmax"].at[:, :n_pages_live].set(kp.max(axis=2))
+            cache["pmin"] = cache["pmin"].at[:, :n_pages_live].set(kp.min(axis=2))
+        rem = s - n_pages_live * ps
+        if rem:
+            kt = k[:, n_pages_live * ps:]
+            cache["pmax"] = cache["pmax"].at[:, n_pages_live].set(kt.max(axis=1))
+            cache["pmin"] = cache["pmin"].at[:, n_pages_live].set(kt.min(axis=1))
+        # Double-Sparsity label channels calibrated on this prompt's keys.
+        stat = jnp.mean(jnp.abs(k.astype(jnp.float32)), axis=(0, 1))  # (hkv, dh)
+        cache["ds_channels"] = jax.lax.top_k(stat, 16)[1].astype(jnp.int32)
+    return out.astype(h.dtype), cache
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array],
+            n_max: int) -> tuple[jax.Array, Params]:
+    """Process the prompt, returning (full logits, primed decode state)."""
+    specs, repeats = layer_schedule(cfg)
+    tokens = batch["tokens"]
+    x = constrain(jnp.take(params["embed"], tokens, axis=0), "residual")
+
+    memory = None
+    if cfg.frontend == "audio" and cfg.encoder_layers:
+        memory = _encode(params, cfg, batch["frames"], remat=False)
+    elif cfg.frontend == "vision":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+
+    def period_body(carry, bp_slice):
+        x = carry
+        new_states = []
+        for p_idx, spec in enumerate(specs):
+            bp = bp_slice[p_idx]
+            h = ly.rms_norm(x, bp["norm1"], cfg.norm_eps)
+            if spec.kind == "attn":
+                mix, st = _attn_prefill(bp["mixer"], cfg, h, positions, n_max)
+            elif spec.kind == "mamba":
+                mix, st = ssm_lib.mamba_apply(bp["mixer"], cfg, h,
+                                              return_state=True)
+            elif spec.kind == "mlstm":
+                mix, st = xlstm_lib.mlstm_apply(bp["mixer"], cfg, h,
+                                                return_state=True)
+            else:
+                mix, st = xlstm_lib.slstm_apply(bp["mixer"], cfg, h,
+                                                return_state=True)
+            x = x + mix
+            if "cross" in bp and memory is not None:
+                hc = ly.rms_norm(x, bp["norm_cross"], cfg.norm_eps)
+                mem_kv = ly.cross_kv(bp["cross"], cfg, memory)
+                st["cross_k"], st["cross_v"] = mem_kv
+                x = x + ly.attn_apply(bp["cross"], cfg, hc, positions,
+                                      memory=mem_kv)
+            if "ffn" in bp:
+                h2 = ly.rms_norm(x, bp["norm2"], cfg.norm_eps)
+                if spec.is_moe:
+                    y, _ = ly.moe_apply(bp["ffn"], cfg, h2)
+                else:
+                    y = ly.mlp_apply(bp["ffn"], h2)
+                x = x + y
+            new_states.append(st)
+        return x, new_states
+
+    x, blocks = jax.lax.scan(period_body, x, params["blocks"], length=repeats)
+    x = ly.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain(x @ head, "logits")
+    state = {"pos": jnp.asarray(s, jnp.int32), "blocks": blocks}
+    return logits, state

@@ -1,0 +1,192 @@
+"""Mamba-1 selective SSM block (Jamba's recurrent mixer).
+
+Train path: selective scan over time via ``jax.lax.scan`` (O(1)-memory,
+O(s) sequential) with an optional chunked ``associative_scan`` mode that
+trades VMEM/HBM for parallelism — the hillclimb knob for the hybrid arch.
+Decode path: single-step state update (O(1) per token — why Jamba runs
+`long_500k` natively).
+
+State per layer: conv tail (b, d_conv-1, d_inner) + SSM state
+(b, d_inner, d_state).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.sharding.act import constrain
+
+Params = dict[str, Any]
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    ssm = cfg.ssm
+    assert ssm is not None
+    d_inner = ssm.expand * cfg.d_model
+    dt_rank = ssm.dt_rank or max(1, -(-cfg.d_model // 16))
+    return d_inner, ssm.d_state, ssm.d_conv, dt_rank
+
+
+def mamba_init(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    d_inner, d_state, d_conv, dt_rank = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    scale = cfg.d_model ** -0.5
+    p: Params = {
+        "in_proj": (jax.random.normal(ks[0], (cfg.d_model, 2 * d_inner), jnp.float32)
+                    * scale).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner), jnp.float32)
+                   * (d_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (d_inner, dt_rank + 2 * d_state),
+                                     jnp.float32) * (d_inner ** -0.5)).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, d_inner), jnp.float32)
+                    * (dt_rank ** -0.5)).astype(dtype),
+        "dt_bias": jnp.full((d_inner,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_inner, d_state))),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (d_inner, cfg.d_model), jnp.float32)
+                     * (d_inner ** -0.5)).astype(dtype),
+    }
+    return p
+
+
+def _ssm_inputs(params: Params, cfg: ModelConfig, u: jax.Array):
+    """Per-timestep SSM coefficients from the post-conv activations.
+
+    u: (b, s, d_inner) -> delta (b,s,d_inner), B (b,s,d_state), C (b,s,d_state).
+    """
+    _, d_state, _, dt_rank = _dims(cfg)
+    proj = u @ params["x_proj"]
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    delta = jax.nn.softplus(dt @ params["dt_proj"]
+                            + params["dt_bias"].astype(dt.dtype))
+    return delta.astype(jnp.float32), Bc.astype(jnp.float32), Cc.astype(jnp.float32)
+
+
+def _conv_causal(params: Params, x: jax.Array, tail: jax.Array | None):
+    """Depthwise causal conv along time.  x: (b, s, d_inner)."""
+    d_conv = params["conv_w"].shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], d_conv - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    new_tail = xp[:, -(d_conv - 1):] if d_conv > 1 else tail
+    out = sum(
+        xp[:, i:i + x.shape[1]] * params["conv_w"][i]
+        for i in range(d_conv)
+    ) + params["conv_b"]
+    return out, new_tail
+
+
+def mamba_apply(params: Params, cfg: ModelConfig, x: jax.Array,
+                *, chunked: bool = False, chunk: int = 128,
+                return_state: bool = False):
+    """Full-sequence selective scan.  x: (b, s, d_model) -> same.
+
+    With ``return_state`` also returns the final {"conv", "ssm"} state for
+    prefill -> decode handoff.
+    """
+    b, s, _ = x.shape
+    d_inner, d_state, _, _ = _dims(cfg)
+    xz = x @ params["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_tail = _conv_causal(params, u, None)
+    u = jax.nn.silu(u)
+    delta, Bc, Cc = _ssm_inputs(params, cfg, u)
+    A = -jnp.exp(params["A_log"])  # (d_inner, d_state)
+
+    uf = u.astype(jnp.float32)
+    # Discretize: a_t = exp(delta_t * A), b_t = delta_t * B_t * u_t.
+    if chunked:
+        y, h_final = _chunked_scan(A, delta, Bc, Cc, uf, chunk)
+    else:
+        def step(h, inp):
+            d_t, b_t, c_t, u_t = inp  # (b,d_inner) (b,d_state) (b,d_state) (b,d_inner)
+            a_t = jnp.exp(d_t[..., None] * A[None])  # (b, d_inner, d_state)
+            h = a_t * h + (d_t * u_t)[..., None] * b_t[:, None, :]
+            y_t = jnp.einsum("bds,bs->bd", h, c_t)
+            return h, y_t
+
+        h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+        xs = (jnp.moveaxis(delta, 1, 0), jnp.moveaxis(Bc, 1, 0),
+              jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(uf, 1, 0))
+        h_final, ys = jax.lax.scan(step, h0, xs)
+        y = jnp.moveaxis(ys, 0, 1)  # (b, s, d_inner)
+
+    y = y + uf * params["D"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = (y.astype(x.dtype)) @ params["out_proj"]
+    if return_state:
+        return out, {"conv": conv_tail, "ssm": h_final}
+    return out
+
+
+def _chunked_scan(A, delta, Bc, Cc, uf, chunk: int):
+    """Chunk-parallel scan: associative within chunks, sequential across."""
+    b, s, d_inner = uf.shape
+    d_state = A.shape[-1]
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by chunk {chunk}")
+    nck = s // chunk
+
+    a = jnp.exp(delta[..., None] * A[None, None])  # (b, s, d_inner, d_state)
+    bx = (delta * uf)[..., None] * Bc[:, :, None, :]
+    a = constrain(a, "ssm_inner")
+    bx = constrain(bx, "ssm_inner")
+
+    a = a.reshape(b, nck, chunk, d_inner, d_state)
+    bx = bx.reshape(b, nck, chunk, d_inner, d_state)
+    Ccr = Cc.reshape(b, nck, chunk, d_state)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    # Within-chunk inclusive scans (parallel over b, nck).
+    a_sc, b_sc = jax.lax.associative_scan(assoc, (a, bx), axis=2)
+
+    def carry_step(h, inp):
+        a_sc_c, b_sc_c, c_c = inp  # (b, chunk, d_inner, d_state) ...
+        h_all = a_sc_c * h[:, None] + b_sc_c
+        y_c = jnp.einsum("bcds,bcs->bcd", h_all, c_c)
+        return h_all[:, -1], y_c
+
+    h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+    xs = (jnp.moveaxis(a_sc, 1, 0), jnp.moveaxis(b_sc, 1, 0),
+          jnp.moveaxis(Ccr, 1, 0))
+    h_final, ys = jax.lax.scan(carry_step, h0, xs)
+    y = constrain(jnp.moveaxis(ys, 0, 1).reshape(b, s, d_inner), "ssm_y")
+    return y, h_final
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int) -> dict[str, jax.Array]:
+    d_inner, d_state, d_conv, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), jnp.dtype(cfg.dtype)),
+        "ssm": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+def mamba_decode_step(params: Params, cfg: ModelConfig, x: jax.Array,
+                      state: dict[str, jax.Array]
+                      ) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """One-token update.  x: (b, d_model)."""
+    xz = x[:, None, :] @ params["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)  # (b, 1, d_inner)
+    u, new_tail = _conv_causal(params, u, state["conv"])
+    u = jax.nn.silu(u)
+    delta, Bc, Cc = _ssm_inputs(params, cfg, u)
+    A = -jnp.exp(params["A_log"])
+    d_t, b_t, c_t, u_t = delta[:, 0], Bc[:, 0], Cc[:, 0], u[:, 0].astype(jnp.float32)
+    a_t = jnp.exp(d_t[..., None] * A[None])
+    h = a_t * state["ssm"] + (d_t * u_t)[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, c_t) + u_t * params["D"]
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = y.astype(x.dtype) @ params["out_proj"]
+    return out, {"conv": new_tail, "ssm": h}

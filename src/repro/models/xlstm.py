@@ -1,0 +1,312 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory) [2405.04517].
+
+Both use exponential gating with the max-state stabilizer.  Train path is a
+time scan (O(1) memory); decode is the single-step recurrence — xLSTM has no
+KV cache, so the Twilight technique is inapplicable here (DESIGN
+§Arch-applicability) and `long_500k` decodes natively in O(1).
+
+State shapes per layer (batch b, heads nh, head dim dh):
+  mLSTM: C (b, nh, dh, dh), n (b, nh, dh), m (b, nh), conv tail
+  sLSTM: c, n, h (b, nh, dh), m (b, nh)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+Params = dict[str, Any]
+
+
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    d_inner = int(cfg.xlstm.proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    # Round the inner dim to a multiple of heads.
+    d_inner -= d_inner % nh
+    return d_inner, nh, d_inner // nh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    d_inner, nh, dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    s_in = cfg.d_model ** -0.5
+    s_inner = d_inner ** -0.5
+    conv_k = cfg.xlstm.conv_kernel
+    return {
+        "up": (jax.random.normal(ks[0], (cfg.d_model, 2 * d_inner), jnp.float32)
+               * s_in).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_k, d_inner), jnp.float32)
+                   * (conv_k ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "wq": (jax.random.normal(ks[2], (d_inner, d_inner), jnp.float32)
+               * s_inner).astype(dtype),
+        "wk": (jax.random.normal(ks[3], (d_inner, d_inner), jnp.float32)
+               * s_inner).astype(dtype),
+        "wv": (jax.random.normal(ks[4], (d_inner, d_inner), jnp.float32)
+               * s_inner).astype(dtype),
+        "w_if": (jax.random.normal(ks[5], (d_inner, 2 * nh), jnp.float32)
+                 * s_inner).astype(dtype),
+        "b_if": jnp.concatenate([jnp.full((nh,), -2.0), jnp.full((nh,), 2.0)]
+                                ).astype(dtype),
+        "skip_gate": (jax.random.normal(ks[6], (d_inner, d_inner), jnp.float32)
+                      * s_inner).astype(dtype),
+        "down": (jax.random.normal(ks[7], (d_inner, cfg.d_model), jnp.float32)
+                 * s_inner).astype(dtype),
+    }
+
+
+def _mlstm_gates_qkv(params: Params, cfg: ModelConfig, x: jax.Array,
+                     conv_tail: jax.Array | None):
+    """x: (b, s, d_model) -> q,k,v (b,s,nh,dh), i,f (b,s,nh), z, new tail."""
+    d_inner, nh, dh = _mlstm_dims(cfg)
+    up = x @ params["up"]
+    u, z = jnp.split(up, 2, axis=-1)
+    conv_k = params["conv_w"].shape[0]
+    if conv_tail is None:
+        conv_tail = jnp.zeros((x.shape[0], conv_k - 1, d_inner), u.dtype)
+    xp = jnp.concatenate([conv_tail, u], axis=1)
+    new_tail = xp[:, -(conv_k - 1):]
+    uc = sum(xp[:, i:i + u.shape[1]] * params["conv_w"][i] for i in range(conv_k))
+    uc = jax.nn.silu(uc + params["conv_b"])
+    b, s, _ = u.shape
+    q = (uc @ params["wq"]).reshape(b, s, nh, dh)
+    k = (uc @ params["wk"]).reshape(b, s, nh, dh) * (dh ** -0.5)
+    v = (u @ params["wv"]).reshape(b, s, nh, dh)
+    gates = (uc @ params["w_if"]) + params["b_if"]
+    i_pre, f_pre = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # (b,s,nh)
+    return q, k, v, i_pre, f_pre, z, new_tail
+
+
+def _mlstm_step(carry, inp):
+    C, n, m = carry  # (b,nh,dh,dh), (b,nh,dh), (b,nh)
+    q, k, v, i_pre, f_pre = inp
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    log_f = -jax.nn.softplus(-f_pre)  # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)  # (b, nh)
+    f_g = jnp.exp(log_f + m - m_new)
+    C = f_g[..., None, None] * C + i_g[..., None, None] * (
+        vf[..., :, None] * kf[..., None, :])  # v k^T
+    n = f_g[..., None] * n + i_g[..., None] * kf
+    num = jnp.einsum("bhij,bhj->bhi", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, qf)),
+                      jnp.exp(-m_new))[..., None]
+    h = num / den
+    return (C, n, m_new), h
+
+
+def mlstm_apply(params: Params, cfg: ModelConfig, x: jax.Array,
+                *, return_state: bool = False, chunk: int = 512):
+    """Full-sequence mLSTM.
+
+    Uses the **chunkwise-parallel** form (intra-chunk quadratic with decay
+    matrix, inter-chunk recurrence on the matrix memory) whenever the
+    sequence divides the chunk size — the per-timestep recurrent scan would
+    otherwise stash a (b, nh, dh, dh) matrix state per step for the
+    backward pass (terabytes at 4k x 398 layers-equivalents); chunkwise
+    stores one carry per chunk instead.  Falls back to the step scan for
+    short/odd lengths, and the step scan remains the correctness oracle.
+    """
+    b, s, _ = x.shape
+    d_inner, nh, dh = _mlstm_dims(cfg)
+    q, k, v, i_pre, f_pre, z, conv_tail = _mlstm_gates_qkv(params, cfg, x, None)
+    if s % chunk == 0 and s > chunk:
+        (C, n, m), h = _mlstm_chunkwise(q, k, v, i_pre, f_pre, chunk)
+    else:
+        carry = (jnp.zeros((b, nh, dh, dh), jnp.float32),
+                 jnp.zeros((b, nh, dh), jnp.float32),
+                 jnp.zeros((b, nh), jnp.float32))
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_pre, f_pre))
+        (C, n, m), hs = jax.lax.scan(_mlstm_step, carry, xs)
+        h = jnp.moveaxis(hs, 0, 1)  # (b, s, nh, dh)
+    h = h.reshape(b, s, d_inner).astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    out = h @ params["down"]
+    if return_state:
+        return out, {"C": C, "n": n, "m": m, "conv": conv_tail}
+    return out
+
+
+def _mlstm_chunkwise(q, k, v, i_pre, f_pre, chunk: int):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (b, s, nh, dh); i_pre, f_pre: (b, s, nh).
+    Returns final (C, n, m) state and h (b, s, nh, dh).
+    """
+    b, s, nh, dh = q.shape
+    nc = s // chunk
+
+    def to_chunks(t, trailing):
+        return jnp.moveaxis(
+            t.reshape((b, nc, chunk) + trailing), 1, 0)  # (nc, b, chunk, ...)
+
+    qc = to_chunks(q.astype(jnp.float32), (nh, dh))
+    kc = to_chunks(k.astype(jnp.float32), (nh, dh))
+    vc = to_chunks(v.astype(jnp.float32), (nh, dh))
+    ic = to_chunks(i_pre, (nh,))
+    fc = to_chunks(f_pre, (nh,))
+
+    def chunk_body(carry, inp):
+        Ct, nt, m_prev = carry  # (b,nh,dh,dh), (b,nh,dh), (b,nh)
+        qb, kb, vb, ib, fb = inp  # (b, c, nh, ...)
+        log_f = -jax.nn.softplus(-fb)  # (b, c, nh)
+        blc = jnp.cumsum(log_f, axis=1)  # inclusive within-chunk cumsum
+        B = blc[:, -1]  # (b, nh)
+
+        # Intra-chunk decay matrix D[t, s] = blc_t - blc_s + i_s (s <= t).
+        D = (blc[:, :, None, :] - blc[:, None, :, :]
+             + ib[:, None, :, :])  # (b, t, s, nh)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        D = jnp.where(tri[None, :, :, None], D, -jnp.inf)
+        m_intra = jnp.max(D, axis=2)  # (b, t, nh)
+        m_inter = m_prev[:, None, :] + blc  # (b, t, nh)
+        m_t = jnp.maximum(m_inter, m_intra)
+
+        W = jnp.exp(D - m_t[:, :, None, :])  # (b, t, s, nh)
+        S = jnp.einsum("bthd,bshd->btsh", qb, kb)  # q_t . k_s
+        num_intra = jnp.einsum("btsh,btsh,bshd->bthd", W, S, vb)
+        den_intra = jnp.einsum("btsh,btsh->bth", W, S)
+
+        scale_inter = jnp.exp(m_inter - m_t)  # (b, t, nh)
+        Cq = jnp.einsum("bhij,bthj->bthi", Ct, qb)  # (b, t, nh, dh)
+        num = num_intra + scale_inter[..., None] * Cq
+        den_inter = jnp.einsum("bhj,bthj->bth", nt, qb)
+        den = den_intra + scale_inter * den_inter
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        h = num / den  # (b, t, nh, dh)
+
+        # Carry update to the chunk boundary.
+        src = B[:, None, :] - blc + ib  # (b, s, nh): decay of source s to end
+        m_state = jnp.maximum(m_prev + B, jnp.max(src, axis=1))  # (b, nh)
+        w_src = jnp.exp(src - m_state[:, None, :])  # (b, s, nh)
+        C_new = (jnp.exp(m_prev + B - m_state)[..., None, None] * Ct
+                 + jnp.einsum("bsh,bshi,bshj->bhij", w_src, vb, kb))
+        n_new = (jnp.exp(m_prev + B - m_state)[..., None] * nt
+                 + jnp.einsum("bsh,bshj->bhj", w_src, kb))
+        return (C_new, n_new, m_state), h
+
+    carry = (jnp.zeros((b, nh, dh, dh), jnp.float32),
+             jnp.zeros((b, nh, dh), jnp.float32),
+             jnp.zeros((b, nh), jnp.float32))
+    carry, hs = jax.lax.scan(jax.checkpoint(chunk_body), carry,
+                             (qc, kc, vc, ic, fc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, nh, dh)
+    return carry, h
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> dict[str, jax.Array]:
+    d_inner, nh, dh = _mlstm_dims(cfg)
+    conv_k = cfg.xlstm.conv_kernel
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.zeros((batch, nh), jnp.float32),
+        "conv": jnp.zeros((batch, conv_k - 1, d_inner), jnp.dtype(cfg.dtype)),
+    }
+
+
+def mlstm_decode_step(params: Params, cfg: ModelConfig, x: jax.Array,
+                      state: dict[str, jax.Array]):
+    d_inner, nh, dh = _mlstm_dims(cfg)
+    q, k, v, i_pre, f_pre, z, new_tail = _mlstm_gates_qkv(
+        params, cfg, x[:, None, :], state["conv"])
+    carry = (state["C"], state["n"], state["m"])
+    (C, n, m), h = _mlstm_step(carry, (q[:, 0], k[:, 0], v[:, 0],
+                                       i_pre[:, 0], f_pre[:, 0]))
+    h = h.reshape(x.shape[0], d_inner).astype(x.dtype) * jax.nn.silu(z[:, 0])
+    out = h @ params["down"]
+    return out, {"C": C, "n": n, "m": m, "conv": new_tail}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    nh, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    ks = jax.random.split(key, 3)
+    s_in = cfg.d_model ** -0.5
+    return {
+        # Input projections for i, f, z, o gates.
+        "w_gates": (jax.random.normal(ks[0], (cfg.d_model, 4 * cfg.d_model),
+                                      jnp.float32) * s_in).astype(dtype),
+        # Block-diagonal (per-head) recurrent weights.
+        "r_gates": (jax.random.normal(ks[1], (4, nh, dh, dh), jnp.float32)
+                    * (dh ** -0.5)).astype(dtype),
+        "b_gates": jnp.zeros((4 * cfg.d_model,), dtype),
+        "down": (jax.random.normal(ks[2], (cfg.d_model, cfg.d_model), jnp.float32)
+                 * s_in).astype(dtype),
+    }
+
+
+def _slstm_step(params_f32, cfg: ModelConfig, carry, wx_t):
+    """wx_t: (b, 4*d_model) precomputed input contribution at time t."""
+    nh, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    c, n, h, m = carry  # (b, nh, dh) x3, (b, nh)
+    r = params_f32  # (4, nh, dh, dh)
+    rh = jnp.einsum("ghij,bhj->bghi", r, h)  # (b, 4, nh, dh)
+    pre = wx_t.reshape(wx_t.shape[0], 4, nh, dh).astype(jnp.float32) + rh
+    i_pre, f_pre, z_pre, o_pre = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    # Stabilized exponential gating (per head: use max over the head dim of
+    # the raw gate pre-activations as in the xLSTM reference).
+    log_f = -jax.nn.softplus(-f_pre)  # (b, nh, dh)
+    m_new = jnp.maximum(jnp.max(log_f, -1) + m, jnp.max(i_pre, -1))  # (b, nh)
+    i_g = jnp.exp(i_pre - m_new[..., None])
+    f_g = jnp.exp(log_f + m[..., None] - m_new[..., None])
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c = f_g * c + i_g * z
+    n = f_g * n + i_g
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h_new, m_new), h_new
+
+
+def slstm_apply(params: Params, cfg: ModelConfig, x: jax.Array,
+                *, return_state: bool = False):
+    b, s, d = x.shape
+    nh, dh = cfg.n_heads, d // cfg.n_heads
+    wx = x @ params["w_gates"] + params["b_gates"]  # (b, s, 4d) — bf16 xs;
+    # the step computes in f32 (saved scan inputs stay half-size).
+    carry = (jnp.zeros((b, nh, dh), jnp.float32),
+             jnp.zeros((b, nh, dh), jnp.float32),
+             jnp.zeros((b, nh, dh), jnp.float32),
+             jnp.zeros((b, nh), jnp.float32))
+    r = params["r_gates"].astype(jnp.float32)
+
+    def step(carry, wx_t):
+        return _slstm_step(r, cfg, carry, wx_t)
+
+    (c, n, h_st, m), hs = jax.lax.scan(step, carry,
+                                       jnp.moveaxis(wx, 1, 0).astype(x.dtype))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    out = h @ params["down"]
+    if return_state:
+        return out, {"c": c, "n": n, "h": h_st, "m": m}
+    return out
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> dict[str, jax.Array]:
+    nh, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = lambda *shape: jnp.zeros(shape, jnp.float32)  # noqa: E731
+    return {"c": z(batch, nh, dh), "n": z(batch, nh, dh),
+            "h": z(batch, nh, dh), "m": z(batch, nh)}
+
+
+def slstm_decode_step(params: Params, cfg: ModelConfig, x: jax.Array,
+                      state: dict[str, jax.Array]):
+    wx = x @ params["w_gates"] + params["b_gates"]  # (b, 4d)
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    r = params["r_gates"].astype(jnp.float32)
+    (c, n, h, m), h_out = _slstm_step(r, cfg, carry, wx)
+    out = h_out.reshape(x.shape[0], -1).astype(x.dtype) @ params["down"]
+    return out, {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,20 @@
+"""LR schedules as pure functions of the step (jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int, peak: float):
+    s = jnp.asarray(step, jnp.float32)
+    return peak * jnp.minimum(1.0, (s + 1.0) / max(1, warmup_steps))
+
+
+def cosine_schedule(step, warmup_steps: int, total_steps: int, peak: float,
+                    floor: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(step, warmup_steps, peak)
+    frac = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps),
+                    0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(s < warmup_steps, warm, peak * cos)

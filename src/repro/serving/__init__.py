@@ -1,0 +1,5 @@
+from repro.serving.engine import DecodeEngine, GenerationResult, Request
+from repro.serving.sampler import sample_token, top_p_sample
+
+__all__ = ["DecodeEngine", "GenerationResult", "Request", "sample_token",
+           "top_p_sample"]

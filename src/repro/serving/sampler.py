@@ -1,0 +1,30 @@
+"""Token sampling.  Pleasing symmetry: the same top-p machinery the paper
+moved *into* attention is used here for its original purpose (nucleus
+sampling of the output distribution), via the identical binary-search
+threshold."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topp import topp_mask
+
+
+def top_p_sample(key: jax.Array, logits: jax.Array, p: float = 0.9,
+                 temperature: float = 1.0) -> jax.Array:
+    """Nucleus sampling.  logits: (b, vocab) -> (b,) i32."""
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    probs = jax.nn.softmax(logits.astype(jnp.float32) / temperature, axis=-1)
+    kept = topp_mask(probs, p).mask
+    masked = jnp.where(kept, logits, jnp.finfo(jnp.float32).min)
+    return jax.random.categorical(key, masked.astype(jnp.float32), axis=-1
+                                  ).astype(jnp.int32)
+
+
+def sample_token(key: jax.Array, logits: jax.Array, *, greedy: bool = False,
+                 p: float = 0.9, temperature: float = 1.0) -> jax.Array:
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return top_p_sample(key, logits, p=p, temperature=temperature)

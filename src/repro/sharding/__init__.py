@@ -1,0 +1,17 @@
+from repro.sharding.rules import (
+    MeshAxes,
+    batch_specs,
+    decode_state_specs,
+    logits_spec,
+    opt_state_specs,
+    param_specs,
+)
+
+__all__ = [
+    "MeshAxes",
+    "batch_specs",
+    "decode_state_specs",
+    "logits_spec",
+    "opt_state_specs",
+    "param_specs",
+]

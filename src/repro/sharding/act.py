@@ -1,0 +1,50 @@
+"""Activation-sharding constraints, settable per launch context.
+
+The model code is sharding-agnostic; the launcher installs logical-axis
+rules here and the model calls :func:`constrain` at block boundaries.
+Without installed rules (unit tests, single-device runs) it is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> dict[str, P] | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def activation_rules(rules: dict[str, P]):
+    """rules: logical name -> PartitionSpec, e.g. {"residual": P(("data",), None, None)}."""
+    prev = _rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain(x: Any, name: str) -> Any:
+    rules = _rules()
+    if rules is None or name not in rules:
+        return x
+    spec = rules[name]
+    if not isinstance(spec, P):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def get_value(name: str, default: Any = None) -> Any:
+    """Non-spec launch hints (e.g. 'moe_shards': local-dispatch shard count)."""
+    rules = _rules()
+    if rules is None:
+        return default
+    return rules.get(name, default)

@@ -1,0 +1,252 @@
+"""Partitioning rules for the production mesh (DESIGN §4).
+
+Axes:
+  * ``model`` — tensor parallelism: heads / d_ff / experts / vocab.
+  * ``data``  — batch parallelism AND FSDP over the non-tensor dim of every
+    ≥2-D parameter (keeps Jamba-398B's Adam state under 10 GB/chip).
+  * ``pod``   — second data axis in the multi-pod mesh; joins the FSDP axes
+    so cross-pod traffic is gradient reduce-scatter + param all-gather.
+
+Rules are name+shape driven over the param tree paths; decode-state rules
+additionally depend on (batch, kv_heads) divisibility — when heads cannot
+shard over ``model`` the cache shards its *sequence* dim instead
+(flash-decoding), and long_500k (batch=1) sequence-shards over every axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical axis groups for a concrete mesh."""
+
+    fsdp: tuple[str, ...]  # ("data",) or ("pod", "data")
+    tensor: str = "model"
+    batch: tuple[str, ...] = ()  # defaults to fsdp
+
+    def __post_init__(self):
+        if not self.batch:
+            object.__setattr__(self, "batch", self.fsdp)
+
+    @classmethod
+    def for_mesh(cls, mesh: jax.sharding.Mesh) -> "MeshAxes":
+        names = mesh.axis_names
+        if "pod" in names:
+            return cls(fsdp=("pod", "data"))
+        return cls(fsdp=("data",))
+
+    def sizes(self, mesh: jax.sharding.Mesh) -> tuple[int, int]:
+        fsdp = 1
+        for a in self.fsdp:
+            fsdp *= mesh.shape[a]
+        return fsdp, mesh.shape[self.tensor]
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def _fsdp_if(axes: MeshAxes, mesh, dim: int):
+    if not axes.fsdp:
+        return None
+    fsdp_size, _ = axes.sizes(mesh)
+    return axes.fsdp if _divisible(dim, fsdp_size) else None
+
+
+def _tensor_if(axes: MeshAxes, mesh, dim: int):
+    _, t = axes.sizes(mesh)
+    return axes.tensor if _divisible(dim, t) else None
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _param_leaf_spec(name: str, shape: tuple[int, ...], axes: MeshAxes,
+                     mesh) -> P:
+    """Rule table keyed on the leaf name (last path component)."""
+    nd = len(shape)
+    t = lambda d: _tensor_if(axes, mesh, d)  # noqa: E731
+    f = lambda d: _fsdp_if(axes, mesh, d)  # noqa: E731
+
+    if nd <= 1:
+        # Biases/norm scales: shard 'model-ish' vectors when large.
+        if name in ("bq", "bk", "bv", "conv_b", "dt_bias", "D", "b_gates") \
+                and shape and shape[0] >= 1024:
+            return P(t(shape[0]))
+        return P()
+
+    if name == "embed":  # (V, d): vocab -> model, d -> fsdp
+        return P(t(shape[0]), f(shape[1]))
+    if name == "lm_head":  # (d, V)
+        return P(f(shape[0]), t(shape[1]))
+    if name in ("wq", "wk", "wv", "wi", "wg", "up", "in_proj", "w_gates",
+                "skip_gate", "w_if"):
+        if nd == 3:  # MoE experts (E, d, d_e): experts -> model, d -> fsdp
+            return P(t(shape[0]), f(shape[1]), None)
+        return P(f(shape[0]), t(shape[1]))
+    if name in ("wo", "down", "out_proj", "dt_proj"):
+        if nd == 3:  # MoE (E, d_e, d)
+            return P(t(shape[0]), None, f(shape[2]))
+        return P(t(shape[0]), f(shape[1]))
+    if name == "router":  # (d, E) — small, replicate
+        return P()
+    if name == "conv_w":  # (k, d_inner)
+        return P(None, t(shape[1]))
+    if name in ("x_proj", "A_log"):  # (d_inner, r)
+        return P(t(shape[0]), None)
+    if name == "r_gates":  # (4, nh, dh, dh) — small block-diagonal, replicate
+        return P()
+    # Fallback: shard the largest dim over tensor, next over fsdp.
+    order = sorted(range(nd), key=lambda i: -shape[i])
+    spec = [None] * nd
+    if shape[order[0]] >= 1024:
+        spec[order[0]] = t(shape[order[0]])
+    return P(*spec)
+
+
+def param_specs(params: Tree, cfg: ModelConfig, mesh, *,
+                layout: str = "fsdp") -> Tree:
+    """PartitionSpec tree matching ``params``.
+
+    layout:
+      * "fsdp"       — tensor dim over `model`, complementary dim over the
+        fsdp axes (training default; Adam states inherit it).
+      * "model_only" — tensor dim over `model` only; no fsdp dim.  The
+        inference layout: weights stay resident per chip (P/16), no
+        per-step shard gathers or partial-sum all-reduces over `data`.
+
+    Stacked block params carry a leading repeats dim -> prefix None.
+    """
+    axes = MeshAxes.for_mesh(mesh)
+    if layout == "model_only":
+        axes = MeshAxes(fsdp=(), tensor=axes.tensor, batch=axes.batch)
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        name = ps.split("/")[-1]
+        shape = leaf.shape
+        stacked = "/blocks/" in f"/{ps}" or ps.startswith("blocks/")
+        if stacked and len(shape) >= 1:
+            inner = _param_leaf_spec(name, shape[1:], axes, mesh)
+            return P(None, *inner)
+        return _param_leaf_spec(name, shape, axes, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def opt_state_specs(opt_state: Tree, params_spec: Tree) -> Tree:
+    """Adam m/v mirror the param sharding; step is replicated."""
+    return {
+        "m": params_spec,
+        "v": params_spec,
+        "step": P(),
+    }
+
+
+def batch_specs(batch: Tree, axes: MeshAxes) -> Tree:
+    """Host batch: leading (global batch) dim over the batch axes."""
+    def spec(path, leaf):
+        del path
+        nd = len(leaf.shape)
+        return P(axes.batch, *([None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def logits_spec(axes: MeshAxes, mesh, vocab: int, *, ndim: int = 3) -> P:
+    t = _tensor_if(axes, mesh, vocab)
+    if ndim == 3:
+        return P(axes.batch, None, t)
+    return P(axes.batch, t)
+
+
+# ---------------------------------------------------------------------------
+# Decode state sharding
+# ---------------------------------------------------------------------------
+
+def _kv_layout(axes: MeshAxes, mesh, batch: int, seq: int, heads: int,
+               *, kv_seq_shard: bool = True) -> tuple[Any, Any, Any]:
+    """(batch_axis, seq_axis, head_axis) for cache tensors (b, n, h, d)."""
+    fsdp_size, t_size = axes.sizes(mesh)
+    if batch == 1:
+        # long-context single request: pure sequence parallelism over
+        # every available axis (flash-decoding collectives).
+        all_axes = tuple([*axes.fsdp, axes.tensor])
+        total = fsdp_size * t_size
+        if _divisible(seq, total):
+            return None, all_axes, None
+        return None, axes.tensor if _divisible(seq, t_size) else None, None
+    b_ax = axes.batch if _divisible(batch, fsdp_size) else None
+    if _divisible(heads, t_size):
+        return b_ax, None, axes.tensor
+    # GQA heads too few for the model axis: shard the sequence instead
+    # (flash-decoding), unless disabled — batch-only replicates the cache
+    # over `model` but avoids the seq<->head reshard traffic.
+    if kv_seq_shard:
+        return b_ax, (axes.tensor if _divisible(seq, t_size) else None), None
+    return b_ax, None, None
+
+
+def decode_state_specs(state: Tree, cfg: ModelConfig, mesh, *,
+                       batch: int, capacity: int,
+                       kv_seq_shard: bool = True) -> Tree:
+    axes = MeshAxes.for_mesh(mesh)
+    b_ax, s_ax, h_ax = _kv_layout(axes, mesh, batch, capacity,
+                                  cfg.n_kv_heads, kv_seq_shard=kv_seq_shard)
+    fsdp_size, t_size = axes.sizes(mesh)
+    page_cap = capacity // cfg.twilight.page_size if cfg.twilight.enabled else 0
+    p_ax = s_ax if (s_ax and page_cap and _page_div(page_cap, s_ax, mesh)) else None
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        name = ps.split("/")[-1]
+        shape = leaf.shape
+        stacked = ps.startswith("blocks/")
+        inner = shape[1:] if stacked else shape
+
+        def wrap(*s):
+            return P(None, *s) if stacked else P(*s)
+
+        if name in ("k", "v"):
+            return wrap(b_ax, s_ax, h_ax, None)
+        if name in ("qk_packed", "qk_scale", "qk_zero"):
+            return wrap(b_ax, s_ax, h_ax, None)
+        if name in ("pmax", "pmin"):
+            return wrap(b_ax, p_ax, h_ax, None)
+        if name in ("cross_k", "cross_v"):
+            return wrap(b_ax, None, h_ax, None)
+        if name == "ds_channels":
+            return wrap(*([None] * len(inner)))
+        if name == "ssm":  # (b, d_inner, d_state)
+            return wrap(b_ax, _tensor_if(axes, mesh, inner[1]), None)
+        if name == "conv":  # (b, k-1, d_inner)
+            return wrap(b_ax, None, _tensor_if(axes, mesh, inner[2]))
+        if name in ("C", "n", "m", "c", "h"):  # xLSTM states
+            rest = [None] * (len(inner) - 1)
+            return wrap(b_ax, *rest)
+        if name == "pos":
+            return P()
+        rest = [None] * max(0, len(inner) - 1)
+        return wrap(b_ax, *rest)
+
+    return jax.tree_util.tree_map_with_path(spec, state)
+
+
+def _page_div(page_cap: int, s_ax, mesh) -> bool:
+    size = 1
+    axes = s_ax if isinstance(s_ax, tuple) else (s_ax,)
+    for a in axes:
+        if a is not None:
+            size *= mesh.shape[a]
+    return page_cap % size == 0

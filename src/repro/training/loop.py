@@ -1,0 +1,126 @@
+"""Training substrate: loss, train_step factory, and a host loop.
+
+``make_train_step`` returns a pure (params, opt_state, batch) -> ... function
+suitable for jit/pjit — the dry-run lowers exactly this function on the
+production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.models.common import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    adamw: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    remat: bool = True
+    z_loss: float = 1e-4  # logit regularizer, stabilizes bf16 training
+    # Gradient accumulation: the global batch is split into this many
+    # microbatches (strided over the batch dim so each microbatch stays
+    # evenly sharded); grads accumulate in f32.  The memory lever for the
+    # 100B+ archs whose activations cannot fit at full batch.
+    grad_accum: int = 1
+
+
+def loss_fn(params: Tree, cfg: ModelConfig, batch: dict[str, jax.Array],
+            *, remat: bool, z_loss: float) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Next-token CE (+MoE aux, +z-loss).  Labels < 0 are ignored (used by
+    the needle benchmark to supervise only the retrieval positions)."""
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":
+        # Prefix patches were prepended; score text positions only.
+        logits = logits[:, cfg.n_prefix_tokens:]
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0
+    safe_labels = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0] \
+        - logz
+    denom = jnp.maximum(valid.sum(), 1)
+    ce = -jnp.where(valid, ll, 0.0).sum() / denom
+    zl = z_loss * jnp.square(jnp.where(valid, logz, 0.0)).sum() / denom
+    total = ce + aux + zl
+    metrics = {"loss": total, "ce": ce, "moe_aux": aux,
+               "ppl": jnp.exp(jnp.minimum(ce, 20.0))}
+    return total, metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig
+                    ) -> Callable[[Tree, Tree, dict[str, jax.Array]],
+                                  tuple[Tree, Tree, dict[str, jax.Array]]]:
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        lr = cosine_schedule(opt_state["step"], tcfg.warmup_steps,
+                             tcfg.total_steps, tcfg.peak_lr)
+        k = tcfg.grad_accum
+        if k <= 1:
+            (_, metrics), grads = grad_fn(params, cfg, batch,
+                                          remat=tcfg.remat, z_loss=tcfg.z_loss)
+        else:
+            # Strided microbatches: row i goes to microbatch i % k, so each
+            # microbatch keeps the full data-parallel sharding.
+            def split(x):
+                b = x.shape[0]
+                return jnp.swapaxes(
+                    x.reshape(b // k, k, *x.shape[1:]), 0, 1)
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def micro_step(gsum, mb):
+                (_, metrics), grads = grad_fn(params, cfg, mb,
+                                              remat=tcfg.remat,
+                                              z_loss=tcfg.z_loss)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return gsum, metrics
+
+            gsum0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, metrics_stack = jax.lax.scan(micro_step, gsum0, micro)
+            grads = jax.tree_util.tree_map(lambda g: g / k, gsum)
+            metrics = jax.tree_util.tree_map(
+                lambda m: m.mean(), metrics_stack)
+        params, opt_state, opt_metrics = adamw_update(
+            tcfg.adamw, grads, opt_state, params, lr)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def train_loop(params: Tree, cfg: ModelConfig, tcfg: TrainConfig,
+               batches: Iterator[dict], *, log_every: int = 10,
+               jit: bool = True):
+    """Single-host loop used by the examples; returns (params, history)."""
+    opt_state = adamw_init(params)
+    step_fn = make_train_step(cfg, tcfg)
+    if jit:
+        step_fn = jax.jit(step_fn)
+    history = []
+    t0 = time.time()
+    for i, host_batch in enumerate(batches):
+        batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == tcfg.total_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["elapsed_s"] = time.time() - t0
+            history.append(m)
+            print(f"step {i:5d}  loss {m['loss']:.4f}  ppl {m['ppl']:.2f}  "
+                  f"gnorm {m['grad_norm']:.2f}  lr {m['lr']:.2e}")
+    return params, history

@@ -1,0 +1,29 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — tests run on the single
+CPU device; only launch/dryrun.py requests 512 placeholder devices."""
+
+import os
+import sys
+
+# Tests import helpers as `tests.conftest` and benchmarks as `benchmarks.*`;
+# make the repo root importable regardless of how pytest was invoked.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_weights(rng, rows, n, concentration=3.0):
+    """Random normalized attention-weight rows."""
+    logits = rng.normal(size=(rows, n)) * concentration
+    w = np.exp(logits - logits.max(-1, keepdims=True))
+    return (w / w.sum(-1, keepdims=True)).astype(np.float32)

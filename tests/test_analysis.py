@@ -1,0 +1,77 @@
+"""Analytic cost model vs ground truth (eval_shape param counts)."""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.costs import (
+    active_param_count,
+    collective_bytes_per_chip,
+    decode_flops,
+    decode_hbm_bytes,
+    forward_flops,
+    param_count_estimate,
+    train_step_flops,
+)
+from repro.configs import ARCH_IDS, get_config
+from repro.models import init_params
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_estimate_matches_eval_shape(arch):
+    cfg = get_config(arch)
+    struct = jax.eval_shape(functools.partial(init_params, cfg),
+                            jax.random.PRNGKey(0))
+    actual = sum(int(np.prod(x.shape))
+                 for x in jax.tree_util.tree_leaves(struct))
+    est = param_count_estimate(cfg)
+    rel = abs(est - actual) / actual
+    assert rel < 0.02, f"{arch}: estimate {est:,} vs actual {actual:,} ({rel:.3f})"
+
+
+def test_active_less_than_total_for_moe():
+    cfg = get_config("deepseek-moe-16b")
+    assert active_param_count(cfg) < 0.3 * param_count_estimate(cfg)
+    dense = get_config("qwen2-1.5b")
+    assert active_param_count(dense) == param_count_estimate(dense)
+
+
+def test_flops_scale_with_tokens():
+    cfg = get_config("qwen2-1.5b")
+    f1 = forward_flops(cfg, 1, 1024)
+    f2 = forward_flops(cfg, 2, 1024)
+    assert 1.9 < f2 / f1 < 2.2  # ~linear in batch (attention superlinear in s)
+    assert train_step_flops(cfg, 1, 1024) == 3 * f1
+
+
+def test_forward_flops_close_to_6nd():
+    """Dense fwd ≈ 2·N·D when context << d_model regime doesn't dominate."""
+    cfg = get_config("starcoder2-15b")
+    tokens = 4096 * 16
+    f = forward_flops(cfg, 16, 4096)
+    two_nd = 2 * param_count_estimate(cfg) * tokens
+    assert 0.8 < f / two_nd < 1.5, f / two_nd
+
+
+def test_decode_twilight_cheaper_than_full():
+    import dataclasses
+    cfg = get_config("qwen3-32b")
+    full_cfg = cfg.replace(twilight=dataclasses.replace(
+        cfg.twilight, enabled=False))
+    assert decode_flops(cfg, 128, 32768) < decode_flops(full_cfg, 128, 32768)
+    assert decode_hbm_bytes(cfg, 128, 32768) < \
+        decode_hbm_bytes(full_cfg, 128, 32768)
+    # The paper's whole point: the traffic gap grows with context.
+    r32 = decode_hbm_bytes(full_cfg, 128, 32768) / decode_hbm_bytes(cfg, 128, 32768)
+    assert r32 > 2.0, r32
+
+
+def test_collective_model_terms():
+    cfg = get_config("qwen2-1.5b")
+    train = collective_bytes_per_chip(cfg, "train", 256, 4096)
+    decode = collective_bytes_per_chip(cfg, "decode", 128, 32768)
+    assert train["total"] > 100 * decode["total"]
+    assert train["seq_parallel"] > 0  # SP active for dense train
+    assert decode["seq_parallel"] == 0

@@ -1,0 +1,47 @@
+"""Checkpoint round-trips (incl. bfloat16 and nested stacked trees)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_smoke_config
+from repro.models import init_params
+
+
+def test_roundtrip_simple(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2], jnp.int32),
+                  "d": jnp.ones((4,), jnp.bfloat16) * 1.5}}
+    save_checkpoint(str(tmp_path), 7, tree)
+    out = restore_checkpoint(str(tmp_path), 7, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_roundtrip_model_params(tmp_path):
+    cfg = get_smoke_config("deepseek-moe-16b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), 3, params)
+    out = restore_checkpoint(str(tmp_path), 3, params)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_step(tmp_path):
+    assert latest_step(str(tmp_path)) is None
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.ones(1)})
+    save_checkpoint(str(tmp_path), 12, {"x": jnp.ones(1)})
+    assert latest_step(str(tmp_path)) == 12
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.ones((2,))})
+    import pytest
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), 1, {"x": jnp.ones((3,))})

@@ -1,0 +1,35 @@
+"""Beyond-paper feature: INT4-reuse final attention (paper §4.3 future work)."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    TwilightConfig,
+    attention_error,
+    full_decode_attention,
+    quantize_int4,
+    twilight_decode_attention,
+)
+
+
+def test_int4_final_attention_close(rng):
+    b, hq, hkv, n, d = 2, 8, 2, 512, 64
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    qkeys = quantize_int4(K)
+
+    base = TwilightConfig(selector="full", p=0.95, candidate_frac=1.0,
+                          page_size=64)
+    out_fp = twilight_decode_attention(q, K, V, base, qkeys=qkeys)
+    out_i4 = twilight_decode_attention(
+        q, K, V, dataclasses.replace(base, reuse_int4_for_attention=True),
+        qkeys=qkeys)
+    exact = full_decode_attention(q, K, V)
+    err_fp = float(attention_error(exact, out_fp.out).max())
+    err_i4 = float(attention_error(exact, out_i4.out).max())
+    vf = float(jnp.linalg.norm(V[0, :, 0]))
+    # INT4-final stays within ~2x of the fp16-final error and the bound.
+    assert err_i4 <= max(2.5 * err_fp, 0.1 * vf), (err_fp, err_i4)

@@ -1,0 +1,164 @@
+"""Per-architecture smoke tests + cross-path consistency.
+
+Every assigned arch: reduced config, one forward + one train-grad + prefill
++ decode on CPU; shapes and finiteness asserted.  Consistency: prefill
+logits == forward logits; decode continuation == teacher-forced forward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import (
+    count_params,
+    decode_step,
+    forward,
+    init_params,
+    prefill,
+)
+from repro.models.model import layer_schedule
+
+
+def _batch(cfg, rng, b=2, s=32):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)))}
+    if cfg.frontend == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, 16, cfg.d_model)), jnp.float32)
+    if cfg.frontend == "vision":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_prefix_tokens, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_decode(arch, rng):
+    cfg = get_smoke_config(arch)
+    assert cfg.n_layers <= 4 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+    logits, aux = forward(params, cfg, batch)
+    s_total = 32 + (cfg.n_prefix_tokens if cfg.frontend == "vision" else 0)
+    assert logits.shape == (2, s_total, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    lg, state = prefill(params, cfg, batch, n_max=64)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (2,)))
+    lg2, state2, stats = decode_step(params, cfg, state, tok)
+    assert lg2.shape == (2, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(lg2, np.float32)).all()
+    assert int(state2["pos"]) == int(state["pos"]) + 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_grad(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+    batch["labels"] = batch["tokens"]
+
+    from repro.training.loop import loss_fn
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, cfg, batch, remat=False, z_loss=1e-4)
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(g, np.float32)).all()
+               for g in jax.tree_util.tree_leaves(grads))
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "jamba-1.5-large-398b",
+                                  "xlstm-350m", "seamless-m4t-medium",
+                                  "internvl2-1b"])
+def test_prefill_matches_forward(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch(cfg, rng)
+    lg_fwd, _ = forward(params, cfg, batch)
+    lg_pre, _ = prefill(params, cfg, batch, n_max=64)
+    np.testing.assert_allclose(
+        np.asarray(lg_pre, np.float32), np.asarray(lg_fwd, np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "deepseek-moe-16b",
+                                  "jamba-1.5-large-398b", "xlstm-350m"])
+def test_decode_matches_teacher_forcing(arch, rng):
+    """decode_step must reproduce the teacher-forced forward logits.
+
+    Twilight is configured with p=0.999 + full selector here so the sparse
+    path is (numerically) the full computation.
+    """
+    import dataclasses
+    cfg = get_smoke_config(arch)
+    cfg = cfg.replace(twilight=dataclasses.replace(
+        cfg.twilight, selector="full", p=0.9999, candidate_frac=1.0,
+        min_candidate=64))
+    if cfg.moe is not None:
+        # Capacity-based dropping differs between the full-sequence forward
+        # (capacity over the whole batch) and single-token decode; raise
+        # the capacity so no token drops in either path and the two are
+        # numerically comparable.
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 24)))
+    full_logits, _ = forward(params, cfg, {"tokens": toks})
+
+    _, state = prefill(params, cfg, {"tokens": toks[:, :16]}, n_max=32)
+    logits_seq = []
+    for t in range(16, 24):
+        lg, state, _ = decode_step(params, cfg, state, toks[:, t])
+        logits_seq.append(lg)
+    dec = np.stack([np.asarray(l, np.float32) for l in logits_seq], axis=1)
+    ref = np.asarray(full_logits[:, 16:24], np.float32)
+    # bf16 params + different reduction orders between the fused full-seq
+    # path and the stepwise path: allow 1e-1 on raw logits (observed max
+    # deviation 0.06 on a single element for the hybrid arch).
+    np.testing.assert_allclose(dec, ref, rtol=5e-2, atol=1e-1)
+
+
+def test_layer_schedules():
+    cfg = get_config("jamba-1.5-large-398b")
+    specs, repeats = layer_schedule(cfg)
+    assert len(specs) == 8 and repeats == 9
+    kinds = [s.kind for s in specs]
+    assert kinds.count("attn") == 1 and kinds.count("mamba") == 7
+    assert sum(s.is_moe for s in specs) == 4
+
+    cfg = get_config("xlstm-350m")
+    specs, repeats = layer_schedule(cfg)
+    assert [s.kind for s in specs].count("slstm") == 1
+    assert len(specs) * repeats == 24
+
+
+def test_full_config_param_counts():
+    """Full configs approximate their nameplate sizes (no init, eval_shape)."""
+    import functools
+    expected = {
+        "deepseek-moe-16b": (14e9, 21e9),
+        "qwen2-1.5b": (1.2e9, 2.2e9),
+        # Our block calculus uses SwiGLU (3 FFN matrices) uniformly; the
+        # original StarCoder2 uses a 2-matrix GELU MLP, so the same pool
+        # dims give ~22B here vs the 15B nameplate.
+        "starcoder2-15b": (14e9, 23e9),
+        "qwen3-32b": (28e9, 36e9),
+        "jamba-1.5-large-398b": (350e9, 440e9),
+        # Pool dims with proj_factor=2 mLSTM internals give ~0.6B; the
+        # released 350M recipe uses leaner inner projections.
+        "xlstm-350m": (0.25e9, 0.7e9),
+        "internvl2-1b": (0.4e9, 1.1e9),
+        # Pool spec says 48L (vs Moonlight's released 27L), so the same
+        # fine-grained-MoE dims land at ~29B total here.
+        "moonshot-v1-16b-a3b": (14e9, 30e9),
+        "llama4-scout-17b-a16e": (90e9, 120e9),  # total (active 17B)
+        "seamless-m4t-medium": (0.8e9, 1.7e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        cfg = get_config(arch)
+        struct = jax.eval_shape(functools.partial(init_params, cfg),
+                                jax.random.PRNGKey(0))
+        n = sum(int(np.prod(x.shape))
+                for x in jax.tree_util.tree_leaves(struct))
+        assert lo <= n <= hi, f"{arch}: {n / 1e9:.2f}B params not in [{lo / 1e9}, {hi / 1e9}]"

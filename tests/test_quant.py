@@ -1,0 +1,70 @@
+"""INT4 asymmetric quantization: round-trip bounds and packing layout."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import dequantize_int4, quantize_int4
+
+
+@pytest.mark.parametrize("shape", [(4, 64), (2, 16, 4, 128), (1, 7, 3, 32)])
+def test_roundtrip_error_bound(rng, shape):
+    x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    qt = quantize_int4(x)
+    xd = dequantize_int4(qt)
+    # Error per element <= scale/2 (round-to-nearest on 15 levels).
+    bound = np.asarray(qt.scale) / 2 + 1e-6
+    assert (np.abs(np.asarray(xd - x)) <= bound).all()
+
+
+def test_packing_layout(rng):
+    x = jnp.asarray(rng.normal(size=(3, 8)), jnp.float32)
+    qt = quantize_int4(x)
+    assert qt.packed.shape == (3, 4)
+    assert qt.packed.dtype == jnp.uint8
+    # Low nibble = even channel, high nibble = odd channel.
+    xd = np.asarray(dequantize_int4(qt))
+    scale = np.asarray(qt.scale)
+    zero = np.asarray(qt.zero)
+    codes = np.round((np.asarray(x) - zero) / scale).clip(0, 15).astype(np.uint8)
+    packed = np.asarray(qt.packed)
+    np.testing.assert_array_equal(packed & 0xF, codes[:, 0::2])
+    np.testing.assert_array_equal(packed >> 4, codes[:, 1::2])
+    del xd
+
+
+def test_odd_last_dim_rejected():
+    with pytest.raises(ValueError):
+        quantize_int4(jnp.ones((2, 7)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    d=st.sampled_from([16, 32, 64, 128]),
+    scale_mag=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_roundtrip(d, scale_mag, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(8, d)) * scale_mag, jnp.float32)
+    qt = quantize_int4(x)
+    xd = dequantize_int4(qt)
+    bound = np.asarray(qt.scale) / 2 + 1e-5 * scale_mag
+    assert (np.abs(np.asarray(xd - x)) <= bound).all()
+
+
+def test_constant_rows_stable(rng):
+    x = jnp.ones((4, 32)) * 3.7
+    xd = dequantize_int4(quantize_int4(x))
+    np.testing.assert_allclose(np.asarray(xd), 3.7, atol=1e-5)
+
+
+def test_score_estimation_quality(rng):
+    """INT4 scores must preserve enough ordering for top-p (paper Fig. 6)."""
+    q = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(512, 64)), jnp.float32)
+    exact = np.asarray(K @ q)
+    est = np.asarray(dequantize_int4(quantize_int4(K)) @ q)
+    corr = np.corrcoef(exact, est)[0, 1]
+    assert corr > 0.99, f"INT4 score correlation too low: {corr}"

@@ -1,0 +1,127 @@
+"""Token Selector semantics (Quest, DS, Streaming, H2O, GQA union)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.selectors import (
+    DoubleSparsitySelector,
+    FullSelector,
+    H2OSelector,
+    QuestSelector,
+    SelectionContext,
+    StreamingSelector,
+    build_page_meta,
+    calibrate_ds_channels,
+    group_union,
+    topk_mask,
+)
+
+
+def _ctx(rng, b=2, n=256, hkv=2, d=64, page=16):
+    K = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    return K, SelectionContext(
+        keys=K,
+        page_meta=build_page_meta(K, page),
+        accum_scores=jnp.asarray(rng.random((b, hkv, n)), jnp.float32),
+        length=None,
+        ds_channels=calibrate_ds_channels(K, 8),
+    )
+
+
+def test_group_union():
+    m = jnp.asarray([[[1, 0, 0], [0, 1, 0], [0, 0, 0], [0, 0, 1]]], bool)
+    out = group_union(m, 2)  # 4 q heads -> 2 kv heads
+    np.testing.assert_array_equal(
+        np.asarray(out), [[[1, 1, 0], [0, 0, 1]]])
+
+
+def test_topk_mask_count(rng):
+    s = jnp.asarray(rng.normal(size=(4, 100)), jnp.float32)
+    m = topk_mask(s, 10)
+    assert (np.asarray(m).sum(-1) == 10).all()
+
+
+def test_quest_page_granularity(rng):
+    K, ctx = _ctx(rng)
+    q = jnp.asarray(rng.normal(size=(2, 4, 64)), jnp.float32)
+    mask = QuestSelector().select(q, ctx, budget=64)
+    m = np.asarray(mask).reshape(2, 2, 16, 16)  # pages of 16
+    page_any = m.any(-1)
+    page_all = m.all(-1)
+    np.testing.assert_array_equal(page_any, page_all)  # whole pages only
+
+
+def test_quest_upper_bound_property(rng):
+    """Quest's min/max metadata is a true per-page upper bound:
+    UB(page) >= max over tokens in page of q·k.  (Selection can still miss
+    the argmax when other pages' UBs overestimate harder — that is exactly
+    the over-selection the Twilight pruner then cleans up.)"""
+    K, ctx = _ctx(rng, b=1, hkv=1)
+    q = jnp.asarray(rng.normal(size=(1, 1, 64)), jnp.float32)
+    pm = ctx.page_meta
+    qe = np.asarray(q)[0, 0]
+    ub = np.maximum(qe * np.asarray(pm.kmax)[0, :, 0],
+                    qe * np.asarray(pm.kmin)[0, :, 0]).sum(-1)  # (n_pages,)
+    true_scores = np.asarray(
+        jnp.einsum("bhd,bnhd->bhn", q, K))[0, 0].reshape(16, 16)
+    assert (ub >= true_scores.max(-1) - 1e-4).all()
+
+    # With a planted strong key (focused attention — the regime Quest is
+    # built for) the argmax page must always be selected.
+    for i in range(10):
+        r = np.random.default_rng(100 + i)
+        qi = jnp.asarray(r.normal(size=(1, 1, 64)), jnp.float32)
+        Kp = np.asarray(K).copy()
+        pos = int(r.integers(0, 256))
+        Kp[0, pos, 0] = 3.0 * np.asarray(qi)[0, 0]
+        ctx_p = ctx._replace(keys=jnp.asarray(Kp),
+                             page_meta=build_page_meta(jnp.asarray(Kp), 16))
+        mask = QuestSelector().select(qi, ctx_p, budget=64)
+        assert np.asarray(mask)[0, 0, pos], f"missed planted needle at {pos}"
+
+
+def test_ds_selects_high_score_tokens(rng):
+    K, ctx = _ctx(rng)
+    q = jnp.asarray(rng.normal(size=(2, 4, 64)), jnp.float32)
+    mask = DoubleSparsitySelector().select(q, ctx, budget=32)
+    counts = np.asarray(mask).sum(-1)
+    assert (counts >= 32).all() and (counts <= 128).all()  # union of 2 heads
+
+
+def test_streaming_sink_and_recent(rng):
+    K, ctx = _ctx(rng)
+    length = jnp.asarray([256, 200])
+    ctx = ctx._replace(length=length)
+    q = jnp.asarray(rng.normal(size=(2, 4, 64)), jnp.float32)
+    mask = np.asarray(StreamingSelector(n_sink=4).select(q, ctx, budget=36))
+    assert mask[0, 0, :4].all()  # sinks
+    assert mask[0, 0, 224:256].all()  # recent window
+    assert not mask[0, 0, 100]  # middle dropped
+    assert not mask[1, 0, 200:].any()  # beyond length invalid
+
+
+def test_h2o_includes_heavy_hitters(rng):
+    K, ctx = _ctx(rng)
+    heavy = ctx.accum_scores.at[:, :, 7].set(100.0)
+    ctx = ctx._replace(accum_scores=heavy)
+    q = jnp.asarray(rng.normal(size=(2, 4, 64)), jnp.float32)
+    mask = np.asarray(H2OSelector().select(q, ctx, budget=32))
+    assert mask[:, :, 7].all()
+
+
+def test_full_selector_respects_length(rng):
+    K, ctx = _ctx(rng)
+    ctx = ctx._replace(length=jnp.asarray([256, 100]))
+    q = jnp.asarray(rng.normal(size=(2, 4, 64)), jnp.float32)
+    mask = np.asarray(FullSelector().select(q, ctx, budget=0))
+    assert mask[0].all()
+    assert mask[1, :, :100].all() and not mask[1, :, 100:].any()
+
+
+@pytest.mark.parametrize("name", ["full", "quest", "ds", "streaming", "h2o"])
+def test_registry(name):
+    from repro.core.selectors import selector_from_name
+    sel = selector_from_name(name)
+    assert hasattr(sel, "select")

@@ -1,0 +1,59 @@
+"""Serving engine + sampler."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.serving import DecodeEngine, Request, top_p_sample
+
+
+def test_top_p_sample_restricts_support(rng):
+    logits = jnp.asarray([[10.0, 9.5, 0.0, -5.0, -5.0]] * 64)
+    keys = jax.random.split(jax.random.PRNGKey(0), 64)
+    toks = np.asarray(jax.vmap(
+        lambda k, l: top_p_sample(k, l[None], p=0.8)[0])(keys, logits))
+    assert set(toks.tolist()) <= {0, 1}, "p=0.8 keeps only the two top tokens"
+
+
+def test_greedy_sample():
+    from repro.serving.sampler import sample_token
+    logits = jnp.asarray([[0.0, 3.0, 1.0]])
+    tok = sample_token(jax.random.PRNGKey(0), logits, greedy=True)
+    assert int(tok[0]) == 1
+
+
+def test_engine_generates(rng):
+    cfg = get_smoke_config("qwen2-1.5b")
+    engine = DecodeEngine(cfg, batch_size=2, cache_capacity=64)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(8, cfg.vocab_size, 24).astype(np.int32),
+                    max_new_tokens=4) for i in range(3)]
+    results = engine.generate(reqs)
+    assert len(results) == 3
+    for r in results:
+        assert len(r.tokens) == 4
+        assert all(0 <= t < cfg.vocab_size for t in r.tokens)
+        assert r.mean_pruned_budget > 0
+
+
+def test_engine_greedy_deterministic(rng):
+    cfg = get_smoke_config("qwen2-1.5b")
+    engine = DecodeEngine(cfg, batch_size=2, cache_capacity=64, seed=7)
+    prompt = rng.integers(8, cfg.vocab_size, 24).astype(np.int32)
+    r1 = engine.generate([Request(uid=0, prompt=prompt, max_new_tokens=6)])
+    r2 = engine.generate([Request(uid=1, prompt=prompt, max_new_tokens=6)])
+    assert r1[0].tokens == r2[0].tokens
+
+
+def test_engine_vlm(rng):
+    cfg = get_smoke_config("internvl2-1b")
+    engine = DecodeEngine(cfg, batch_size=2, cache_capacity=64)
+    reqs = [Request(
+        uid=0, prompt=rng.integers(8, cfg.vocab_size, 16).astype(np.int32),
+        max_new_tokens=3,
+        extras={"patches": rng.normal(
+            size=(cfg.n_prefix_tokens, cfg.d_model)).astype(np.float32)})]
+    results = engine.generate(reqs)
+    assert len(results[0].tokens) == 3

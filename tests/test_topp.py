@@ -1,0 +1,102 @@
+"""Top-p machinery: oracle vs binary search + invariants (hypothesis)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topp import (
+    masked_softmax,
+    oracle_topp_mask,
+    topp_mask,
+    topp_threshold,
+)
+from tests.conftest import make_weights
+
+
+@pytest.mark.parametrize("p", [0.5, 0.8, 0.9, 0.95, 0.99])
+@pytest.mark.parametrize("concentration", [0.5, 3.0, 8.0])
+def test_binary_search_matches_oracle(rng, p, concentration):
+    w = make_weights(rng, 16, 512, concentration)
+    oracle = oracle_topp_mask(jnp.asarray(w), p)
+    bs = topp_mask(jnp.asarray(w), p)
+    np.testing.assert_array_equal(np.asarray(oracle.budget),
+                                  np.asarray(bs.budget))
+    np.testing.assert_array_equal(np.asarray(oracle.mask), np.asarray(bs.mask))
+
+
+def test_coverage_and_minimality(rng):
+    w = make_weights(rng, 32, 256, 4.0)
+    p = 0.9
+    res = topp_mask(jnp.asarray(w), p)
+    kept = np.where(np.asarray(res.mask), w, 0.0).sum(-1)
+    assert (kept >= p - 1e-6).all(), "top-p mask must cover p"
+    # Minimality: removing the smallest kept weight must drop below p.
+    w_masked = np.where(np.asarray(res.mask), w, np.inf)
+    smallest_kept = w_masked.min(-1)
+    assert (kept - smallest_kept < p + 1e-6).all(), "mask must be minimal"
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(8, 300),
+    p=st.floats(0.1, 0.99),
+    conc=st.floats(0.1, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_topp_invariants(n, p, conc, seed):
+    rng = np.random.default_rng(seed)
+    w = make_weights(rng, 4, n, conc)
+    res = topp_mask(jnp.asarray(w), p)
+    mask = np.asarray(res.mask)
+    kept = np.where(mask, w, 0.0).sum(-1)
+    # Coverage.
+    assert (kept >= p - 1e-5).all()
+    # The max-weight token is always kept.
+    assert mask[np.arange(4), w.argmax(-1)].all()
+    # Threshold consistency: every kept weight >= threshold.
+    thr = np.asarray(res.threshold)
+    assert (np.where(mask, w, np.inf) >= thr[:, None] - 1e-7).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_monotone_in_p(seed):
+    rng = np.random.default_rng(seed)
+    w = make_weights(rng, 4, 128, 3.0)
+    budgets = [int(topp_mask(jnp.asarray(w), p).budget.sum())
+               for p in (0.5, 0.7, 0.9, 0.99)]
+    assert budgets == sorted(budgets), "budget must be monotone in p"
+
+
+def test_adaptive_budget_focused_vs_diffuse(rng):
+    """The paper's core claim: focused attention needs far fewer tokens."""
+    focused = make_weights(rng, 8, 1024, 8.0)
+    diffuse = make_weights(rng, 8, 1024, 0.3)
+    bf = int(topp_mask(jnp.asarray(focused), 0.9).budget.mean())
+    bd = int(topp_mask(jnp.asarray(diffuse), 0.9).budget.mean())
+    assert bf * 4 < bd, f"focused {bf} should be <<< diffuse {bd}"
+
+
+def test_threshold_fixed_iters_resolution(rng):
+    w = make_weights(rng, 8, 256, 3.0)
+    t24 = topp_threshold(jnp.asarray(w), 0.9, iters=24)
+    t40 = topp_threshold(jnp.asarray(w), 0.9, iters=40)
+    assert float(jnp.max(jnp.abs(t24 - t40))) < 1e-6
+
+
+def test_masked_softmax_fully_masked_rows():
+    scores = jnp.ones((2, 4))
+    mask = jnp.zeros((2, 4), bool)
+    out = masked_softmax(scores, mask)
+    assert not np.isnan(np.asarray(out)).any()
+    assert (np.asarray(out) == 0).all()
+
+
+def test_masked_softmax_matches_softmax():
+    rng = np.random.default_rng(1)
+    s = jnp.asarray(rng.normal(size=(3, 64)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(masked_softmax(s, None)),
+        np.asarray(jnp.exp(s) / jnp.exp(s).sum(-1, keepdims=True)),
+        rtol=1e-5)
