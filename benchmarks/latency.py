@@ -30,19 +30,45 @@ def fig7_attention_speedup():
     FlashInfer(full) vs Quest vs Quest-Twi, from the HBM traffic model.
 
     B0 = n/4 (paper's conservative selector budget), B1 = 2% of n (the
-    measured post-pruning budget scale, Tables 2/5)."""
+    measured post-pruning budget scale, Tables 2/5).
+
+    The dense-vs-compact columns price the *whole* Twilight operator
+    (select + estimate + top-p + attend) from ``analysis.costs``: dense
+    masks make every stage O(n); the compact index pipeline scales with
+    B0 (serving config: pruned_cap_frac=1/4 re-compacts the attended
+    buffer toward B1)."""
+    import dataclasses
+
+    from repro.analysis.costs import twilight_stage_bytes
+    from repro.core import TwilightConfig
+
     hkv, d = 8, 128
-    for n in (8192, 32768, 131072):
+    hq = 4 * hkv  # LLaMA-class GQA group of 4
+    tw_compact = TwilightConfig(candidate_frac=0.25,
+                                candidate_budget_cap=1 << 30,
+                                compact=True, pruned_cap_frac=0.25)
+    tw_dense = dataclasses.replace(tw_compact, compact=False,
+                                   pruned_cap_frac=None)
+    for n in (8192, 32768, 65536, 131072):
         for batch in (8, 64):
             b0, b1 = n // 4, max(64, int(0.02 * n))
             full = bytes_to_us(attn_bytes_full(n, hkv, d), batch)
             quest = bytes_to_us(attn_bytes_quest(n, hkv, d, b0), batch)
             twi = bytes_to_us(attn_bytes_quest_twi(n, hkv, d, b0, b1), batch)
+            dense = bytes_to_us(
+                twilight_stage_bytes(tw_dense, n, hq, hkv, d)["total"], batch)
+            compact = bytes_to_us(
+                twilight_stage_bytes(tw_compact, n, hq, hkv, d)["total"],
+                batch)
             csv_row(f"fig7_full_n{n}_b{batch}", full, "speedup=1.00")
             csv_row(f"fig7_quest_n{n}_b{batch}", quest,
                     f"speedup={full / quest:.2f}")
             csv_row(f"fig7_quest_twi_n{n}_b{batch}", twi,
                     f"speedup={full / twi:.2f};vs_quest={quest / twi:.2f}")
+            csv_row(f"fig7_twi_dense_n{n}_b{batch}", dense,
+                    "compact_vs_dense=1.00")
+            csv_row(f"fig7_twi_compact_n{n}_b{batch}", compact,
+                    f"compact_vs_dense={dense / compact:.2f}")
 
 
 def fig8_e2e_tpot():
@@ -72,13 +98,27 @@ def fig10_time_breakdown():
     """Fig. 10: T_TokenSel + T_Pruner + T_SparseAttn, 32k context.
 
     Matches the paper's theoretical model in §4.3: Quest at B0=8192 (1/4),
-    Twilight prunes to B1=256."""
+    Twilight prunes to B1=256.  Also reports the same breakdown for the
+    dense-mask vs compact-index pipeline from ``analysis.costs``."""
+    import dataclasses
+
+    from repro.analysis.costs import twilight_stage_bytes
+    from repro.core import TwilightConfig
+
     n, hkv, d, page = 32768, 8, 128, 64
+    hq = 4 * hkv
     b0, b1 = 8192, 256
     t_sel = bytes_to_us(2 * (n // page) * hkv * d * 2)  # page metadata scan
     t_prune = bytes_to_us(b0 * hkv * (d // 2 + 8) + 4 * b0 * hkv)
     t_attn_quest = bytes_to_us(2 * b0 * hkv * d * 2)
     t_attn_twi = bytes_to_us(2 * b1 * hkv * d * 2)
+    tw_compact = TwilightConfig(candidate_frac=0.25,
+                                candidate_budget_cap=1 << 30,
+                                compact=True, pruned_cap_frac=0.25)
+    tw_dense = dataclasses.replace(tw_compact, compact=False,
+                                   pruned_cap_frac=None)
+    st_dense = twilight_stage_bytes(tw_dense, n, hq, hkv, d)
+    st_compact = twilight_stage_bytes(tw_compact, n, hq, hkv, d)
     for batch in (16, 64, 128):
         quest_total = batch * (t_sel + t_attn_quest)
         twi_total = batch * (t_sel + t_prune + t_attn_twi)
@@ -88,6 +128,16 @@ def fig10_time_breakdown():
                 f"sel={batch * t_sel:.1f};prune={batch * t_prune:.1f};"
                 f"attn={batch * t_attn_twi:.1f};"
                 f"speedup={quest_total / twi_total:.2f}")
+        for tag, st in (("dense", st_dense), ("compact", st_compact)):
+            total = bytes_to_us(st["total"], batch)
+            csv_row(
+                f"fig10_twi_{tag}_b{batch}", total,
+                f"sel={bytes_to_us(st['select'], batch):.1f};"
+                f"est={bytes_to_us(st['estimate'], batch):.1f};"
+                f"topp={bytes_to_us(st['topp'], batch):.1f};"
+                f"attn={bytes_to_us(st['attend'], batch):.1f};"
+                f"compact_vs_dense="
+                f"{st_dense['total'] / st['total']:.2f}")
     # The paper's §4.3 closed form for reference.
     theory = (n / 16 + b0) / (n / 16 + b0 / 4 + b1)
     csv_row("fig10_theory_speedup", 0.0, f"speedup={theory:.2f}")

@@ -14,6 +14,7 @@ bwd); attention for causal training uses the n/2 average context.
 
 from __future__ import annotations
 
+from repro.core.twilight import TwilightConfig
 from repro.models.common import ModelConfig
 from repro.models.model import layer_schedule
 
@@ -142,6 +143,76 @@ def train_step_flops(cfg: ModelConfig, batch: int, seq: int) -> float:
     return 3.0 * forward_flops(cfg, batch, seq)
 
 
+# ---------------------------------------------------------------------------
+# Twilight attention-operator cost model (per sequence, per attention layer)
+# ---------------------------------------------------------------------------
+
+def twilight_stage_flops(tw: TwilightConfig, n: int, hq: int, hkv: int,
+                         d: int) -> dict[str, float]:
+    """Per-stage FLOPs of one decode step's attention operator.
+
+    ``compact=True``: the estimate runs on the gathered (B0-length)
+    candidate buffer, top-p binary-searches B0-length rows, and the final
+    attention touches the attended buffer (≤ B0 slots; ``pruned_cap_frac``
+    shrinks it toward B1).  ``compact=False`` models the dense-mask
+    pipeline the seed shipped: every stage is O(n) regardless of how much
+    the selector pruned.
+    """
+    if not tw.enabled:
+        full = 2 * 2 * n * hq * d
+        return {"select": 0.0, "estimate": 0.0, "topp": 0.0, "attend": full,
+                "total": full}
+    b0 = tw.candidate_budget(n)
+    sel = 2 * 2 * (n // tw.page_size) * hq * d  # Quest-style page UB scan
+    if tw.compact:
+        m = min(n, b0)  # index buffer (group-wise budget)
+        est_len = m
+        topp_len = m
+        # The B1 re-compaction is weight-ranked, so it only runs when the
+        # pruner produced weights; base-algorithm-only configs attend over
+        # the full candidate buffer.
+        attn_len = tw.pruned_capacity(m) if tw.prune_enabled else m
+    else:
+        est_len = topp_len = attn_len = n
+    est = 2 * hq * est_len * d if tw.prune_enabled else 0.0
+    topp = hq * topp_len * tw.topp_iters if tw.prune_enabled else 0.0
+    attn = 2 * 2 * hq * attn_len * d
+    return {"select": float(sel), "estimate": float(est), "topp": float(topp),
+            "attend": float(attn), "total": float(sel + est + topp + attn)}
+
+
+def twilight_stage_bytes(tw: TwilightConfig, n: int, hq: int, hkv: int,
+                         d: int, *, bytes_kv: int = BYTES_BF16
+                         ) -> dict[str, float]:
+    """Per-stage HBM bytes of one decode step's attention operator.
+
+    The compact path's traffic follows the candidate budget: the INT4
+    estimate reads d/2+8 bytes for B0 rows and the final K/V gather reads
+    the attended buffer only.  The dense path re-reads the full shadow
+    cache, n-length f32 weight rows, and streams the whole K/V cache
+    behind the mask.
+    """
+    if not tw.enabled:
+        full = 2 * n * hkv * d * bytes_kv
+        return {"select": 0.0, "estimate": 0.0, "topp": 0.0, "attend": full,
+                "total": full}
+    b0 = tw.candidate_budget(n)
+    sel = 2 * (n // tw.page_size) * hkv * d * bytes_kv  # Quest page metadata
+    if tw.compact:
+        m = min(n, b0)
+        est_len = m
+        topp_len = m
+        # Matches _compact_pipeline: re-compaction needs pruner weights.
+        attn_len = tw.pruned_capacity(m) if tw.prune_enabled else m
+    else:
+        est_len = topp_len = attn_len = n
+    est = est_len * hkv * (d // 2 + 8) if tw.prune_enabled else 0.0
+    topp = topp_len * hq * BYTES_F32 if tw.prune_enabled else 0.0
+    attn = 2 * attn_len * hkv * d * bytes_kv
+    return {"select": float(sel), "estimate": float(est), "topp": float(topp),
+            "attend": float(attn), "total": float(sel + est + topp + attn)}
+
+
 def decode_flops(cfg: ModelConfig, batch: int, ctx: int) -> float:
     """One decode step: forward over `batch` tokens with full context `ctx`,
     including the Twilight estimate (q·K̃ over the candidate set) and the
@@ -151,16 +222,8 @@ def decode_flops(cfg: ModelConfig, batch: int, ctx: int) -> float:
     # Attention context terms, per attention layer.
     n_attn = sum(s.kind == "attn" for s in specs) * repeats
     dh, hq, hkv = cfg.d_head, cfg.n_heads, cfg.n_kv_heads
-    tw = cfg.twilight
-    if tw.enabled:
-        b0 = tw.candidate_budget(ctx)
-        b1 = max(1, int(0.02 * ctx))  # ~2% survives top-p (paper Tab. 2)
-        est = 2 * batch * hq * b0 * dh  # INT4 SpGEMV estimate
-        topp = batch * hq * b0 * tw.topp_iters  # fused select+sum passes
-        attn = 2 * 2 * batch * b1 * hq * dh
-        f += n_attn * (est + topp + attn)
-    else:
-        f += n_attn * 2 * 2 * batch * ctx * hq * dh
+    stages = twilight_stage_flops(cfg.twilight, ctx, hq, hkv, dh)
+    f += n_attn * batch * stages["total"]
     f += 2 * batch * cfg.d_model * cfg.padded_vocab
     return f
 
@@ -170,20 +233,9 @@ def decode_hbm_bytes(cfg: ModelConfig, batch: int, ctx: int) -> float:
     specs, repeats = layer_schedule(cfg)
     n_attn = sum(s.kind == "attn" for s in specs) * repeats
     weights = active_param_count(cfg) * BYTES_BF16
-    dh, hkv = cfg.d_head, cfg.n_kv_heads
-    tw = cfg.twilight
-    per_seq = 0.0
-    if tw.enabled:
-        b0 = tw.candidate_budget(ctx)
-        b1 = max(1, int(0.02 * ctx))
-        meta = 2 * (ctx // tw.page_size) * hkv * dh * BYTES_BF16  # Quest
-        est = b0 * hkv * (dh // 2 + 8)  # packed INT4 + scale/zero
-        topp = b0 * hkv * BYTES_F32
-        final = 2 * b1 * hkv * dh * BYTES_BF16
-        per_seq = meta + est + topp + final
-    else:
-        per_seq = 2 * ctx * hkv * dh * BYTES_BF16
-    return weights + batch * n_attn * per_seq
+    dh, hq, hkv = cfg.d_head, cfg.n_heads, cfg.n_kv_heads
+    stages = twilight_stage_bytes(cfg.twilight, ctx, hq, hkv, dh)
+    return weights + batch * n_attn * stages["total"]
 
 
 def prefill_hbm_bytes(cfg: ModelConfig, batch: int, seq: int) -> float:

@@ -7,7 +7,9 @@ over jax arrays (jit/shard/scan-safe); stateful cache plumbing lives in
 
 from repro.core.attention import (
     attention_error,
+    compact_decode_attention,
     full_decode_attention,
+    gather_kv_heads,
     gathered_sparse_decode_attention,
     masked_sparse_decode_attention,
     mha_attention,
@@ -26,6 +28,9 @@ from repro.core.selectors import (
     build_page_meta,
     calibrate_ds_channels,
     group_union,
+    index_capacity,
+    indices_from_mask,
+    indices_to_mask,
     selector_from_name,
     topk_mask,
 )
@@ -44,7 +49,9 @@ from repro.core.twilight import (
 
 __all__ = [
     "attention_error",
+    "compact_decode_attention",
     "full_decode_attention",
+    "gather_kv_heads",
     "gathered_sparse_decode_attention",
     "masked_sparse_decode_attention",
     "mha_attention",
@@ -64,6 +71,9 @@ __all__ = [
     "build_page_meta",
     "calibrate_ds_channels",
     "group_union",
+    "index_capacity",
+    "indices_from_mask",
+    "indices_to_mask",
     "selector_from_name",
     "topk_mask",
     "ToppResult",

@@ -17,6 +17,8 @@ from repro.core.topp import masked_softmax
 __all__ = [
     "full_decode_attention",
     "masked_sparse_decode_attention",
+    "compact_decode_attention",
+    "gather_kv_heads",
     "gathered_sparse_decode_attention",
     "mha_attention",
     "attention_error",
@@ -84,6 +86,38 @@ def masked_sparse_decode_attention(
     return out.astype(q.dtype)
 
 
+def compact_decode_attention(
+    q: jax.Array,  # (b, hq, d)
+    k_gathered: jax.Array,  # (b, hkv, m, d) — candidate K rows
+    v_gathered: jax.Array,  # (b, hkv, m, d) — candidate V rows
+    valid: jax.Array,  # (b, hkv, m) bool — which slots are live
+) -> jax.Array:
+    """Attention over pre-gathered fixed-size candidate buffers.
+
+    The hot compact path: everything here is O(m), never O(n).  Callers
+    gather K/V (from the fp16 cache or the INT4 shadow cache) at the
+    selector's candidate indices first.
+    """
+    b, hkv, m, d = k_gathered.shape
+    hq = q.shape[1]
+    group = hq // hkv
+    qg = q.astype(jnp.float32).reshape(b, hkv, group, d)
+    scores = jnp.einsum("bhgd,bhmd->bhgm", qg,
+                        k_gathered.astype(jnp.float32)) / jnp.sqrt(
+        jnp.asarray(d, jnp.float32)
+    )
+    w = masked_softmax(scores, valid[:, :, None, :])
+    out = jnp.einsum("bhgm,bhmd->bhgd", w, v_gathered.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def gather_kv_heads(x: jax.Array, indices: jax.Array) -> jax.Array:
+    """Gather cache rows (b, n, hkv, c) at per-KV-head positions (b, hkv, m)
+    -> (b, hkv, m, c)."""
+    return jnp.take_along_axis(
+        jnp.moveaxis(x, 2, 1), indices[..., None], axis=2)
+
+
 def gathered_sparse_decode_attention(
     q: jax.Array,  # (b, hq, d)
     keys: jax.Array,  # (b, n, hkv, d)
@@ -94,26 +128,12 @@ def gathered_sparse_decode_attention(
     """Budget-buffer formulation: attention over a fixed-size gathered subset.
 
     Equivalent to the masked form when (indices, valid) enumerate the mask;
-    this is what the sparse_attn Pallas kernel computes after the engine
-    compacts the top-p mask into per-group index buffers.
+    this is what the sparse_attn Pallas kernel computes after the pipeline
+    compacts candidates into per-group index buffers.
     """
-    b, n, hkv, d = keys.shape
-    hq = q.shape[1]
-    group = hq // hkv
-    # Gather K/V per kv head: (b, hkv, m, d)
-    kg = jnp.take_along_axis(
-        jnp.moveaxis(keys, 1, 2), indices[..., None], axis=2
-    ).astype(jnp.float32)
-    vg = jnp.take_along_axis(
-        jnp.moveaxis(values, 1, 2), indices[..., None], axis=2
-    ).astype(jnp.float32)
-    qg = q.astype(jnp.float32).reshape(b, hkv, group, d)
-    scores = jnp.einsum("bhgd,bhmd->bhgm", qg, kg) / jnp.sqrt(
-        jnp.asarray(d, jnp.float32)
-    )
-    w = masked_softmax(scores, valid[:, :, None, :])
-    out = jnp.einsum("bhgm,bhmd->bhgd", w, vg)
-    return out.reshape(b, hq, d).astype(q.dtype)
+    return compact_decode_attention(
+        q, gather_kv_heads(keys, indices), gather_kv_heads(values, indices),
+        valid)
 
 
 def mha_attention(

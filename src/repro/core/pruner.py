@@ -4,6 +4,15 @@ candidate set with an INT4-quantized K cache, then keep only the top-p subset.
 GQA semantics (Appendix B.2): weights and top-p masks are computed per *query*
 head; the pruned set actually loaded for a KV head is the union over its
 group, so budgets are group-wise under GQA and head-wise under MHA.
+
+Two entry points:
+
+* :meth:`TwilightPruner.prune` — dense/debug path over (b, hkv, n) masks;
+  estimates q·K̃ against the *whole* cache.  The test oracle.
+* :meth:`TwilightPruner.prune_at` — compact production path over a selector
+  index buffer (b, hkv, m): gathers the INT4 shadow codes at the candidate
+  indices and runs estimate + top-p on m-length rows, so per-step cost
+  scales with the candidate budget B0, not the context length n.
 """
 
 from __future__ import annotations
@@ -16,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import quant as quant_lib
 from repro.core import topp as topp_lib
+from repro.core.attention import gather_kv_heads
 from repro.core.selectors import group_union
 
 __all__ = ["PrunerStats", "TwilightPruner"]
@@ -25,7 +35,10 @@ class PrunerStats(NamedTuple):
     candidate_budget: jax.Array  # i32 (b, hkv) — |I0| per group
     pruned_budget: jax.Array  # i32 (b, hkv) — |I1| per group after top-p
     threshold: jax.Array  # f32 (b, hq) — applied weight threshold
-    weights: jax.Array  # f32 (b, hq, n) — estimated normalized weights
+    # f32 (b, hq, n) estimated normalized weights.  Dense/debug path only —
+    # the compact path never materializes an n-length buffer, so the jitted
+    # decode step carries None here.
+    weights: jax.Array | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +84,83 @@ class TwilightPruner:
         scores = jnp.einsum("bhgd,bnhd->bhgn", qg, k_est,
                             preferred_element_type=jnp.float32)
         return scores.reshape(b, hq, n) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    def estimate_scores_at(
+        self,
+        q: jax.Array,  # (b, hq, d)
+        indices: jax.Array,  # (b, hkv, m) i32 candidate positions
+        keys: jax.Array | None = None,  # (b, n, hkv, d) fp K
+        qkeys: quant_lib.QuantizedTensor | None = None,  # INT4 shadow cache
+    ) -> jax.Array:
+        """q·K̃ / sqrt(d) on the gathered candidate buffer: (b, hkv, g, m).
+
+        Only m rows of the shadow cache are touched (d/2+8 bytes each) — the
+        compact analogue of :meth:`estimate_scores`.
+        """
+        b, hkv, m = indices.shape
+        hq = q.shape[1]
+        group = hq // hkv
+        if self.estimate_bits <= 4:
+            if qkeys is None:
+                if keys is None:
+                    raise ValueError("need keys or qkeys")
+                # Quantization is per-(token, head) row, so gathering the m
+                # candidate rows first and quantizing those is bit-identical
+                # to quantizing the whole cache — and keeps this O(B0).
+                gathered = quant_lib.quantize_int4(
+                    gather_kv_heads(keys, indices))
+            else:
+                gathered = quant_lib.QuantizedTensor(
+                    packed=gather_kv_heads(qkeys.packed, indices),
+                    scale=gather_kv_heads(qkeys.scale, indices),
+                    zero=gather_kv_heads(qkeys.zero, indices))
+            k_est = quant_lib.dequantize_int4(gathered, dtype=jnp.bfloat16)
+        else:
+            if keys is None:
+                raise ValueError("need full-precision keys")
+            k_est = gather_kv_heads(keys, indices)
+        d = k_est.shape[-1]
+        qg = q.reshape(b, hkv, group, d).astype(k_est.dtype)
+        scores = jnp.einsum("bhgd,bhmd->bhgm", qg, k_est,
+                            preferred_element_type=jnp.float32)
+        return scores / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    def prune_at(
+        self,
+        q: jax.Array,  # (b, hq, d)
+        indices: jax.Array,  # (b, hkv, m) i32 from select_indices
+        valid: jax.Array,  # (b, hkv, m) bool — live candidate slots
+        *,
+        keys: jax.Array | None = None,
+        qkeys: quant_lib.QuantizedTensor | None = None,
+        p: jax.Array | float | None = None,
+    ) -> tuple[jax.Array, PrunerStats, jax.Array]:
+        """Compact top-p prune: (kept (b, hkv, m) bool, stats, slot_weights).
+
+        ``kept`` marks the surviving *slots* of the index buffer (GQA group
+        union), i.e. the final set is ``indices[kept]``.  Equivalent to
+        :meth:`prune` on the scattered mask, but every buffer is m-length.
+        ``slot_weights`` (b, hkv, m) f32 is the group-max estimated weight
+        per slot — the ranking key for the optional B1 re-compaction before
+        the final attention gather.
+        """
+        b, hkv, m = indices.shape
+        hq = q.shape[1]
+        p_val = self.p if p is None else p
+
+        scores = self.estimate_scores_at(q, indices, keys, qkeys)  # (b,hkv,g,m)
+        valid_g = jnp.broadcast_to(valid[:, :, None, :], scores.shape)
+        weights = topp_lib.masked_softmax(scores, valid_g)
+        res = topp_lib.topp_mask(weights, p_val, iters=self.iters)
+        kept_q = res.mask & valid_g  # (b, hkv, g, m)
+        kept = kept_q.any(axis=2)  # group union at slot granularity
+        stats = PrunerStats(
+            candidate_budget=valid.sum(-1).astype(jnp.int32),
+            pruned_budget=kept.sum(-1).astype(jnp.int32),
+            threshold=res.threshold.reshape(b, hq),
+            weights=None,
+        )
+        return kept, stats, weights.max(axis=2)
 
     def prune(
         self,

@@ -1,14 +1,34 @@
 """Token Selectors — the black-box *base algorithms* Twilight wraps (§4.1).
 
-A selector produces a **candidate mask** over cached tokens at KV-head
-granularity (GQA group-union semantics, Appendix B.2): query-aware selectors
-score per query head and the group's final candidate set is the union over
-its query heads.
+A selector produces a **candidate set** over cached tokens at KV-head
+granularity with *group-wise budgets* (Appendix B.2): query-aware selectors
+score per query head and rank candidates by the group **max** score, so the
+set actually loaded for a KV head is exactly the B0 budget — the
+group-level analogue of the union (a token in any group member's top set
+has a high group-max score).  The downstream pruner applies true per-query
+top-p then unions kept slots, so adaptivity stays per query head.  Two
+equivalent representations are exposed:
+
+* ``select(q, ctx, budget) -> bool mask (b, hkv, n)`` — the dense mask API;
+  simple, sharding-oblivious, and the test oracle for the compact path.
+* ``select_indices(q, ctx, budget) -> (indices (b, hkv, m) i32, valid
+  (b, hkv, m) bool)`` — the **compact index API** the production pipeline
+  consumes.  ``m`` is a *static* per-selector capacity derived from the
+  budget (page-aligned for Quest, lane-rounded otherwise, see
+  :func:`index_capacity`), so downstream stages — INT4 score estimation,
+  top-p, gathered attention — operate on ``m``-length buffers and their
+  cost scales with the candidate budget B0, never the context length n.
+  Indices are ascending cache positions; dead slots have ``valid=False``
+  and index 0 (safe to gather).  Both representations enumerate the *same*
+  candidate set, so compact Select→Prune→Attend matches the dense oracle.
 
 Budgets are *static* Python ints (conservative B0, e.g. seq/4) so all shapes
-stay static for TPU; dynamism lives in the *values* of the masks, which is
-exactly the paper's "dynamic budget as data, not shape" adaptation for SPMD
-hardware.
+stay static for TPU; dynamism lives in the *values* of the masks/valid bits,
+which is exactly the paper's "dynamic budget as data, not shape" adaptation
+for SPMD hardware.  Group-wise budgets make the compact capacity exactly
+the (lane-rounded) budget; capacities assume distinct selector scores
+(ties at the top-k boundary may otherwise overflow the buffer — ties are
+measure-zero for float scores).
 
 Implemented base algorithms (paper §2 baselines):
 
@@ -40,6 +60,8 @@ __all__ = [
     "calibrate_ds_channels",
     "group_union",
     "topk_mask",
+    "indices_from_mask",
+    "indices_to_mask",
     "selector_from_name",
 ]
 
@@ -69,6 +91,12 @@ class TokenSelector(Protocol):
         """q: (b, hq, d) -> bool candidate mask (b, hkv, n)."""
         ...
 
+    def select_indices(
+        self, q: jax.Array, ctx: SelectionContext, budget: int
+    ) -> tuple[jax.Array, jax.Array]:
+        """q: (b, hq, d) -> (indices (b, hkv, m) i32, valid (b, hkv, m))."""
+        ...
+
 
 def _length_mask(n: int, length: jax.Array | None, like: jax.Array) -> jax.Array:
     if length is None:
@@ -95,6 +123,49 @@ def topk_mask(scores: jax.Array, k: int) -> jax.Array:
     return scores >= kth
 
 
+def _round_up(x: int, align: int) -> int:
+    return -(-x // align) * align
+
+
+def index_capacity(budget: int, n: int, *, align: int = 128) -> int:
+    """Static slot count of a compact index buffer.
+
+    Budgets are group-wise (group-max ranking keeps the candidate count at
+    exactly the budget per KV head), lane-rounded for TPU tiling, and
+    always capped at ``n`` (the dense representation is never worse).
+    """
+    return min(n, _round_up(max(1, budget), align))
+
+
+def indices_from_mask(mask: jax.Array, capacity: int) -> tuple[jax.Array, jax.Array]:
+    """Compact a boolean mask (..., n) into (indices (..., m), valid).
+
+    Indices are the True positions in ascending order; surplus slots carry
+    ``valid=False`` and index 0 (safe for gathers).  If the mask has more
+    than ``capacity`` True entries the *highest* positions are dropped —
+    callers size ``capacity`` so this cannot happen for distinct scores.
+    """
+    n = mask.shape[-1]
+    capacity = min(capacity, n)
+    # Rank True entries by ascending position: position i scores n - i > 0,
+    # False entries score 0, so top_k returns candidates first, in order.
+    rank = jnp.where(mask, jnp.arange(n, 0, -1, dtype=jnp.int32), 0)
+    vals, idx = jax.lax.top_k(rank, capacity)
+    valid = vals > 0
+    return jnp.where(valid, idx, 0).astype(jnp.int32), valid
+
+
+def indices_to_mask(indices: jax.Array, valid: jax.Array, n: int) -> jax.Array:
+    """Scatter a compact index buffer (..., m) back to a bool mask (..., n).
+
+    Debug/test helper — the production path never materializes the dense
+    mask.  Invalid slots contribute nothing, whatever index they carry.
+    """
+    onehot = (indices[..., None] == jnp.arange(n, dtype=indices.dtype)
+              ) & valid[..., None]
+    return onehot.any(axis=-2)
+
+
 def build_page_meta(keys: jax.Array, page_size: int) -> PageMeta:
     """Compute Quest per-page min/max metadata from K (b, n, hkv, d)."""
     b, n, hkv, d = keys.shape
@@ -117,17 +188,30 @@ class FullSelector:
 
     name: str = "full"
 
+    @staticmethod
+    def _shapes(q: jax.Array, ctx: SelectionContext) -> tuple[int, int]:
+        if ctx.keys is not None:
+            return ctx.keys.shape[1], ctx.keys.shape[2]
+        if ctx.page_meta is not None:
+            return (ctx.page_meta.kmax.shape[1] * ctx.page_meta.page_size,
+                    ctx.page_meta.kmax.shape[2])
+        raise ValueError("FullSelector needs keys or page_meta for shapes")
+
     def select(self, q: jax.Array, ctx: SelectionContext, budget: int) -> jax.Array:
         del budget
-        b, hq, _ = q.shape
-        if ctx.keys is not None:
-            n, hkv = ctx.keys.shape[1], ctx.keys.shape[2]
-        elif ctx.page_meta is not None:
-            n = ctx.page_meta.kmax.shape[1] * ctx.page_meta.page_size
-            hkv = ctx.page_meta.kmax.shape[2]
-        else:
-            raise ValueError("FullSelector needs keys or page_meta for shapes")
+        b = q.shape[0]
+        n, hkv = self._shapes(q, ctx)
         return jnp.broadcast_to(_length_mask(n, ctx.length, q), (b, hkv, n))
+
+    def select_indices(
+        self, q: jax.Array, ctx: SelectionContext, budget: int
+    ) -> tuple[jax.Array, jax.Array]:
+        del budget  # everything is a candidate: capacity is n by definition
+        b = q.shape[0]
+        n, hkv = self._shapes(q, ctx)
+        idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, hkv, n))
+        valid = jnp.broadcast_to(_length_mask(n, ctx.length, q), (b, hkv, n))
+        return idx, valid
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,7 +220,10 @@ class QuestSelector:
 
     name: str = "quest"
 
-    def select(self, q: jax.Array, ctx: SelectionContext, budget: int) -> jax.Array:
+    @staticmethod
+    def _page_mask(q: jax.Array, ctx: SelectionContext, budget: int
+                   ) -> tuple[jax.Array, int]:
+        """Group-budget page mask (b, hkv, n_pages) and the pages budget."""
         if ctx.page_meta is None:
             raise ValueError("QuestSelector requires page metadata")
         pm = ctx.page_meta
@@ -145,17 +232,43 @@ class QuestSelector:
         group = hq // hkv
         # Upper bound of q·k over each page (Quest): per-channel max of
         # q*kmax and q*kmin, summed over channels.  Each query head scores
-        # only its own KV head's pages.
+        # only its own KV head's pages; pages are ranked by the group-max
+        # UB so the per-KV-head selection is exactly the budget
+        # (group-wise budgets, Appendix B.2).
         qg = q.reshape(b, hkv, group, 1, d)  # (b, hkv, g, 1, d)
         kmax = jnp.moveaxis(pm.kmax, 1, 2)[:, :, None].astype(q.dtype)  # (b,hkv,1,p,d)
         kmin = jnp.moveaxis(pm.kmin, 1, 2)[:, :, None].astype(q.dtype)
         ub = jnp.sum(jnp.maximum(qg * kmax, qg * kmin), axis=-1)  # (b,hkv,g,p)
-        n_pages = ub.shape[-1]
         pages_budget = max(1, budget // pm.page_size)
-        per_head_pages = topk_mask(ub, pages_budget)  # (b, hkv, group, n_pages)
-        page_mask = per_head_pages.any(axis=2)  # union over group
+        return topk_mask(ub.max(axis=2), pages_budget), pages_budget
+
+    def select(self, q: jax.Array, ctx: SelectionContext, budget: int) -> jax.Array:
+        pm = ctx.page_meta
+        page_mask, _ = self._page_mask(q, ctx, budget)
+        n = page_mask.shape[-1] * pm.page_size
         tok = jnp.repeat(page_mask, pm.page_size, axis=-1)
-        return tok & _length_mask(n_pages * pm.page_size, ctx.length, q)
+        return tok & _length_mask(n, ctx.length, q)
+
+    def select_indices(
+        self, q: jax.Array, ctx: SelectionContext, budget: int
+    ) -> tuple[jax.Array, jax.Array]:
+        """Page-aligned compact candidates: top pages are compacted at page
+        granularity (cheap — n/page_size rank entries), then expanded to
+        token indices, so the buffer is a whole number of pages."""
+        pm = ctx.page_meta
+        page_mask, pages_budget = self._page_mask(q, ctx, budget)
+        b, hkv, n_pages = page_mask.shape
+        ps = pm.page_size
+        cap_pages = min(n_pages, pages_budget)
+        pidx, pvalid = indices_from_mask(page_mask, cap_pages)
+        offs = jnp.arange(ps, dtype=jnp.int32)
+        idx = (pidx[..., None] * ps + offs).reshape(b, hkv, cap_pages * ps)
+        valid = jnp.broadcast_to(
+            pvalid[..., None], (b, hkv, cap_pages, ps)
+        ).reshape(b, hkv, cap_pages * ps)
+        if ctx.length is not None:
+            valid &= idx < ctx.length[:, None, None]
+        return jnp.where(valid, idx, 0), valid
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,10 +289,19 @@ class DoubleSparsitySelector:
         qg = q.reshape(b, hkv, group, d)
         q_lab = jnp.take_along_axis(qg, ch[None, :, None, :], axis=-1)  # (b,hkv,g,r)
         scores = jnp.einsum("bhgr,bnhr->bhgn", q_lab, k_lab.astype(q.dtype))
-        scores = jnp.where(_length_mask(n, ctx.length, q)[:, :, None], scores,
+        # Group-max ranking keeps the per-KV-head candidate count at
+        # exactly the budget (group-wise budgets, Appendix B.2).
+        scores = jnp.where(_length_mask(n, ctx.length, q),
+                           scores.max(axis=2),
                            jnp.finfo(scores.dtype).min)
-        per_head = topk_mask(scores, budget)  # (b, hkv, g, n)
-        return per_head.any(axis=2) & _length_mask(n, ctx.length, q)
+        return topk_mask(scores, budget) & _length_mask(n, ctx.length, q)
+
+    def select_indices(
+        self, q: jax.Array, ctx: SelectionContext, budget: int
+    ) -> tuple[jax.Array, jax.Array]:
+        mask = self.select(q, ctx, budget)
+        return indices_from_mask(
+            mask, index_capacity(budget, mask.shape[-1]))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,6 +326,14 @@ class StreamingSelector:
         mask &= pos[None, :] < length[:, None]
         return jnp.broadcast_to(mask[:, None, :], (b, hkv, n))
 
+    def select_indices(
+        self, q: jax.Array, ctx: SelectionContext, budget: int
+    ) -> tuple[jax.Array, jax.Array]:
+        mask = self.select(q, ctx, budget)
+        # Query-agnostic: sinks + recent window never exceed the budget.
+        return indices_from_mask(
+            mask, index_capacity(budget, mask.shape[-1]))
+
 
 @dataclasses.dataclass(frozen=True)
 class H2OSelector:
@@ -227,6 +357,15 @@ class H2OSelector:
         scores = jnp.where(valid, ctx.accum_scores, jnp.finfo(jnp.float32).min)
         heavy = topk_mask(scores, n_heavy)
         return (heavy | recent[:, None, :]) & valid
+
+    def select_indices(
+        self, q: jax.Array, ctx: SelectionContext, budget: int
+    ) -> tuple[jax.Array, jax.Array]:
+        mask = self.select(q, ctx, budget)
+        # Heavy hitters are scored per KV head (no group union): heavy +
+        # recent together stay within the budget.
+        return indices_from_mask(
+            mask, index_capacity(budget, mask.shape[-1]))
 
 
 _REGISTRY = {

@@ -7,6 +7,19 @@
 The pipeline is a pure function over arrays so it jits/shards/scans freely;
 stateful concerns (paged cache, INT4 shadow cache maintenance, H2O stats)
 live in ``repro.serving``.
+
+Two representations of the candidate/pruned sets are supported:
+
+* ``compact=True`` (default, the production path): the selector emits a
+  **compact index buffer** (b, hkv, m) with m derived from the candidate
+  budget B0; the pruner gathers INT4 codes at those indices and estimates
+  scores on m-length rows; top-p binary-searches m-length rows; the final
+  attention gathers K/V at the surviving slots.  Every stage after the
+  selector is O(B0)/O(B1), never O(n) — the selector bounds *traffic*, the
+  pruner bounds *compute* (§4.3).
+* ``compact=False`` (the dense oracle / debug path): n-length boolean masks
+  thread through every stage exactly as in the paper's definitions; used as
+  the equivalence oracle in tests and for mask-level introspection.
 """
 
 from __future__ import annotations
@@ -18,7 +31,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant as quant_lib
-from repro.core.attention import full_decode_attention, masked_sparse_decode_attention
+from repro.core.attention import (
+    compact_decode_attention,
+    full_decode_attention,
+    gather_kv_heads,
+    masked_sparse_decode_attention,
+)
 from repro.core.pruner import PrunerStats, TwilightPruner
 from repro.core.selectors import (
     SelectionContext,
@@ -58,6 +76,25 @@ class TwilightConfig:
     # halves the final K read and, combined with offloading, removes the
     # need to keep fp16 K resident at all.  V stays full precision.
     reuse_int4_for_attention: bool = False
+    # compact=True threads candidate *index buffers* through the pipeline
+    # so estimate/top-p/attention cost scales with B0, not n; False keeps
+    # the dense n-length masks (the oracle the compact path is tested
+    # against).
+    compact: bool = True
+    # Optional second compaction before the final attention: the kept slots
+    # are re-compacted (ranked by estimated weight, descending) into a
+    # static buffer of ``pruned_cap_frac * m`` slots so the final K/V
+    # gather reads ~B1 rows, not B0.  None attends over the full candidate
+    # buffer behind the kept mask (exact).  With a cap, overflow beyond the
+    # cap drops the *lowest-weight* kept slots — bounded mass loss; the
+    # paper's measured B1 (~2% of n) sits far below the default serving cap
+    # of 1/4 of the candidate buffer.
+    pruned_cap_frac: float | None = None
+    # Final-attention backend for the compact path: "jnp" is the reference,
+    # "pallas" routes through the sparse_attn gathered kernel, "auto" picks
+    # pallas only on a real TPU (interpret-mode Pallas is much slower than
+    # jnp on CPU hosts).
+    attn_backend: str = "auto"
 
     def candidate_budget(self, n: int) -> int:
         if self.fixed_budget:
@@ -73,12 +110,108 @@ class TwilightConfig:
         return TwilightPruner(p=self.p, iters=self.topp_iters,
                               estimate_bits=self.estimate_bits)
 
+    def pruned_capacity(self, m: int) -> int:
+        """Static slot count of the post-top-p attention buffer."""
+        if self.pruned_cap_frac is None:
+            return m
+        cap = max(1, int(m * self.pruned_cap_frac))
+        return min(m, -(-cap // 128) * 128)  # lane-rounded
+
+    def use_pallas_attention(self) -> bool:
+        if self.attn_backend == "pallas":
+            return True
+        if self.attn_backend == "jnp":
+            return False
+        if self.attn_backend != "auto":
+            raise ValueError(f"unknown attn_backend {self.attn_backend!r}")
+        return jax.default_backend() == "tpu"
+
 
 class TwilightOutput(NamedTuple):
+    """Pipeline output.
+
+    The dense path fills the n-length ``candidate_mask``/``pruned_mask``;
+    the compact path fills ``indices``/``candidate_valid``/``pruned_valid``
+    (slot-granular over the index buffer) and leaves the masks None — use
+    :func:`repro.core.selectors.indices_to_mask` to scatter them for
+    debugging.
+    """
+
     out: jax.Array  # (b, hq, d)
-    candidate_mask: jax.Array  # (b, hkv, n)
-    pruned_mask: jax.Array  # (b, hkv, n)
+    candidate_mask: jax.Array | None  # (b, hkv, n) — dense path only
+    pruned_mask: jax.Array | None  # (b, hkv, n) — dense path only
     stats: PrunerStats
+    indices: jax.Array | None = None  # (b, hkv, m) i32 — compact path only
+    candidate_valid: jax.Array | None = None  # (b, hkv, m) bool
+    pruned_valid: jax.Array | None = None  # (b, hkv, m) bool
+
+
+def _trivial_stats(b: int, hq: int, hkv: int, n: jax.Array | int) -> PrunerStats:
+    full = jnp.full((b, hkv), n, jnp.int32)
+    return PrunerStats(candidate_budget=full, pruned_budget=full,
+                       threshold=jnp.zeros((b, hq), jnp.float32), weights=None)
+
+
+def _compact_pipeline(
+    q: jax.Array,
+    keys: jax.Array,
+    values: jax.Array,
+    cfg: TwilightConfig,
+    selector: TokenSelector,
+    b0: int,
+    ctx: SelectionContext,
+    qkeys: quant_lib.QuantizedTensor | None,
+) -> TwilightOutput:
+    b, n, hkv, d = keys.shape
+    hq = q.shape[1]
+    indices, valid = selector.select_indices(q, ctx, b0)  # (b, hkv, m)
+    m = indices.shape[-1]
+
+    slot_weights = None
+    if not cfg.prune_enabled:
+        kept = valid
+        stats = PrunerStats(
+            candidate_budget=valid.sum(-1).astype(jnp.int32),
+            pruned_budget=valid.sum(-1).astype(jnp.int32),
+            threshold=jnp.zeros((b, hq), jnp.float32),
+            weights=None,
+        )
+    else:
+        pruner = cfg.make_pruner()
+        kept, stats, slot_weights = pruner.prune_at(
+            q, indices, valid, keys=keys, qkeys=qkeys)
+
+    # Final-attention buffer.  Default: every candidate slot is gathered
+    # and pruned slots are masked out of the softmax (the Pallas kernel's
+    # page early-out elides their compute).  With pruned_cap_frac the kept
+    # slots are re-compacted (weight-ranked) so the K/V gather reads ~B1
+    # rows instead of B0.
+    attn_indices, attn_valid = indices, kept
+    b1_cap = cfg.pruned_capacity(m)
+    if slot_weights is not None and b1_cap < m:
+        rank = jnp.where(kept, slot_weights, -1.0)
+        _, slot_idx = jax.lax.top_k(rank, b1_cap)  # (b, hkv, b1_cap)
+        attn_valid = jnp.take_along_axis(kept, slot_idx, axis=-1)
+        attn_indices = jnp.where(
+            attn_valid, jnp.take_along_axis(indices, slot_idx, axis=-1), 0)
+
+    if cfg.reuse_int4_for_attention and qkeys is not None:
+        gathered_q = quant_lib.QuantizedTensor(
+            packed=gather_kv_heads(qkeys.packed, attn_indices),
+            scale=gather_kv_heads(qkeys.scale, attn_indices),
+            zero=gather_kv_heads(qkeys.zero, attn_indices))
+        kg = quant_lib.dequantize_int4(gathered_q, dtype=keys.dtype)
+    else:
+        kg = gather_kv_heads(keys, attn_indices)
+    vg = gather_kv_heads(values, attn_indices)
+    if cfg.use_pallas_attention():
+        from repro.kernels.sparse_attn.ops import compact_attention
+        out = compact_attention(q, kg, vg, attn_valid)
+    else:
+        out = compact_decode_attention(q, kg, vg, attn_valid)
+    return TwilightOutput(out=out, candidate_mask=None, pruned_mask=None,
+                          stats=stats, indices=indices, candidate_valid=valid,
+                          pruned_valid=kept)
 
 
 def twilight_decode_attention(
@@ -102,14 +235,8 @@ def twilight_decode_attention(
     if not cfg.enabled:
         out = full_decode_attention(q, keys, values, length=length)
         ones = jnp.ones((b, hkv, n), bool)
-        stats = PrunerStats(
-            candidate_budget=jnp.full((b, hkv), n, jnp.int32),
-            pruned_budget=jnp.full((b, hkv), n, jnp.int32),
-            threshold=jnp.zeros((b, hq), jnp.float32),
-            weights=jnp.zeros((b, hq, n), jnp.float32),
-        )
         return TwilightOutput(out=out, candidate_mask=ones, pruned_mask=ones,
-                              stats=stats)
+                              stats=_trivial_stats(b, hq, hkv, n))
 
     if ctx is None:
         # Ergonomic fallback: derive selector metadata from the keys.  The
@@ -124,8 +251,12 @@ def twilight_decode_attention(
 
     selector = cfg.make_selector()
     b0 = cfg.candidate_budget(n)
-    candidate_mask = selector.select(q, ctx, b0)  # (b, hkv, n)
 
+    if cfg.compact:
+        return _compact_pipeline(q, keys, values, cfg, selector, b0, ctx,
+                                 qkeys)
+
+    candidate_mask = selector.select(q, ctx, b0)  # (b, hkv, n)
     if not cfg.prune_enabled:
         # Base algorithm alone (pure top-k baseline rows of Tables 2-4).
         pruned_mask = candidate_mask
@@ -133,7 +264,7 @@ def twilight_decode_attention(
             candidate_budget=candidate_mask.sum(-1).astype(jnp.int32),
             pruned_budget=candidate_mask.sum(-1).astype(jnp.int32),
             threshold=jnp.zeros((b, hq), jnp.float32),
-            weights=jnp.zeros((b, hq, n), jnp.float32),
+            weights=None,
         )
     else:
         pruner = cfg.make_pruner()

@@ -6,7 +6,7 @@ import os
 
 import jax
 
-__all__ = ["default_interpret", "NEG_INF", "pick_block"]
+__all__ = ["default_interpret", "resolve_interpret", "NEG_INF", "pick_block"]
 
 # Large-negative finite stand-in for -inf inside kernels (avoids NaNs from
 # exp(-inf - -inf) in the online-softmax recurrences).
@@ -23,6 +23,12 @@ def default_interpret() -> bool:
     if os.environ.get("REPRO_FORCE_INTERPRET"):
         return True
     return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Single point of truth for the ``interpret`` tri-state every kernel
+    and ops wrapper accepts: None defers to :func:`default_interpret`."""
+    return default_interpret() if interpret is None else bool(interpret)
 
 
 def pick_block(n: int, preferred: int, align: int = 128) -> int:

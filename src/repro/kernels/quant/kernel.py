@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 _LEVELS = 15.0
 
 
@@ -40,8 +42,9 @@ def quantize_int4_rows(
     x: jax.Array,  # (rows, d), d even
     *,
     block_rows: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    interpret = resolve_interpret(interpret)
     rows, d = x.shape
     block_rows = min(block_rows, rows)
     if rows % block_rows:

@@ -10,7 +10,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant import QuantizedTensor
-from repro.kernels.common import default_interpret
 from repro.kernels.quant.kernel import quantize_int4_rows
 
 
@@ -20,8 +19,6 @@ def quantize_cache(
     block_rows: int = 256,
     interpret: bool | None = None,
 ) -> QuantizedTensor:
-    if interpret is None:
-        interpret = default_interpret()
     b, n, hkv, d = keys.shape
     rows = keys.reshape(b * n * hkv, d)
     packed, scale, zero = quantize_int4_rows(

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import NEG_INF
+from repro.kernels.common import NEG_INF, resolve_interpret
 
 
 def _sparse_attn_kernel(q_ref, k_ref, v_ref, mask_ref, out_ref,
@@ -80,8 +80,9 @@ def sparse_decode_attention(
     *,
     sm_scale: float,
     block_n: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     B, group, d = q.shape
     n = keys.shape[1]
     block_n = min(block_n, n)

@@ -1,11 +1,17 @@
 """Public wrappers for sparse decode attention.
 
 * :func:`masked_attention` — mask-driven kernel over the full cache layout.
-* :func:`gathered_attention` — engine fast path: candidate pages are first
+* :func:`compact_attention` — the compact-pipeline hot path: runs the
+  kernel directly on pre-gathered (b, hkv, m, d) candidate buffers (as
+  produced by ``repro.core.attention.gather_kv_heads``).
+* :func:`gathered_attention` — convenience: candidate pages are first
   compacted (gather) into a (B, B0) buffer so HBM traffic scales with the
   *candidate* budget, then the kernel applies the top-p mask inside.  This
   mirrors the paper's hierarchy: selector bounds traffic, pruner bounds
   compute.
+
+``interpret`` resolution is centralized in ``repro.kernels.common``: every
+wrapper and kernel defaults to ``None`` → ``default_interpret()``.
 """
 
 from __future__ import annotations
@@ -13,7 +19,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import default_interpret
 from repro.kernels.sparse_attn.kernel import sparse_decode_attention
 
 
@@ -33,8 +38,6 @@ def masked_attention(
     block_n: int = 128,
     interpret: bool | None = None,
 ) -> jax.Array:
-    if interpret is None:
-        interpret = default_interpret()
     b, hq, d = q.shape
     hkv = keys.shape[2]
     group = hq // hkv
@@ -46,6 +49,35 @@ def masked_attention(
         _to_bhkv(keys),
         _to_bhkv(values),
         mask.reshape(b * hkv, -1),
+        sm_scale=float(sm_scale),
+        block_n=block_n,
+        interpret=interpret,
+    )
+    return out.reshape(b, hq, d)
+
+
+def compact_attention(
+    q: jax.Array,  # (b, hq, d)
+    k_gathered: jax.Array,  # (b, hkv, m, d) — pre-gathered candidate K
+    v_gathered: jax.Array,  # (b, hkv, m, d) — pre-gathered candidate V
+    valid: jax.Array,  # (b, hkv, m) bool — live slots AND top-p kept
+    *,
+    sm_scale: float | None = None,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Kernel over pre-gathered candidate buffers (everything O(m))."""
+    b, hkv, m, d = k_gathered.shape
+    hq = q.shape[1]
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, group, d).reshape(b * hkv, group, d)
+    out = sparse_decode_attention(
+        qg,
+        k_gathered.reshape(b * hkv, m, d),
+        v_gathered.reshape(b * hkv, m, d),
+        valid.reshape(b * hkv, m),
         sm_scale=float(sm_scale),
         block_n=block_n,
         interpret=interpret,
@@ -65,26 +97,9 @@ def gathered_attention(
     interpret: bool | None = None,
 ) -> jax.Array:
     """Compact candidates first, then run the kernel on the small buffer."""
-    if interpret is None:
-        interpret = default_interpret()
-    b, hq, d = q.shape
-    hkv = keys.shape[2]
-    group = hq // hkv
-    if sm_scale is None:
-        sm_scale = 1.0 / (d ** 0.5)
     kh = jnp.moveaxis(keys, 2, 1)  # (b, hkv, n, d)
     vh = jnp.moveaxis(values, 2, 1)
     kg = jnp.take_along_axis(kh, indices[..., None], axis=2)  # (b, hkv, m, d)
     vg = jnp.take_along_axis(vh, indices[..., None], axis=2)
-    m = indices.shape[-1]
-    qg = q.reshape(b, hkv, group, d).reshape(b * hkv, group, d)
-    out = sparse_decode_attention(
-        qg,
-        kg.reshape(b * hkv, m, d),
-        vg.reshape(b * hkv, m, d),
-        valid.reshape(b * hkv, m),
-        sm_scale=float(sm_scale),
-        block_n=block_n,
-        interpret=interpret,
-    )
-    return out.reshape(b, hq, d)
+    return compact_attention(q, kg, vg, valid, sm_scale=sm_scale,
+                             block_n=block_n, interpret=interpret)

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _spgemv_kernel(qe_ref, qo_ref, packed_ref, scale_ref, zero_ref, out_ref,
                    *, sm_scale: float):
@@ -56,9 +58,10 @@ def spgemv_scores(
     *,
     sm_scale: float,
     block_n: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Estimated attention scores (B, group, n) in f32."""
+    interpret = resolve_interpret(interpret)
     B, group, d2 = q_even.shape
     n = packed.shape[1]
     block_n = min(block_n, n)

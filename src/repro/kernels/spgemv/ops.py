@@ -11,7 +11,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant import QuantizedTensor
-from repro.kernels.common import default_interpret
 from repro.kernels.spgemv.kernel import spgemv_scores
 
 
@@ -24,8 +23,6 @@ def estimate_scores(
     interpret: bool | None = None,
 ) -> jax.Array:
     """Returns (b, hq, n) f32 estimated scores (pre-softmax)."""
-    if interpret is None:
-        interpret = default_interpret()
     b, hq, d = q.shape
     _, n, hkv, d2 = qkeys.packed.shape
     group = hq // hkv

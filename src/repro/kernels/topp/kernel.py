@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _topp_kernel(w_ref, p_ref, thresh_ref, budget_ref, *, iters: int):
     w = w_ref[...].astype(jnp.float32)  # (block_r, n)
@@ -47,9 +49,10 @@ def topp_threshold_rows(
     *,
     iters: int = 24,
     block_rows: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Returns (threshold (rows, 1) f32, budget (rows, 1) i32)."""
+    interpret = resolve_interpret(interpret)
     rows, n = weights.shape
     # Keep the block under ~4 MB of VMEM.
     max_rows = max(1, (4 << 20) // (4 * n))

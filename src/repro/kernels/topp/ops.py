@@ -6,7 +6,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.topp import ToppResult
-from repro.kernels.common import default_interpret
 from repro.kernels.topp.kernel import topp_threshold_rows
 
 
@@ -17,8 +16,6 @@ def topp_mask(
     iters: int = 24,
     interpret: bool | None = None,
 ) -> ToppResult:
-    if interpret is None:
-        interpret = default_interpret()
     b, h, n = weights.shape
     rows = weights.reshape(b * h, n).astype(jnp.float32)
     thresh, budget = topp_threshold_rows(

@@ -12,7 +12,11 @@ HLO size and compile time are O(P), not O(L), which is what makes 80
 
 Decode integrates the paper's pipeline as a first-class feature: the KV
 cache carries an INT4 shadow cache + Quest page metadata, and attention
-layers run Select-then-Prune (``repro.core.twilight``) every step.
+layers run Select-then-Prune (``repro.core.twilight``) every step.  With
+the default ``TwilightConfig.compact=True`` the whole jitted decode step
+operates on candidate *index buffers*: the score estimate, top-p search
+and final attention are O(B0), and no n-length f32 weights buffer is ever
+materialized (``PrunerStats.weights`` is None on this path).
 """
 
 from __future__ import annotations

@@ -93,17 +93,24 @@ class DecodeEngine:
         logits, state = self._prefill(self.params, batch)
         last = logits[:, -1, :self.cfg.vocab_size]  # drop padded vocab rows
         max_new = max(r.max_new_tokens for r in wave)
-        out_tokens = np.zeros((b, max_new), np.int32)
-        budgets = []
         greedy = all(r.greedy for r in wave)
+        # The decode loop stays async: tokens and the budget accumulator
+        # live on device and are fetched ONCE per wave.  A float()/asarray()
+        # inside the loop would block on the device every token and
+        # serialize dispatch against compute.
+        out_toks_dev = []
+        budget_sum = jnp.zeros((), jnp.float32)
         for step in range(max_new):
             self._sample_key, k = jax.random.split(self._sample_key)
             tok = sample_token(k, last, greedy=greedy)
-            out_tokens[:, step] = np.asarray(tok)
+            out_toks_dev.append(tok)
             last, state, stats = self._decode(self.params, state, tok)
             last = last[:, :self.cfg.vocab_size]
-            budgets.append(float(stats["mean_pruned_budget"]))
+            budget_sum = budget_sum + stats["mean_pruned_budget"]
 
+        out_tokens = (np.stack([np.asarray(t) for t in out_toks_dev], axis=1)
+                      if out_toks_dev else np.zeros((b, 0), np.int32))
+        mean_budget = float(budget_sum) / max_new if max_new else 0.0
         wall = time.time() - t0
         results = []
         for i, r in enumerate(wave):
@@ -112,7 +119,7 @@ class DecodeEngine:
                 tokens=out_tokens[i, :r.max_new_tokens].tolist(),
                 prompt_len=len(r.prompt),
                 decode_steps=r.max_new_tokens,
-                mean_pruned_budget=float(np.mean(budgets)) if budgets else 0.0,
+                mean_pruned_budget=mean_budget,
                 wall_s=wall,
             ))
         return results

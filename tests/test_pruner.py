@@ -112,13 +112,19 @@ def test_disabled_equals_full(rng):
 
 def test_prune_disabled_pure_topk(rng):
     """prune_enabled=False == the base top-k algorithm alone."""
+    import dataclasses
     q, K, V = _setup(rng)
     cfg = TwilightConfig(selector="quest", prune_enabled=False,
                          fixed_budget=128, page_size=16)
-    out = twilight_decode_attention(q, K, V, cfg)
-    # Budgets equal the fixed candidate budget (no pruning happened).
-    np.testing.assert_array_equal(np.asarray(out.pruned_mask),
-                                  np.asarray(out.candidate_mask))
+    # Budgets equal the fixed candidate budget (no pruning happened) — in
+    # both the dense-mask and the compact-index representation.
+    dense = twilight_decode_attention(
+        q, K, V, dataclasses.replace(cfg, compact=False))
+    np.testing.assert_array_equal(np.asarray(dense.pruned_mask),
+                                  np.asarray(dense.candidate_mask))
+    comp = twilight_decode_attention(q, K, V, cfg)
+    np.testing.assert_array_equal(np.asarray(comp.pruned_valid),
+                                  np.asarray(comp.candidate_valid))
 
 
 def test_gqa_budgets_are_group_wise(rng):

@@ -3,7 +3,12 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dep: property tests degrade to fixed sweeps without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
 
 from repro.core.topp import (
     masked_softmax,
@@ -37,14 +42,7 @@ def test_coverage_and_minimality(rng):
     assert (kept - smallest_kept < p + 1e-6).all(), "mask must be minimal"
 
 
-@settings(max_examples=50, deadline=None)
-@given(
-    n=st.integers(8, 300),
-    p=st.floats(0.1, 0.99),
-    conc=st.floats(0.1, 10.0),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_property_topp_invariants(n, p, conc, seed):
+def _topp_invariants(n, p, conc, seed):
     rng = np.random.default_rng(seed)
     w = make_weights(rng, 4, n, conc)
     res = topp_mask(jnp.asarray(w), p)
@@ -59,14 +57,39 @@ def test_property_topp_invariants(n, p, conc, seed):
     assert (np.where(mask, w, np.inf) >= thr[:, None] - 1e-7).all()
 
 
-@settings(max_examples=30, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1))
-def test_property_monotone_in_p(seed):
+def _monotone_in_p(seed):
     rng = np.random.default_rng(seed)
     w = make_weights(rng, 4, 128, 3.0)
     budgets = [int(topp_mask(jnp.asarray(w), p).budget.sum())
                for p in (0.5, 0.7, 0.9, 0.99)]
     assert budgets == sorted(budgets), "budget must be monotone in p"
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(
+        n=st.integers(8, 300),
+        p=st.floats(0.1, 0.99),
+        conc=st.floats(0.1, 10.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_topp_invariants(n, p, conc, seed):
+        _topp_invariants(n, p, conc, seed)
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_property_monotone_in_p(seed):
+        _monotone_in_p(seed)
+else:
+    @pytest.mark.parametrize("n", [8, 33, 300])
+    @pytest.mark.parametrize("p", [0.1, 0.9, 0.99])
+    @pytest.mark.parametrize("conc,seed", [(0.1, 0), (3.0, 1), (10.0, 2)])
+    def test_property_topp_invariants(n, p, conc, seed):
+        _topp_invariants(n, p, conc, seed)
+
+    @pytest.mark.parametrize("seed", [0, 7, 1234567])
+    def test_property_monotone_in_p(seed):
+        _monotone_in_p(seed)
 
 
 def test_adaptive_budget_focused_vs_diffuse(rng):
