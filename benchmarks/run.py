@@ -29,6 +29,7 @@ TABLES = {
     "fig8": latency.fig8_e2e_tpot,  # end-to-end TPOT
     "fig10": latency.fig10_time_breakdown,  # select/prune/attend split
     "tabE": latency.tabE_offload,  # offloading scenario
+    "mixed": latency.serve_mixed_workload,  # continuous vs wave batching
     "alg1": latency.alg1_topp_microbench,  # top-p binary search wall-clock
     "kernels": latency.kernels_interpret_sanity,  # Pallas interpret sanity
 }

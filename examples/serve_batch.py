@@ -1,9 +1,15 @@
-"""Batched serving with the Twilight engine: a wave of mixed-length
-requests through prefill + continuous decode, with per-request pruned-budget
-telemetry.  Works for any assigned architecture (pass --arch).
+"""Batched serving with the Twilight engine, in both scheduling modes:
+
+* wave/contiguous (default): fixed waves over per-slot contiguous caches —
+  the equivalence oracle;
+* continuous/paged (``--paged``): a shared KV page pool with per-request
+  page tables; slots retire and admit new requests every decode step, so a
+  short request never waits out a long one and memory tracks live tokens.
+
+Works for any assigned architecture (pass --arch):
 
     PYTHONPATH=src python examples/serve_batch.py --arch deepseek-moe-16b
-    PYTHONPATH=src python examples/serve_batch.py --arch internvl2-1b
+    PYTHONPATH=src python examples/serve_batch.py --arch qwen2-1.5b --paged
 """
 
 import argparse
@@ -19,11 +25,14 @@ def main():
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--paged", action="store_true",
+                    help="continuous batching over the shared page pool")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     rng = np.random.default_rng(0)
-    engine = DecodeEngine(cfg, batch_size=3, cache_capacity=128)
+    engine = DecodeEngine(cfg, batch_size=3, cache_capacity=128,
+                          paged=args.paged)
 
     reqs = []
     for uid in range(args.requests):
@@ -35,14 +44,20 @@ def main():
             extras["patches"] = rng.normal(
                 size=(cfg.n_prefix_tokens, cfg.d_model)).astype(np.float32)
         prompt_len = int(rng.integers(24, 72))
+        # Ragged max_new_tokens: the regime where continuous batching wins —
+        # a wave would hold every slot for the longest request.
+        max_new = int(rng.integers(max(1, args.max_new // 2),
+                                   args.max_new + 1))
         reqs.append(Request(
             uid=uid,
             prompt=rng.integers(8, cfg.vocab_size, prompt_len).astype(np.int32),
-            max_new_tokens=args.max_new,
+            max_new_tokens=max_new,
             extras=extras or None,
         ))
 
     results = engine.generate(reqs)
+    mode = "continuous/paged" if args.paged else "wave/contiguous"
+    print(f"[{mode}]")
     for r in sorted(results, key=lambda r: r.uid):
         print(f"req {r.uid}: prompt={r.prompt_len:3d} tok, "
               f"generated={r.tokens}, "

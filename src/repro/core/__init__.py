@@ -27,10 +27,12 @@ from repro.core.selectors import (
     TokenSelector,
     build_page_meta,
     calibrate_ds_channels,
+    gather_logical_rows,
     group_union,
     index_capacity,
     indices_from_mask,
     indices_to_mask,
+    physical_token_indices,
     selector_from_name,
     topk_mask,
 )
@@ -70,10 +72,12 @@ __all__ = [
     "TokenSelector",
     "build_page_meta",
     "calibrate_ds_channels",
+    "gather_logical_rows",
     "group_union",
     "index_capacity",
     "indices_from_mask",
     "indices_to_mask",
+    "physical_token_indices",
     "selector_from_name",
     "topk_mask",
     "ToppResult",

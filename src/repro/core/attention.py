@@ -112,8 +112,21 @@ def compact_decode_attention(
 
 
 def gather_kv_heads(x: jax.Array, indices: jax.Array) -> jax.Array:
-    """Gather cache rows (b, n, hkv, c) at per-KV-head positions (b, hkv, m)
-    -> (b, hkv, m, c)."""
+    """Gather cache rows at per-KV-head positions (b, hkv, m) -> (b, hkv, m, c).
+
+    Two cache layouts, distinguished by rank:
+
+    * 4-D ``(b, n, hkv, c)`` — per-slot contiguous cache; indices are cache
+      positions.
+    * 3-D ``(P, hkv, c)`` — shared paged pool (P = num_pages * page_size);
+      indices are *physical* pool rows (already translated through the page
+      table by :func:`repro.core.selectors.physical_token_indices`).
+    """
+    if x.ndim == 3:
+        pool = jnp.moveaxis(x, 1, 0)  # (hkv, P, c)
+        return jax.vmap(
+            lambda ib: jnp.take_along_axis(pool, ib[..., None], axis=1)
+        )(indices)
     return jnp.take_along_axis(
         jnp.moveaxis(x, 2, 1), indices[..., None], axis=2)
 

@@ -56,6 +56,11 @@ class TwilightPruner:
     p: float = 0.95
     iters: int = 24
     estimate_bits: int = 4
+    # Route the compact estimate through the spgemv Pallas kernel (INT4
+    # dequant folded into the matmul epilogue).  The jnp gather+einsum path
+    # below stays as the reference/oracle; TwilightConfig.estimate_backend
+    # resolves this flag ("auto" -> TPU only).
+    use_spgemv: bool = False
 
     def estimate_scores(
         self,
@@ -114,6 +119,9 @@ class TwilightPruner:
                     packed=gather_kv_heads(qkeys.packed, indices),
                     scale=gather_kv_heads(qkeys.scale, indices),
                     zero=gather_kv_heads(qkeys.zero, indices))
+            if self.use_spgemv:
+                from repro.kernels.spgemv.ops import estimate_scores_gathered
+                return estimate_scores_gathered(q, gathered)
             k_est = quant_lib.dequantize_int4(gathered, dtype=jnp.bfloat16)
         else:
             if keys is None:
@@ -140,6 +148,9 @@ class TwilightPruner:
         ``kept`` marks the surviving *slots* of the index buffer (GQA group
         union), i.e. the final set is ``indices[kept]``.  Equivalent to
         :meth:`prune` on the scattered mask, but every buffer is m-length.
+        With a paged cache, ``indices`` are *physical* pool rows (already
+        translated through the page table) and ``keys``/``qkeys`` carry the
+        pool layout — the gathers dispatch on rank.
         ``slot_weights`` (b, hkv, m) f32 is the group-max estimated weight
         per slot — the ranking key for the optional B1 re-compaction before
         the final attention gather.

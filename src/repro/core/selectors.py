@@ -58,30 +58,50 @@ __all__ = [
     "H2OSelector",
     "build_page_meta",
     "calibrate_ds_channels",
+    "gather_logical_rows",
     "group_union",
     "topk_mask",
     "indices_from_mask",
     "indices_to_mask",
+    "physical_token_indices",
     "selector_from_name",
 ]
 
 
 class PageMeta(NamedTuple):
-    """Per-page elementwise min/max of K (Quest metadata)."""
+    """Per-page elementwise min/max of K (Quest metadata).
 
-    kmax: jax.Array  # (b, n_pages, hkv, d)
-    kmin: jax.Array  # (b, n_pages, hkv, d)
+    Contiguous caches carry batched metadata (b, n_pages, hkv, d); a shared
+    page *pool* carries physical-page metadata (num_pages, hkv, d) addressed
+    through ``SelectionContext.page_table``.
+    """
+
+    kmax: jax.Array  # (b, n_pages, hkv, d) or (num_pages, hkv, d) pooled
+    kmin: jax.Array  # same layout as kmax
     page_size: int
 
 
 class SelectionContext(NamedTuple):
-    """Everything a selector may consult.  Unused fields may be None."""
+    """Everything a selector may consult.  Unused fields may be None.
 
-    keys: jax.Array | None  # (b, n, hkv, d) full-precision K (DS/oracle use)
+    Two cache layouts are supported:
+
+    * contiguous (``page_table is None``): ``keys`` is the per-slot cache
+      (b, n, hkv, d) and ``page_meta`` is batched.
+    * paged (``page_table`` is the per-slot table (b, max_pages) of physical
+      page ids): ``keys`` is the shared pool (num_pages * page_size, hkv, d)
+      and ``page_meta`` holds *physical*-page stats.  Selectors gather
+      metadata through the table, score **logical** positions, and emit
+      logical indices; the pipeline translates them to physical pool rows
+      (:func:`physical_token_indices`) for every downstream gather.
+    """
+
+    keys: jax.Array | None  # (b, n, hkv, d) or pooled (P, hkv, d)
     page_meta: PageMeta | None
     accum_scores: jax.Array | None  # (b, hkv, n) running attention mass (H2O)
     length: jax.Array | None  # (b,) valid lengths; None = all valid
     ds_channels: jax.Array | None  # (hkv, r) label channel indices (DS)
+    page_table: jax.Array | None = None  # (b, max_pages) i32 physical ids
 
 
 class TokenSelector(Protocol):
@@ -103,6 +123,50 @@ def _length_mask(n: int, length: jax.Array | None, like: jax.Array) -> jax.Array
         return jnp.ones((1, 1, n), bool)
     pos = jnp.arange(n)
     return (pos[None, :] < length[:, None])[:, None, :]
+
+
+def _ctx_shapes(q: jax.Array, ctx: SelectionContext) -> tuple[int, int, int]:
+    """(b, n, hkv) of the *logical* cache view, paged- and pool-aware."""
+    b = q.shape[0]
+    if ctx.page_table is not None:
+        if ctx.page_meta is None:
+            raise ValueError("paged selection requires page_meta")
+        pm = ctx.page_meta
+        return b, ctx.page_table.shape[1] * pm.page_size, pm.kmax.shape[-2]
+    if ctx.keys is not None:
+        return b, ctx.keys.shape[1], ctx.keys.shape[2]
+    if ctx.page_meta is not None:
+        pm = ctx.page_meta
+        return b, pm.kmax.shape[1] * pm.page_size, pm.kmax.shape[2]
+    raise ValueError("selector needs keys, page_meta, or a page table")
+
+
+def physical_token_indices(page_table: jax.Array, indices: jax.Array,
+                           page_size: int) -> jax.Array:
+    """Translate logical token indices to physical pool rows.
+
+    page_table: (b, max_pages) i32; indices: (b, hkv, m) logical positions.
+    Returns (b, hkv, m) rows into the flattened (num_pages * page_size)
+    pool.  Entries pointing at unallocated logical pages resolve to the
+    null page (physical 0) — callers gate them with ``valid`` bits.
+    """
+    b, hkv, m = indices.shape
+    page = indices // page_size
+    pt = jnp.broadcast_to(page_table[:, None, :],
+                          (b, hkv, page_table.shape[1]))
+    phys_page = jnp.take_along_axis(pt, page, axis=2)
+    return phys_page * page_size + indices % page_size
+
+
+def gather_logical_rows(pool: jax.Array, page_table: jax.Array,
+                        page_size: int) -> jax.Array:
+    """Materialize the logical cache view (b, n, hkv, c) from a shared pool
+    (num_pages * page_size, hkv, c) through per-slot page tables.  O(n) —
+    only for selectors whose scoring is inherently O(n) (Double Sparsity)."""
+    b, max_pages = page_table.shape
+    rows = (page_table[..., None] * page_size
+            + jnp.arange(page_size, dtype=page_table.dtype))
+    return jnp.take(pool, rows.reshape(b, max_pages * page_size), axis=0)
 
 
 def group_union(per_qhead_mask: jax.Array, n_kv_heads: int) -> jax.Array:
@@ -188,27 +252,16 @@ class FullSelector:
 
     name: str = "full"
 
-    @staticmethod
-    def _shapes(q: jax.Array, ctx: SelectionContext) -> tuple[int, int]:
-        if ctx.keys is not None:
-            return ctx.keys.shape[1], ctx.keys.shape[2]
-        if ctx.page_meta is not None:
-            return (ctx.page_meta.kmax.shape[1] * ctx.page_meta.page_size,
-                    ctx.page_meta.kmax.shape[2])
-        raise ValueError("FullSelector needs keys or page_meta for shapes")
-
     def select(self, q: jax.Array, ctx: SelectionContext, budget: int) -> jax.Array:
         del budget
-        b = q.shape[0]
-        n, hkv = self._shapes(q, ctx)
+        b, n, hkv = _ctx_shapes(q, ctx)
         return jnp.broadcast_to(_length_mask(n, ctx.length, q), (b, hkv, n))
 
     def select_indices(
         self, q: jax.Array, ctx: SelectionContext, budget: int
     ) -> tuple[jax.Array, jax.Array]:
         del budget  # everything is a candidate: capacity is n by definition
-        b = q.shape[0]
-        n, hkv = self._shapes(q, ctx)
+        b, n, hkv = _ctx_shapes(q, ctx)
         idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, hkv, n))
         valid = jnp.broadcast_to(_length_mask(n, ctx.length, q), (b, hkv, n))
         return idx, valid
@@ -228,19 +281,37 @@ class QuestSelector:
             raise ValueError("QuestSelector requires page metadata")
         pm = ctx.page_meta
         b, hq, d = q.shape
-        hkv = pm.kmax.shape[2]
+        hkv = pm.kmax.shape[-2]
         group = hq // hkv
+        if ctx.page_table is not None:
+            # Pooled metadata: gather each slot's physical pages through its
+            # table so ranking runs over the logical page axis.  Unallocated
+            # entries resolve to the null page — masked below via length.
+            kmax_b = jnp.take(pm.kmax, ctx.page_table, axis=0)
+            kmin_b = jnp.take(pm.kmin, ctx.page_table, axis=0)
+        else:
+            kmax_b, kmin_b = pm.kmax, pm.kmin  # (b, n_pages, hkv, d)
         # Upper bound of q·k over each page (Quest): per-channel max of
         # q*kmax and q*kmin, summed over channels.  Each query head scores
         # only its own KV head's pages; pages are ranked by the group-max
         # UB so the per-KV-head selection is exactly the budget
         # (group-wise budgets, Appendix B.2).
         qg = q.reshape(b, hkv, group, 1, d)  # (b, hkv, g, 1, d)
-        kmax = jnp.moveaxis(pm.kmax, 1, 2)[:, :, None].astype(q.dtype)  # (b,hkv,1,p,d)
-        kmin = jnp.moveaxis(pm.kmin, 1, 2)[:, :, None].astype(q.dtype)
+        kmax = jnp.moveaxis(kmax_b, 1, 2)[:, :, None].astype(q.dtype)  # (b,hkv,1,p,d)
+        kmin = jnp.moveaxis(kmin_b, 1, 2)[:, :, None].astype(q.dtype)
         ub = jnp.sum(jnp.maximum(qg * kmax, qg * kmin), axis=-1)  # (b,hkv,g,p)
+        ub = ub.max(axis=2)  # (b, hkv, n_pages) group-max
+        if ctx.length is not None:
+            # Rank only pages with at least one valid token: dead pages carry
+            # stale (or, pooled, null-page) metadata and would otherwise
+            # waste budget — and break paged/contiguous equivalence.
+            n_pages = ub.shape[-1]
+            page_live = (jnp.arange(n_pages) * pm.page_size
+                         )[None, :] < ctx.length[:, None]
+            ub = jnp.where(page_live[:, None, :], ub,
+                           jnp.finfo(ub.dtype).min)
         pages_budget = max(1, budget // pm.page_size)
-        return topk_mask(ub.max(axis=2), pages_budget), pages_budget
+        return topk_mask(ub, pages_budget), pages_budget
 
     def select(self, q: jax.Array, ctx: SelectionContext, budget: int) -> jax.Array:
         pm = ctx.page_meta
@@ -281,6 +352,10 @@ class DoubleSparsitySelector:
         if ctx.keys is None or ctx.ds_channels is None:
             raise ValueError("DoubleSparsitySelector requires keys and ds_channels")
         keys, ch = ctx.keys, ctx.ds_channels  # (b, n, hkv, d), (hkv, r)
+        if ctx.page_table is not None:
+            # DS scoring is inherently O(n·r): materialize the logical view.
+            keys = gather_logical_rows(keys, ctx.page_table,
+                                       ctx.page_meta.page_size)
         b, n, hkv, d = keys.shape
         hq = q.shape[1]
         group = hq // hkv
@@ -312,13 +387,7 @@ class StreamingSelector:
     name: str = "streaming"
 
     def select(self, q: jax.Array, ctx: SelectionContext, budget: int) -> jax.Array:
-        if ctx.keys is not None:
-            b, n, hkv, _ = ctx.keys.shape
-        else:
-            pm = ctx.page_meta
-            b = q.shape[0]
-            n = pm.kmax.shape[1] * pm.page_size
-            hkv = pm.kmax.shape[2]
+        b, n, hkv = _ctx_shapes(q, ctx)
         pos = jnp.arange(n)
         length = ctx.length if ctx.length is not None else jnp.full((b,), n)
         recent = budget - self.n_sink

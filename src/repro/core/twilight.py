@@ -41,6 +41,7 @@ from repro.core.pruner import PrunerStats, TwilightPruner
 from repro.core.selectors import (
     SelectionContext,
     TokenSelector,
+    physical_token_indices,
     selector_from_name,
 )
 
@@ -95,6 +96,11 @@ class TwilightConfig:
     # pallas only on a real TPU (interpret-mode Pallas is much slower than
     # jnp on CPU hosts).
     attn_backend: str = "auto"
+    # Score-estimation backend for the compact path: "pallas" folds the INT4
+    # dequantization into the spgemv kernel's matmul epilogue (d/2 bytes per
+    # candidate row of HBM traffic); "jnp" gathers + dequantizes + einsums
+    # (the reference and test oracle); "auto" picks pallas on a real TPU.
+    estimate_backend: str = "auto"
 
     def candidate_budget(self, n: int) -> int:
         if self.fixed_budget:
@@ -108,7 +114,8 @@ class TwilightConfig:
 
     def make_pruner(self) -> TwilightPruner:
         return TwilightPruner(p=self.p, iters=self.topp_iters,
-                              estimate_bits=self.estimate_bits)
+                              estimate_bits=self.estimate_bits,
+                              use_spgemv=self.use_pallas_estimate())
 
     def pruned_capacity(self, m: int) -> int:
         """Static slot count of the post-top-p attention buffer."""
@@ -118,12 +125,23 @@ class TwilightConfig:
         return min(m, -(-cap // 128) * 128)  # lane-rounded
 
     def use_pallas_attention(self) -> bool:
-        if self.attn_backend == "pallas":
+        return self._resolve_backend(self.attn_backend, "attn_backend")
+
+    def use_pallas_estimate(self) -> bool:
+        # The spgemv kernel consumes packed INT4 codes; higher estimate
+        # precisions stay on the jnp gather path.
+        return (self.estimate_bits <= 4
+                and self._resolve_backend(self.estimate_backend,
+                                          "estimate_backend"))
+
+    @staticmethod
+    def _resolve_backend(value: str, what: str) -> bool:
+        if value == "pallas":
             return True
-        if self.attn_backend == "jnp":
+        if value == "jnp":
             return False
-        if self.attn_backend != "auto":
-            raise ValueError(f"unknown attn_backend {self.attn_backend!r}")
+        if value != "auto":
+            raise ValueError(f"unknown {what} {value!r}")
         return jax.default_backend() == "tpu"
 
 
@@ -162,10 +180,19 @@ def _compact_pipeline(
     ctx: SelectionContext,
     qkeys: quant_lib.QuantizedTensor | None,
 ) -> TwilightOutput:
-    b, n, hkv, d = keys.shape
-    hq = q.shape[1]
-    indices, valid = selector.select_indices(q, ctx, b0)  # (b, hkv, m)
+    b, hq = q.shape[0], q.shape[1]
+    indices, valid = selector.select_indices(q, ctx, b0)  # (b, hkv, m) logical
     m = indices.shape[-1]
+
+    # Paged cache: selectors emit logical positions; every downstream gather
+    # (INT4 estimate, final K/V) addresses the shared pool through the
+    # per-slot page table.  Dead slots resolve to the null page — safe to
+    # gather, masked out by ``valid``.
+    gather_idx = indices
+    if ctx.page_table is not None:
+        gather_idx = physical_token_indices(
+            ctx.page_table, indices, ctx.page_meta.page_size)
+        gather_idx = jnp.where(valid, gather_idx, 0)
 
     slot_weights = None
     if not cfg.prune_enabled:
@@ -179,21 +206,21 @@ def _compact_pipeline(
     else:
         pruner = cfg.make_pruner()
         kept, stats, slot_weights = pruner.prune_at(
-            q, indices, valid, keys=keys, qkeys=qkeys)
+            q, gather_idx, valid, keys=keys, qkeys=qkeys)
 
     # Final-attention buffer.  Default: every candidate slot is gathered
     # and pruned slots are masked out of the softmax (the Pallas kernel's
     # page early-out elides their compute).  With pruned_cap_frac the kept
     # slots are re-compacted (weight-ranked) so the K/V gather reads ~B1
     # rows instead of B0.
-    attn_indices, attn_valid = indices, kept
+    attn_indices, attn_valid = gather_idx, kept
     b1_cap = cfg.pruned_capacity(m)
     if slot_weights is not None and b1_cap < m:
         rank = jnp.where(kept, slot_weights, -1.0)
         _, slot_idx = jax.lax.top_k(rank, b1_cap)  # (b, hkv, b1_cap)
         attn_valid = jnp.take_along_axis(kept, slot_idx, axis=-1)
         attn_indices = jnp.where(
-            attn_valid, jnp.take_along_axis(indices, slot_idx, axis=-1), 0)
+            attn_valid, jnp.take_along_axis(gather_idx, slot_idx, axis=-1), 0)
 
     if cfg.reuse_int4_for_attention and qkeys is not None:
         gathered_q = quant_lib.QuantizedTensor(
@@ -228,8 +255,22 @@ def twilight_decode_attention(
 
     When ``cfg.enabled`` is False this degrades to exact full attention with
     trivial masks/stats — the "Full" baseline rows of Tables 2–4.
+
+    Paged mode (``ctx.page_table`` set): ``keys``/``values`` are the shared
+    (num_pages * page_size, hkv, d) pool and only the compact pipeline is
+    supported — the dense-mask oracle keeps the contiguous layout.
     """
-    b, n, hkv, d = keys.shape
+    paged = ctx is not None and ctx.page_table is not None
+    if paged:
+        if not (cfg.enabled and cfg.compact):
+            raise ValueError(
+                "paged KV caches require the compact Twilight pipeline "
+                "(cfg.enabled=True, cfg.compact=True)")
+        n = ctx.page_table.shape[1] * ctx.page_meta.page_size
+        hkv = keys.shape[-2]
+    else:
+        _, n, hkv, _ = keys.shape
+    b = q.shape[0]
     hq = q.shape[1]
 
     if not cfg.enabled:

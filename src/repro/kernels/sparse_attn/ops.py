@@ -9,6 +9,9 @@
   *candidate* budget, then the kernel applies the top-p mask inside.  This
   mirrors the paper's hierarchy: selector bounds traffic, pruner bounds
   compute.
+* :func:`paged_attention` — the same, but gathering from the shared KV page
+  pool at physical rows pre-translated through a page table (the
+  continuous-batching serving path).
 
 ``interpret`` resolution is centralized in ``repro.kernels.common``: every
 wrapper and kernel defaults to ``None`` → ``default_interpret()``.
@@ -83,6 +86,29 @@ def compact_attention(
         interpret=interpret,
     )
     return out.reshape(b, hq, d)
+
+
+def paged_attention(
+    q: jax.Array,  # (b, hq, d)
+    k_pool: jax.Array,  # (num_pages * page_size, hkv, d) shared pool
+    v_pool: jax.Array,  # (num_pages * page_size, hkv, d)
+    phys_indices: jax.Array,  # (b, hkv, m) i32 physical pool rows
+    valid: jax.Array,  # (b, hkv, m) bool — live slots AND top-p kept
+    *,
+    sm_scale: float | None = None,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Paged-pool variant of :func:`gathered_attention`: candidate rows are
+    gathered from the shared page pool at pre-translated physical indices
+    (``repro.core.selectors.physical_token_indices``), then the kernel runs
+    on the compacted O(m) buffer."""
+    from repro.core.attention import gather_kv_heads
+
+    kg = gather_kv_heads(k_pool, phys_indices)  # (b, hkv, m, d)
+    vg = gather_kv_heads(v_pool, phys_indices)
+    return compact_attention(q, kg, vg, valid, sm_scale=sm_scale,
+                             block_n=block_n, interpret=interpret)
 
 
 def gathered_attention(

@@ -41,3 +41,35 @@ def estimate_scores(
         sm_scale=float(sm_scale), block_n=block_n, interpret=interpret,
     )  # (b*hkv, group, n)
     return scores.reshape(b, hkv, group, n).reshape(b, hq, n)
+
+
+def estimate_scores_gathered(
+    q: jax.Array,  # (b, hq, d)
+    qkeys: QuantizedTensor,  # gathered candidate rows: packed (b, hkv, m, d//2)
+    *,
+    sm_scale: float | None = None,
+    block_n: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Compact-pipeline estimate: scores over a pre-gathered candidate buffer.
+
+    The hot serving path — only the m candidate rows' packed codes (d/2+8
+    bytes each) are touched, and the dequantization runs in the kernel
+    epilogue.  Returns (b, hkv, group, m) f32, matching the layout of
+    ``TwilightPruner.estimate_scores_at``.
+    """
+    b, hkv, m, d2 = qkeys.packed.shape
+    hq, d = q.shape[1], q.shape[2]
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, hkv, group, d).reshape(b * hkv, group, d)
+    scores = spgemv_scores(
+        qg[..., 0::2], qg[..., 1::2],
+        qkeys.packed.reshape(b * hkv, m, d2),
+        qkeys.scale[..., 0].reshape(b * hkv, m),
+        qkeys.zero[..., 0].reshape(b * hkv, m),
+        sm_scale=float(sm_scale), block_n=block_n, interpret=interpret,
+    )  # (b*hkv, group, m)
+    return scores.reshape(b, hkv, group, m)

@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --requests 8 --prompt-len 96 --max-new 16
+
+``--paged`` switches to the continuous-batching engine over the shared page
+pool; ``--mixed`` generates a ragged workload (varied prompt lengths and
+per-request max_new_tokens) — the regime where continuous batching beats
+wave batching.  ``--compare`` runs both schedulers on the same workload and
+reports both tok/s figures.
 """
 
 from __future__ import annotations
@@ -15,23 +21,7 @@ from repro.configs import get_config, get_smoke_config
 from repro.serving import DecodeEngine, Request
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=96)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--capacity", type=int, default=256)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    rng = np.random.default_rng(args.seed)
-    engine = DecodeEngine(cfg, batch_size=args.batch,
-                          cache_capacity=args.capacity, seed=args.seed)
-
+def _build_requests(cfg, args, rng) -> list[Request]:
     reqs = []
     for uid in range(args.requests):
         extras = {}
@@ -41,24 +31,74 @@ def main() -> None:
         elif cfg.frontend == "vision":
             extras["patches"] = rng.normal(
                 size=(cfg.n_prefix_tokens, cfg.d_model)).astype(np.float32)
+        if args.mixed:
+            prompt_len = int(rng.integers(max(8, args.prompt_len // 4),
+                                          args.prompt_len + 1))
+            max_new = int(rng.integers(max(1, args.max_new // 4),
+                                       args.max_new + 1))
+        else:
+            prompt_len, max_new = args.prompt_len, args.max_new
         reqs.append(Request(
             uid=uid,
-            prompt=rng.integers(8, cfg.vocab_size, args.prompt_len
+            prompt=rng.integers(8, cfg.vocab_size, prompt_len
                                 ).astype(np.int32),
-            max_new_tokens=args.max_new,
+            max_new_tokens=max_new,
             extras=extras or None,
         ))
+    return reqs
 
+
+def _run(cfg, args, reqs, *, paged: bool, params=None) -> float:
+    engine = DecodeEngine(cfg, params=params, batch_size=args.batch,
+                          cache_capacity=args.capacity, seed=args.seed,
+                          paged=paged, num_pages=args.pages)
     t0 = time.time()
     results = engine.generate(reqs)
     wall = time.time() - t0
     total_tokens = sum(r.decode_steps for r in results)
     budgets = [r.mean_pruned_budget for r in results]
-    print(f"[serve] {cfg.name}: {len(results)} requests, "
+    mode = "continuous/paged" if paged else "wave/contiguous"
+    print(f"[serve] {cfg.name} ({mode}): {len(results)} requests, "
           f"{total_tokens} tokens in {wall:.1f}s "
           f"({total_tokens / wall:.1f} tok/s CPU-interpret)")
     print(f"[serve] mean Twilight pruned budget: {np.mean(budgets):.1f} "
           f"tokens (capacity {args.capacity})")
+    return total_tokens / wall
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=96)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--capacity", type=int, default=256)
+    ap.add_argument("--paged", action="store_true",
+                    help="continuous batching over the shared page pool")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="page-pool size (default: worst case + null page)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="ragged workload: varied prompt/max-new per request")
+    ap.add_argument("--compare", action="store_true",
+                    help="run both schedulers on the same workload")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    rng = np.random.default_rng(args.seed)
+    reqs = _build_requests(cfg, args, rng)
+
+    if args.compare:
+        from repro.models import init_params
+        import jax
+        params = init_params(cfg, jax.random.PRNGKey(args.seed))
+        wave = _run(cfg, args, reqs, paged=False, params=params)
+        cont = _run(cfg, args, reqs, paged=True, params=params)
+        print(f"[serve] continuous vs wave: {cont / wave:.2f}x tok/s")
+    else:
+        _run(cfg, args, reqs, paged=args.paged)
 
 
 if __name__ == "__main__":

@@ -23,10 +23,13 @@ from repro.models.common import (
 from repro.models.model import (
     count_params,
     decode_step,
+    decode_step_paged,
     forward,
     init_decode_state,
+    init_paged_decode_state,
     init_params,
     prefill,
+    write_prefill_slot,
 )
 
 __all__ = [
@@ -38,8 +41,11 @@ __all__ = [
     "block_pattern",
     "count_params",
     "decode_step",
+    "decode_step_paged",
     "forward",
     "init_decode_state",
+    "init_paged_decode_state",
     "init_params",
     "prefill",
+    "write_prefill_slot",
 ]

@@ -384,6 +384,24 @@ def _attn_decode(bp: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
     return out.astype(x.dtype), cache, budget
 
 
+def _recurrent_mixer_decode(bp: Params, cfg: ModelConfig, kind: str,
+                            h: jax.Array, st: Params
+                            ) -> tuple[jax.Array, Params]:
+    """Single-token step for the non-attention mixers.  h: (b, 1, d_model)."""
+    if kind == "mamba":
+        mix1, mixer_st = ssm_lib.mamba_decode_step(
+            bp, cfg, h[:, 0], {"conv": st["conv"], "ssm": st["ssm"]})
+    elif kind == "mlstm":
+        keys4 = ("C", "n", "m", "conv")
+        mix1, mixer_st = xlstm_lib.mlstm_decode_step(
+            bp, cfg, h[:, 0], {k: st[k] for k in keys4})
+    else:  # slstm
+        keys4 = ("c", "n", "h", "m")
+        mix1, mixer_st = xlstm_lib.slstm_decode_step(
+            bp, cfg, h[:, 0], {k: st[k] for k in keys4})
+    return mix1[:, None], mixer_st
+
+
 def _block_apply_decode(bp: Params, cfg: ModelConfig, spec: LayerSpec,
                         x: jax.Array, st: Params, pos: jax.Array
                         ) -> tuple[jax.Array, Params, jax.Array]:
@@ -392,22 +410,9 @@ def _block_apply_decode(bp: Params, cfg: ModelConfig, spec: LayerSpec,
     h = ly.rms_norm(x, bp["norm1"], cfg.norm_eps)
     if spec.kind == "attn":
         mix, st, budget = _attn_decode(bp["mixer"], cfg, h, st, pos)
-    elif spec.kind == "mamba":
-        mix1, mixer_st = ssm_lib.mamba_decode_step(
-            bp["mixer"], cfg, h[:, 0], {"conv": st["conv"], "ssm": st["ssm"]})
-        mix = mix1[:, None]
-        st = {**st, **mixer_st}
-    elif spec.kind == "mlstm":
-        keys4 = ("C", "n", "m", "conv")
-        mix1, mixer_st = xlstm_lib.mlstm_decode_step(
-            bp["mixer"], cfg, h[:, 0], {k: st[k] for k in keys4})
-        mix = mix1[:, None]
-        st = {**st, **mixer_st}
-    else:  # slstm
-        keys4 = ("c", "n", "h", "m")
-        mix1, mixer_st = xlstm_lib.slstm_decode_step(
-            bp["mixer"], cfg, h[:, 0], {k: st[k] for k in keys4})
-        mix = mix1[:, None]
+    else:
+        mix, mixer_st = _recurrent_mixer_decode(bp["mixer"], cfg, spec.kind,
+                                                h, st)
         st = {**st, **mixer_st}
     x = x + mix
 
@@ -555,3 +560,260 @@ def prefill(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array],
     logits = constrain(x @ head, "logits")
     state = {"pos": jnp.asarray(s, jnp.int32), "blocks": blocks}
     return logits, state
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: shared page pool + per-slot page tables (continuous batching)
+# ---------------------------------------------------------------------------
+#
+# Physical page 0 is the null page (``repro.serving.paged_cache.NULL_PAGE``):
+# never allocated, the scatter target for dead slots and the safe-gather
+# target for invalid index-buffer entries.  All request dynamism — page
+# tables, per-slot lengths, the live mask — is *data* passed into the jitted
+# step; shapes stay static at (batch, num_pages, max_pages).
+
+_NULL_PAGE = 0
+
+
+def _attn_pool_init(cfg: ModelConfig, num_pages: int) -> Params:
+    """Shared K/V (+Twilight shadow) pool for one attention layer."""
+    dtype = jnp.dtype(cfg.dtype)
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+    tw = cfg.twilight
+    rows = num_pages * tw.page_size
+    pool: Params = {
+        "k": jnp.zeros((rows, hkv, dh), dtype),
+        "v": jnp.zeros((rows, hkv, dh), dtype),
+    }
+    if tw.enabled:
+        pool["qk_packed"] = jnp.zeros((rows, hkv, dh // 2), jnp.uint8)
+        pool["qk_scale"] = jnp.zeros((rows, hkv, 1), jnp.float32)
+        pool["qk_zero"] = jnp.zeros((rows, hkv, 1), jnp.float32)
+        pool["pmax"] = jnp.zeros((num_pages, hkv, dh), dtype)
+        pool["pmin"] = jnp.zeros((num_pages, hkv, dh), dtype)
+        pool["ds_channels"] = jnp.zeros((hkv, 16), jnp.int32)
+    return pool
+
+
+def init_paged_decode_state(cfg: ModelConfig, batch: int, num_pages: int,
+                            *, n_enc: int = 0) -> Params:
+    """Paged decode state: pooled attention caches, per-slot mixer states.
+
+    Unlike :func:`init_decode_state` there is no per-slot capacity — slots
+    share the ``num_pages`` pool and address it through engine-managed page
+    tables (passed into :func:`decode_step_paged` as data, not stored here).
+    """
+    specs, repeats = layer_schedule(cfg)
+
+    def tile(tree):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (repeats,) + x.shape), tree)
+
+    blocks = []
+    for spec in specs:
+        if spec.kind == "attn":
+            st = _attn_pool_init(cfg, num_pages)
+        else:
+            st = _mixer_state_init(cfg, spec.kind, batch, 0)
+        if spec.has_cross and spec.kind == "attn":
+            dtype = jnp.dtype(cfg.dtype)
+            st["cross_k"] = jnp.zeros(
+                (batch, n_enc, cfg.n_kv_heads, cfg.d_head), dtype)
+            st["cross_v"] = jnp.zeros(
+                (batch, n_enc, cfg.n_kv_heads, cfg.d_head), dtype)
+        blocks.append(tile(st))
+    return {"blocks": blocks}
+
+
+def write_prefill_slot(cfg: ModelConfig, state: Params, pstate: Params,
+                       slot: jax.Array, page_ids: jax.Array) -> Params:
+    """Scatter a batch=1 :func:`prefill` state into pool pages + slot rows.
+
+    ``pstate`` is the contiguous state from ``prefill(..., n_max)`` with
+    ``n_max = len(page_ids) * page_size`` (a whole number of pages; rows
+    beyond the true prompt length are zeros and stay invalid until decode
+    overwrites them).  Attention K/V/INT4 rows and Quest page stats land in
+    the physical pages ``page_ids``; recurrent mixer states and cross-attn
+    caches land in per-slot row ``slot``.  ``ds_channels`` (calibrated on
+    this prompt) is layer-global and simply replaced — the Double-Sparsity
+    label set is whole-pool calibration state, not per-slot.
+    """
+    specs, _ = layer_schedule(cfg)
+    ps = cfg.twilight.page_size
+    new_blocks = []
+    for spec, pool, src in zip(specs, state["blocks"], pstate["blocks"]):
+        new = dict(pool)
+        if spec.kind == "attn":
+            n_req = page_ids.shape[0]
+            for name in ("k", "v", "qk_packed", "qk_scale", "qk_zero"):
+                if name not in pool:
+                    continue
+                rows = src[name]  # (repeats, 1, n_max, hkv, c)
+                r, _, n_max = rows.shape[:3]
+                tail = rows.shape[3:]
+                paged_src = rows.reshape(r, n_req, ps, *tail)
+                dst = new[name].reshape(r, -1, ps, *tail)
+                new[name] = dst.at[:, page_ids].set(paged_src).reshape(
+                    new[name].shape)
+            for name in ("pmax", "pmin"):
+                if name in pool:
+                    new[name] = new[name].at[:, page_ids].set(
+                        src[name][:, 0, :n_req])
+            if "ds_channels" in pool:
+                new["ds_channels"] = src["ds_channels"]
+            for name in ("cross_k", "cross_v"):
+                if name in pool:
+                    new[name] = new[name].at[:, slot].set(src[name][:, 0])
+        else:
+            new = jax.tree_util.tree_map(
+                lambda dst, s: dst.at[:, slot].set(s[:, 0]), pool, src)
+        new_blocks.append(new)
+    return {"blocks": new_blocks}
+
+
+def _selection_ctx_paged(cfg: ModelConfig, cache: Params,
+                         page_table: jax.Array, length: jax.Array
+                         ) -> tuple[SelectionContext,
+                                    quant_lib.QuantizedTensor | None]:
+    tw = cfg.twilight
+    pm = PageMeta(kmax=cache["pmax"], kmin=cache["pmin"],
+                  page_size=tw.page_size)
+    qkeys = quant_lib.QuantizedTensor(
+        packed=cache["qk_packed"], scale=cache["qk_scale"],
+        zero=cache["qk_zero"])
+    ctx = SelectionContext(keys=cache["k"], page_meta=pm, accum_scores=None,
+                           length=length, ds_channels=cache["ds_channels"],
+                           page_table=page_table)
+    return ctx, qkeys
+
+
+def _attn_decode_paged(bp: Params, cfg: ModelConfig, x: jax.Array,
+                       cache: Params, page_table: jax.Array,
+                       lengths: jax.Array, live: jax.Array
+                       ) -> tuple[jax.Array, Params, jax.Array]:
+    """x: (b, 1, d_model) -> (out, cache, per-slot pruned budget (b,)).
+
+    Appends each live slot's token at its own position ``lengths[i]`` —
+    physical row ``page_table[i, lengths[i] // ps] * ps + lengths[i] % ps``
+    — then runs the compact Twilight pipeline against the pool.  Dead slots
+    write the null page and their outputs are garbage by design (the engine
+    never samples them).
+    """
+    b = x.shape[0]
+    tw = cfg.twilight
+    ps = tw.page_size
+    positions = lengths[:, None]  # (b, 1) per-slot RoPE positions
+    q, k, v = ly.attn_qkv(bp, cfg, x, positions)
+    k1, v1 = k[:, 0], v[:, 0]  # (b, hkv, d)
+
+    lpage = lengths // ps
+    phys_page = jnp.take_along_axis(page_table, lpage[:, None], axis=1)[:, 0]
+    phys_page = jnp.where(live, phys_page, _NULL_PAGE)
+    row = phys_page * ps + lengths % ps  # (b,) pool token rows
+
+    cache = dict(cache)
+    cache["k"] = cache["k"].at[row].set(k1)
+    cache["v"] = cache["v"].at[row].set(v1)
+
+    if tw.enabled:
+        qt = quant_lib.quantize_int4(k1.astype(jnp.float32))
+        cache["qk_packed"] = cache["qk_packed"].at[row].set(qt.packed)
+        cache["qk_scale"] = cache["qk_scale"].at[row].set(qt.scale)
+        cache["qk_zero"] = cache["qk_zero"].at[row].set(qt.zero)
+        old_max = jnp.take(cache["pmax"], phys_page, axis=0)  # (b, hkv, d)
+        old_min = jnp.take(cache["pmin"], phys_page, axis=0)
+        fresh = ((lengths % ps) == 0)[:, None, None]
+        new_max = jnp.where(fresh, k1, jnp.maximum(old_max, k1))
+        new_min = jnp.where(fresh, k1, jnp.minimum(old_min, k1))
+        cache["pmax"] = cache["pmax"].at[phys_page].set(new_max)
+        cache["pmin"] = cache["pmin"].at[phys_page].set(new_min)
+
+    length = lengths + 1
+    ctx, qkeys = _selection_ctx_paged(cfg, cache, page_table, length)
+    tw_out = twilight_decode_attention(
+        q[:, 0], cache["k"], cache["v"], tw, ctx=ctx, qkeys=qkeys,
+        length=length)
+    out = tw_out.out.reshape(b, 1, cfg.n_heads * cfg.d_head) @ bp["wo"]
+    budget = tw_out.stats.pruned_budget.astype(jnp.float32).mean(axis=-1)
+    return out.astype(x.dtype), cache, budget
+
+
+def _block_apply_decode_paged(bp: Params, cfg: ModelConfig, spec: LayerSpec,
+                              x: jax.Array, st: Params,
+                              page_table: jax.Array, lengths: jax.Array,
+                              live: jax.Array
+                              ) -> tuple[jax.Array, Params, jax.Array]:
+    b = x.shape[0]
+    budget = jnp.zeros((b,), jnp.float32)
+    h = ly.rms_norm(x, bp["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        mix, st, budget = _attn_decode_paged(
+            bp["mixer"], cfg, h, st, page_table, lengths, live)
+    else:
+        mix, mixer_st = _recurrent_mixer_decode(bp["mixer"], cfg, spec.kind,
+                                                h, st)
+        # Freeze dead slots' recurrent state: junk evolution could overflow
+        # over long idle stretches, and admission overwrites it anyway.
+        gated = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(
+                live.reshape((b,) + (1,) * (new.ndim - 1)), new, old),
+            mixer_st, {k: st[k] for k in mixer_st})
+        st = {**st, **gated}
+    x = x + mix
+
+    if "cross" in bp:
+        hc = ly.rms_norm(x, bp["norm_cross"], cfg.norm_eps)
+        qc, _, _ = ly.attn_qkv(bp["cross"], cfg, hc, None)
+        co = full_decode_attention(qc[:, 0], st["cross_k"], st["cross_v"])
+        co = co.reshape(x.shape[0], 1, -1) @ bp["cross"]["wo"]
+        x = x + co.astype(x.dtype)
+
+    if "ffn" in bp:
+        h2 = ly.rms_norm(x, bp["norm2"], cfg.norm_eps)
+        if spec.is_moe:
+            y, _ = ly.moe_apply(bp["ffn"], cfg, h2)
+        else:
+            y = ly.mlp_apply(bp["ffn"], h2)
+        x = x + y
+    return x, st, budget
+
+
+def decode_step_paged(params: Params, cfg: ModelConfig, state: Params,
+                      token: jax.Array, page_table: jax.Array,
+                      lengths: jax.Array, live: jax.Array
+                      ) -> tuple[jax.Array, Params, dict[str, jax.Array]]:
+    """One continuous-batching step.
+
+    token: (b,) i32; page_table: (b, max_pages) i32 physical page ids;
+    lengths: (b,) i32 current per-slot sequence lengths (the position this
+    token is written at); live: (b,) bool slot occupancy.  Returns
+    (logits (b, vocab), state, stats) with per-slot ``pruned_budget`` (b,).
+    """
+    specs, repeats = layer_schedule(cfg)
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0)[:, None, :]  # (b, 1, d)
+
+    def period_body(carry, xs_slice):
+        x, budget_sum, n_attn = carry
+        bp_slice, st_slice = xs_slice
+        new_states = []
+        for p_idx, spec in enumerate(specs):
+            x, st, budget = _block_apply_decode_paged(
+                bp_slice[p_idx], cfg, spec, x, st_slice[p_idx],
+                page_table, lengths, live)
+            new_states.append(st)
+            if spec.kind == "attn":
+                budget_sum = budget_sum + budget
+                n_attn = n_attn + 1.0
+        return (x, budget_sum, n_attn), new_states
+
+    (x, budget_sum, n_attn), new_blocks = jax.lax.scan(
+        period_body,
+        (x, jnp.zeros((b,), jnp.float32), jnp.zeros((), jnp.float32)),
+        (params["blocks"], state["blocks"]), length=repeats)
+
+    x = ly.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head)[:, 0]
+    stats = {"pruned_budget": budget_sum / jnp.maximum(n_attn, 1.0)}
+    return logits, {"blocks": new_blocks}, stats

@@ -1,26 +1,58 @@
-"""Batched decode engine with Twilight sparse attention.
+"""Serving engine: wave-batched (contiguous) and continuous (paged) decode.
 
-A deliberately real serving loop: fixed batch slots, request queue,
-continuous batching (a finished slot is refilled at the next prefill
-boundary), greedy/nucleus sampling, per-step Twilight budget telemetry.
+Two scheduling modes around the same model:
 
-The decode step is jitted once per (batch, cache_capacity) and reused; all
-request dynamism is data (positions, live masks), never shapes — the same
-static-shape discipline the TPU adaptation imposes on the kernels.
+* ``paged=False`` — the legacy wave scheduler: fixed batch slots, every
+  request in a wave decodes for the wave's ``max(max_new_tokens)`` against a
+  per-slot contiguous cache of ``cache_capacity`` tokens.  Kept as the
+  equivalence oracle (same role as ``TwilightConfig.compact=False``).
+* ``paged=True`` — **true continuous batching** over a shared page pool
+  (``repro.serving.paged_cache``): slots retire and admit new requests at
+  every decode step; each request owns only the KV pages its tokens fill
+  (prefill allocates ceil(len/page_size), decode allocates one page per
+  boundary crossing, retirement frees them).  Per-request
+  ``max_new_tokens``, ragged prompt lengths, and per-slot sampling modes
+  are all data; the jitted step is compiled once per
+  (batch, num_pages, max_pages) and reused.
+
+The decode loop stays async in both modes: sampling runs inside the jitted
+step, per-step token/budget frames stay on device, and the host fetches
+them ONCE after the queue drains.  Host-side work per step is pure
+bookkeeping (page allocation, admission, retirement) on numpy mirrors of
+the page table — never a device sync.
+
+When the pool runs dry mid-decode the engine preempts the most recently
+admitted victim by *restart*: its pages are freed and the request is
+requeued at the front, to be re-served from its prompt.  For greedy
+requests the regenerated tokens are identical (asserted in
+``tests/test_paged_cache.py``); sampled requests draw a fresh
+continuation.  (True vLLM-style recompute — one prefill over
+prompt+generated — would need the victim's device-side token frames
+synced to the host mid-loop; left as a follow-up.)  Admission keeps one
+boundary-page of headroom per live slot to make preemption rare.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, init_params, prefill
+from repro.models import (
+    decode_step,
+    decode_step_paged,
+    init_paged_decode_state,
+    init_params,
+    prefill,
+    write_prefill_slot,
+)
 from repro.models.common import ModelConfig
+from repro.serving.paged_cache import PageAllocator, pad_to_pages, pages_for
 from repro.serving.sampler import sample_token
 
 Tree = Any
@@ -45,14 +77,37 @@ class GenerationResult:
     wall_s: float
 
 
+@dataclasses.dataclass
+class _SlotRun:
+    """Host bookkeeping for one admitted request."""
+
+    req: Request
+    slot: int
+    pages: list[int]
+    tok0: jax.Array  # () device scalar — sampled from the prefill logits
+    start_frame: int  # first decode frame this slot participates in
+    emitted: int  # tokens sampled so far (tok0 included)
+    t_admit: float
+    order: int  # admission sequence number (preemption picks the newest)
+
+
 class DecodeEngine:
-    """Continuous-batching engine around (prefill, decode_step)."""
+    """Batched decode engine around (prefill, decode_step[_paged])."""
 
     def __init__(self, cfg: ModelConfig, params: Tree | None = None, *,
-                 batch_size: int = 8, cache_capacity: int = 512, seed: int = 0):
+                 batch_size: int = 8, cache_capacity: int = 512, seed: int = 0,
+                 paged: bool = False, num_pages: int | None = None):
+        tw = cfg.twilight
+        if tw.enabled and tw.compact and tw.pruned_cap_frac is None:
+            # Serving default: B1-scaled final gather (ROADMAP follow-up).
+            # The attended buffer is re-compacted to 1/4 of the candidate
+            # buffer, far above the paper's measured ~2 %-of-n budgets.
+            cfg = cfg.replace(
+                twilight=dataclasses.replace(tw, pruned_cap_frac=0.25))
         self.cfg = cfg
         self.batch_size = batch_size
         self.cache_capacity = cache_capacity
+        self.paged = paged
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else init_params(cfg, key)
         self._sample_key = jax.random.PRNGKey(seed + 1)
@@ -61,10 +116,45 @@ class DecodeEngine:
             lambda p, batch: prefill(p, cfg, batch, cache_capacity))
         self._decode = jax.jit(lambda p, st, tok: decode_step(p, cfg, st, tok))
 
-    # -- single-batch generation (prompts padded to a common length) --------
+        if paged:
+            tw = cfg.twilight
+            if not (tw.enabled and tw.compact):
+                raise ValueError("paged serving requires the compact "
+                                 "Twilight pipeline")
+            ps = tw.page_size
+            if cache_capacity % ps:
+                raise ValueError(f"cache_capacity {cache_capacity} not "
+                                 f"divisible by page_size {ps}")
+            self.max_pages = cache_capacity // ps
+            # Default pool: worst case (every slot full) + the null page —
+            # no smaller than wave mode, but callers shrink it to realize
+            # the memory win (utilization tracks live tokens, not slots).
+            self.num_pages = (num_pages if num_pages is not None
+                              else 1 + batch_size * self.max_pages)
+            prefix = (cfg.n_prefix_tokens if cfg.frontend == "vision" else 0)
+            self._prefill_paged = jax.jit(lambda p, batch: prefill(
+                p, cfg, batch,
+                pad_to_pages(batch["tokens"].shape[1] + prefix, ps)))
+            self._write = jax.jit(
+                lambda st, pst, slot, pages: write_prefill_slot(
+                    cfg, st, pst, slot, pages),
+                donate_argnums=(0,))
+
+            def _step_fn(p, state, tok, pt, lengths, live, greedy, key):
+                logits, state, stats = decode_step_paged(
+                    p, cfg, state, tok, pt, lengths, live)
+                nxt = sample_token(key, logits[:, :cfg.vocab_size],
+                                   greedy=greedy)
+                return nxt, state, stats["pruned_budget"]
+
+            self._step = jax.jit(_step_fn, donate_argnums=(1,))
+
+    # -- dispatch -----------------------------------------------------------
 
     def generate(self, requests: list[Request]) -> list[GenerationResult]:
-        """Serve a wave of requests (continuous batching across waves)."""
+        """Serve requests: continuous batching when paged, else waves."""
+        if self.paged:
+            return self._serve_continuous(requests)
         results: list[GenerationResult] = []
         queue = list(requests)
         while queue:
@@ -72,6 +162,8 @@ class DecodeEngine:
             queue = queue[self.batch_size:]
             results.extend(self._serve_wave(wave))
         return results
+
+    # -- wave mode (the contiguous-cache oracle) ----------------------------
 
     def _serve_wave(self, wave: list[Request]) -> list[GenerationResult]:
         t0 = time.time()
@@ -93,7 +185,12 @@ class DecodeEngine:
         logits, state = self._prefill(self.params, batch)
         last = logits[:, -1, :self.cfg.vocab_size]  # drop padded vocab rows
         max_new = max(r.max_new_tokens for r in wave)
-        greedy = all(r.greedy for r in wave)
+        # Per-slot sampling mode: a greedy and a sampling request can share
+        # a wave (previously collapsed to all(r.greedy)).  A uniform wave
+        # keeps the Python-bool fast path (argmax only — no wasted
+        # softmax/top-p work for the common all-greedy case).
+        modes = [r.greedy for r in wave]
+        greedy = modes[0] if len(set(modes)) == 1 else jnp.asarray(modes)
         # The decode loop stays async: tokens and the budget accumulator
         # live on device and are fetched ONCE per wave.  A float()/asarray()
         # inside the loop would block on the device every token and
@@ -121,5 +218,189 @@ class DecodeEngine:
                 decode_steps=r.max_new_tokens,
                 mean_pruned_budget=mean_budget,
                 wall_s=wall,
+            ))
+        return results
+
+    # -- continuous mode (paged pool) ---------------------------------------
+
+    def _batch_one(self, req: Request, prompt: np.ndarray) -> dict:
+        batch = {"tokens": jnp.asarray(prompt[None])}
+        if self.cfg.frontend == "audio":
+            batch["frames"] = jnp.asarray(req.extras["frames"][None])
+        elif self.cfg.frontend == "vision":
+            batch["patches"] = jnp.asarray(req.extras["patches"][None])
+        return batch
+
+    def _sample_one(self, logits_row: jax.Array, greedy: bool) -> jax.Array:
+        self._sample_key, k = jax.random.split(self._sample_key)
+        return sample_token(k, logits_row[None], greedy=greedy)[0]
+
+    def _serve_continuous(self, requests: list[Request]
+                          ) -> list[GenerationResult]:
+        self.last_preemptions = 0  # telemetry: recompute preemptions
+        if not requests:
+            return []
+        cfg = self.cfg
+        ps = cfg.twilight.page_size
+        prefix = cfg.n_prefix_tokens if cfg.frontend == "vision" else 0
+        b = self.batch_size
+        n_enc = 0
+        if cfg.frontend == "audio":
+            n_enc = len(requests[0].extras["frames"])
+            if any(len(r.extras["frames"]) != n_enc for r in requests):
+                raise ValueError("audio requests must share a frame length")
+
+        alloc = PageAllocator(self.num_pages)
+        state = init_paged_decode_state(cfg, b, self.num_pages, n_enc=n_enc)
+        pt = np.zeros((b, self.max_pages), np.int32)
+        lengths = np.zeros((b,), np.int32)
+        live = np.zeros((b,), bool)
+        greedy = np.ones((b,), bool)
+        slots: list[_SlotRun | None] = [None] * b
+        pending: deque[Request] = deque(requests)
+        cur_tok = jnp.zeros((b,), jnp.int32)
+        tok_frames: list[jax.Array] = []  # (b,) per step, stay on device
+        budget_frames: list[jax.Array] = []
+        done: list[tuple[_SlotRun, float]] = []  # (run, retire time)
+        order = 0
+
+        def admit(slot: int) -> bool:
+            nonlocal state, cur_tok, order
+            req = pending[0]
+            prompt = np.asarray(req.prompt, np.int32)
+            cap = self.cache_capacity - prefix
+            if req.max_new_tokens >= cap:
+                raise ValueError(
+                    f"request {req.uid}: max_new_tokens "
+                    f"{req.max_new_tokens} cannot fit cache_capacity "
+                    f"{self.cache_capacity} (prefix {prefix})")
+            keep = cap - req.max_new_tokens  # >= 1
+            if len(prompt) > keep:
+                prompt = prompt[-keep:]
+            s_total = len(prompt) + prefix
+            worst = pages_for(s_total + req.max_new_tokens, ps)
+            if worst > alloc.capacity:
+                raise ValueError(
+                    f"request {req.uid} needs {worst} pages; pool has "
+                    f"{alloc.capacity} — raise num_pages")
+            n_req = pages_for(s_total, ps)
+            live_count = sum(1 for r in slots if r is not None)
+            # Alone, a request is admitted only if its worst case fits (it
+            # then completes without preemption — no livelock); alongside
+            # live slots, keep one boundary page of headroom per slot.
+            need = worst if live_count == 0 else n_req + live_count
+            if alloc.available < need:
+                return False
+            pending.popleft()
+            pages = alloc.alloc(n_req)
+            logits, pstate = self._prefill_paged(
+                self.params, self._batch_one(req, prompt))
+            state = self._write(state, pstate, jnp.int32(slot),
+                                jnp.asarray(pages, jnp.int32))
+            tok0 = self._sample_one(logits[0, s_total - 1, :cfg.vocab_size],
+                                    req.greedy)
+            run = _SlotRun(req=req, slot=slot, pages=pages, tok0=tok0,
+                           start_frame=len(tok_frames), emitted=1,
+                           t_admit=time.time(), order=order)
+            order += 1
+            if req.max_new_tokens <= 1:
+                alloc.free(pages)
+                done.append((run, time.time()))
+                return True
+            slots[slot] = run
+            pt[slot, :n_req] = pages
+            pt[slot, n_req:] = 0
+            lengths[slot] = s_total
+            live[slot] = True
+            greedy[slot] = req.greedy
+            cur_tok = cur_tok.at[slot].set(tok0)
+            return True
+
+        def retire(slot: int, preempted: bool = False) -> None:
+            run = slots[slot]
+            alloc.free(run.pages)
+            slots[slot] = None
+            live[slot] = False
+            pt[slot] = 0
+            lengths[slot] = 0
+            if preempted:
+                pending.appendleft(run.req)
+            else:
+                done.append((run, time.time()))
+
+        def preempt_for_page(needy: int) -> None:
+            victims = [r for r in (slots[s] for s in range(b))
+                       if r is not None and r.slot != needy]
+            victim = (max(victims, key=lambda r: r.order).slot
+                      if victims else needy)
+            self.last_preemptions += 1
+            retire(victim, preempted=True)
+
+        while pending or any(live):
+            # Admission: fill every free slot while the queue and pool allow
+            # (an instantly-retired max_new=1 request frees its slot again).
+            slot = 0
+            while pending and slot < b:
+                if slots[slot] is None:
+                    if not admit(slot):
+                        break
+                    if slots[slot] is None:
+                        continue
+                slot += 1
+            if not any(live):
+                if pending:
+                    # Nothing live to retire yet the head request stalls:
+                    # only possible transiently after mass preemption; loop.
+                    continue
+                break
+            # Boundary pages for this step's appends.
+            for slot in range(b):
+                if live[slot] and lengths[slot] % ps == 0:
+                    while alloc.available < 1:
+                        preempt_for_page(slot)
+                    if not live[slot]:  # self-preempted (last resort)
+                        continue
+                    page = alloc.alloc(1)[0]
+                    slots[slot].pages.append(page)
+                    pt[slot, lengths[slot] // ps] = page
+            if not any(live):
+                continue
+            # One jitted step for the whole batch; dead slots compute junk
+            # into the null page.
+            self._sample_key, k = jax.random.split(self._sample_key)
+            cur_tok, state, budget = self._step(
+                self.params, state, cur_tok, jnp.asarray(pt),
+                jnp.asarray(lengths), jnp.asarray(live), jnp.asarray(greedy),
+                k)
+            tok_frames.append(cur_tok)
+            budget_frames.append(budget)
+            for slot in range(b):
+                if not live[slot]:
+                    continue
+                lengths[slot] += 1
+                run = slots[slot]
+                run.emitted += 1
+                if run.emitted >= run.req.max_new_tokens:
+                    retire(slot)
+
+        # Single host sync: fetch every decode frame at once.
+        toks = (np.stack([np.asarray(t) for t in tok_frames])
+                if tok_frames else np.zeros((0, b), np.int32))
+        buds = (np.stack([np.asarray(x) for x in budget_frames])
+                if budget_frames else np.zeros((0, b), np.float32))
+        results = []
+        for run, t_done in done:
+            n_dec = run.req.max_new_tokens - 1
+            frames = toks[run.start_frame:run.start_frame + n_dec, run.slot]
+            frame_buds = buds[run.start_frame:run.start_frame + n_dec,
+                              run.slot]
+            results.append(GenerationResult(
+                uid=run.req.uid,
+                tokens=[int(np.asarray(run.tok0))] + frames.tolist(),
+                prompt_len=len(run.req.prompt),
+                decode_steps=run.req.max_new_tokens,
+                mean_pruned_budget=(float(frame_buds.mean())
+                                    if len(frame_buds) else 0.0),
+                wall_s=t_done - run.t_admit,
             ))
         return results

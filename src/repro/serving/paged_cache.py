@@ -1,0 +1,93 @@
+"""Paged KV-cache pool: vLLM-style block allocator + pool array helpers.
+
+The serving engine provisions ONE shared pool of ``num_pages`` fixed-size
+pages per attention layer instead of a contiguous ``(batch, capacity)``
+cache per slot.  Each request owns only the pages its tokens actually fill
+(prefill allocates ceil(len/page_size); decode allocates one page at each
+page boundary), so memory scales with live tokens, not with
+``batch * worst_case`` — the substrate that makes continuous batching pay.
+
+Layout (per attention layer, see ``models.model._attn_pool_init``):
+
+* ``k``/``v``:            (num_pages * page_size, hkv, d) token rows
+* ``qk_packed/scale/zero``: INT4 shadow cache, same token-row layout
+* ``pmax``/``pmin``:      (num_pages, hkv, d) Quest metadata per *physical*
+  page — selectors gather it through the per-slot page table
+* page table:             (batch, max_pages) i32, engine-managed **host**
+  state mirrored to device as plain data each step
+
+Physical page 0 is the **null page**: never allocated, the scatter target
+for dead slots and the safe-gather target for invalid index-buffer slots.
+All allocation bookkeeping is host-side Python (a free list); device state
+never stores pointers, only the page-table array — so the jitted decode
+step stays a pure function of arrays and the allocator needs no tracing.
+"""
+
+from __future__ import annotations
+
+__all__ = ["NULL_PAGE", "PageAllocator", "pages_for", "pad_to_pages"]
+
+NULL_PAGE = 0
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Number of pages needed to hold ``n_tokens`` token rows."""
+    return -(-max(0, n_tokens) // page_size)
+
+
+def pad_to_pages(n_tokens: int, page_size: int) -> int:
+    """``n_tokens`` rounded up to a whole number of pages."""
+    return pages_for(n_tokens, page_size) * page_size
+
+
+class PageAllocator:
+    """Free-list allocator over physical page ids ``1..num_pages-1``.
+
+    Page 0 (:data:`NULL_PAGE`) is reserved.  Pages are recycled LIFO so a
+    steady-state workload keeps touching the same hot pages.  Invariants
+    (asserted, and exercised by ``tests/test_paged_cache.py``):
+
+    * a page is never handed out twice without an intervening ``free``
+    * ``free`` of an unallocated (or null) page raises
+    * ``available + len(allocated) == num_pages - 1`` at all times
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need at least one allocatable page + the null page")
+        self.num_pages = num_pages
+        self._free: list[int] = list(range(num_pages - 1, NULL_PAGE, -1))
+        self._allocated: set[int] = set()
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        """Total allocatable pages (excludes the null page)."""
+        return self.num_pages - 1
+
+    @property
+    def allocated(self) -> frozenset[int]:
+        return frozenset(self._allocated)
+
+    def alloc(self, n: int) -> list[int]:
+        """Pop ``n`` pages off the free list; raises MemoryError if short."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} pages")
+        if n > len(self._free):
+            raise MemoryError(
+                f"page pool exhausted: want {n}, have {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._allocated.update(pages)
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            if p == NULL_PAGE:
+                raise ValueError("cannot free the null page")
+            if p not in self._allocated:
+                raise ValueError(f"double free of page {p}")
+            self._allocated.remove(p)
+            self._free.append(p)

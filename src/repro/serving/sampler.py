@@ -23,8 +23,19 @@ def top_p_sample(key: jax.Array, logits: jax.Array, p: float = 0.9,
                                   ).astype(jnp.int32)
 
 
-def sample_token(key: jax.Array, logits: jax.Array, *, greedy: bool = False,
+def sample_token(key: jax.Array, logits: jax.Array, *,
+                 greedy: bool | jax.Array = False,
                  p: float = 0.9, temperature: float = 1.0) -> jax.Array:
-    if greedy:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return top_p_sample(key, logits, p=p, temperature=temperature)
+    """Sample (b,) tokens from (b, vocab) logits.
+
+    ``greedy`` is either a Python bool (whole batch) or a (b,) bool mask —
+    the per-slot sampling mode the continuous-batching engine carries, so a
+    greedy request and a nucleus-sampling request can share one batch step.
+    """
+    if isinstance(greedy, bool):
+        if greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return top_p_sample(key, logits, p=p, temperature=temperature)
+    argmax = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    sampled = top_p_sample(key, logits, p=p, temperature=temperature)
+    return jnp.where(jnp.asarray(greedy), argmax, sampled)

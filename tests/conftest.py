@@ -10,6 +10,8 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
+import zlib
+
 import jax
 import numpy as np
 import pytest
@@ -17,9 +19,23 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
-@pytest.fixture(scope="session")
-def rng():
-    return np.random.default_rng(0)
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running tests (subprocess dry-run compiles)")
+
+
+@pytest.fixture()
+def rng(request):
+    """Per-test deterministic random stream, independent of suite order.
+
+    The old session-scoped generator advanced across tests, so the data any
+    test saw depended on which tests ran before it — running a subset (or
+    -x aborting early) changed inputs, which is how borderline-tolerance
+    tests (the jamba teacher-forcing check) appeared to "flip".  Seeding
+    from the test's node id gives every test its own fixed stream no matter
+    what else runs.
+    """
+    return np.random.default_rng(zlib.crc32(request.node.nodeid.encode()))
 
 
 def make_weights(rng, rows, n, concentration=3.0):

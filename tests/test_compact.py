@@ -10,7 +10,7 @@ import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
+import pytest  # noqa: F401  (parametrize)
 
 from repro.core import (
     SelectionContext,
@@ -24,13 +24,8 @@ from repro.core.selectors import indices_from_mask, indices_to_mask
 
 SELECTORS = ("full", "quest", "double_sparsity", "streaming", "h2o")
 
-
-@pytest.fixture()
-def rng():
-    # Deliberately NOT the shared session-scoped generator: a local fixed
-    # stream keeps these tests deterministic and leaves the draw sequence
-    # of the rest of the suite unchanged.
-    return np.random.default_rng(42)
+# The shared `rng` fixture (conftest) is now per-test and order-independent,
+# so the local fixed-stream override this file used to carry is gone.
 
 
 def _setup(rng, b=2, hq=8, hkv=2, n=512, d=64):

@@ -1,0 +1,373 @@
+"""Paged KV-cache pool + continuous batching vs the contiguous oracle.
+
+Three levels of equivalence, mirroring how the feature is layered:
+
+* core — ``twilight_decode_attention`` over a shuffled page pool + page
+  tables must match the contiguous cache bit-for-bit (fp32 allclose) for
+  every selector, including ragged lengths;
+* model — ``decode_step_paged`` logits must match per-request contiguous
+  ``prefill``/``decode_step`` at ragged lengths sharing one batch;
+* engine — continuous batching must emit exactly the tokens the
+  per-request contiguous oracle emits (greedy), including under a tight
+  pool that forces recompute preemption.
+
+Plus: allocator alloc/free/fragmentation invariants, per-slot sampling
+modes in one wave, and the spgemv-routed compact estimate.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    PageMeta,
+    SelectionContext,
+    TwilightConfig,
+    build_page_meta,
+    calibrate_ds_channels,
+    quantize_int4,
+    twilight_decode_attention,
+)
+from repro.core.pruner import TwilightPruner
+from repro.serving import DecodeEngine, Request
+from repro.serving.paged_cache import NULL_PAGE, PageAllocator, pages_for
+
+SELECTORS = ("full", "quest", "double_sparsity", "streaming", "h2o")
+
+
+# ---------------------------------------------------------------------------
+# Allocator invariants
+# ---------------------------------------------------------------------------
+
+def test_allocator_invariants():
+    alloc = PageAllocator(9)
+    assert alloc.capacity == 8 and alloc.available == 8
+    a = alloc.alloc(3)
+    b = alloc.alloc(2)
+    assert len(set(a) | set(b)) == 5, "no page handed out twice"
+    assert NULL_PAGE not in a + b, "null page is reserved"
+    assert all(0 < p < 9 for p in a + b)
+    assert alloc.available == 3
+    assert alloc.available + len(alloc.allocated) == alloc.capacity
+    alloc.free(a)
+    assert alloc.available == 6
+    assert set(alloc.allocated) == set(b)
+
+
+def test_allocator_exhaustion_and_reuse():
+    alloc = PageAllocator(5)
+    a = alloc.alloc(4)
+    with pytest.raises(MemoryError):
+        alloc.alloc(1)
+    alloc.free(a[:2])
+    b = alloc.alloc(2)
+    assert set(b) == set(a[:2]), "freed pages are recycled"
+    assert alloc.available == 0
+
+
+def test_allocator_fragmentation_cycles():
+    """Interleaved alloc/free cycles keep accounting exact and never leak."""
+    rng = np.random.default_rng(0)
+    alloc = PageAllocator(33)
+    held: list[list[int]] = []
+    for _ in range(200):
+        if held and (alloc.available == 0 or rng.random() < 0.4):
+            alloc.free(held.pop(int(rng.integers(len(held)))))
+        else:
+            n = int(rng.integers(1, min(5, alloc.available) + 1))
+            held.append(alloc.alloc(n))
+        flat = [p for h in held for p in h]
+        assert len(flat) == len(set(flat)), "double allocation"
+        assert alloc.available + len(flat) == alloc.capacity
+    for h in held:
+        alloc.free(h)
+    assert alloc.available == alloc.capacity
+
+
+def test_allocator_double_free_rejected():
+    alloc = PageAllocator(4)
+    a = alloc.alloc(2)
+    alloc.free(a)
+    with pytest.raises(ValueError):
+        alloc.free([a[0]])
+    with pytest.raises(ValueError):
+        alloc.free([NULL_PAGE])
+
+
+# ---------------------------------------------------------------------------
+# Core: paged pipeline == contiguous pipeline
+# ---------------------------------------------------------------------------
+
+def _paged_fixture(rng, b=2, hq=8, hkv=2, n=256, d=64, ps=16):
+    """Contiguous (q, K, V, ctx, qkeys) plus a pool holding the same data at
+    *shuffled* physical pages behind per-slot page tables."""
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    acc = jnp.asarray(rng.random((b, hkv, n)), jnp.float32)
+    ds = calibrate_ds_channels(K, 8)
+    pm = build_page_meta(K, ps)
+
+    n_pages = n // ps
+    num_pages = 1 + b * n_pages + 3  # null + slack
+    perm = rng.permutation(np.arange(1, num_pages))
+    pt = np.zeros((b, n_pages), np.int32)
+    rows = num_pages * ps
+    # Pool starts as junk everywhere (incl. the null page) so any gather
+    # that escapes the page table would be caught by the equivalence check.
+    k_pool = np.asarray(rng.normal(size=(rows, hkv, d)), np.float32)
+    v_pool = np.asarray(rng.normal(size=(rows, hkv, d)), np.float32)
+    pmax_pool = np.asarray(rng.normal(size=(num_pages, hkv, d)), np.float32)
+    pmin_pool = np.asarray(rng.normal(size=(num_pages, hkv, d)), np.float32)
+    Knp, Vnp = np.asarray(K), np.asarray(V)
+    kmax, kmin = np.asarray(pm.kmax), np.asarray(pm.kmin)
+    i = 0
+    for bb in range(b):
+        for p in range(n_pages):
+            phys = int(perm[i])
+            i += 1
+            pt[bb, p] = phys
+            k_pool[phys * ps:(phys + 1) * ps] = Knp[bb, p * ps:(p + 1) * ps]
+            v_pool[phys * ps:(phys + 1) * ps] = Vnp[bb, p * ps:(p + 1) * ps]
+            pmax_pool[phys] = kmax[bb, p]
+            pmin_pool[phys] = kmin[bb, p]
+    k_pool, v_pool = jnp.asarray(k_pool), jnp.asarray(v_pool)
+    pm_pool = PageMeta(kmax=jnp.asarray(pmax_pool), kmin=jnp.asarray(pmin_pool),
+                       page_size=ps)
+    return {
+        "q": q, "K": K, "V": V, "qkeys": quantize_int4(K),
+        "ctx": lambda length: SelectionContext(
+            keys=K, page_meta=pm, accum_scores=acc, length=length,
+            ds_channels=ds),
+        "k_pool": k_pool, "v_pool": v_pool,
+        "qkeys_pool": quantize_int4(k_pool),
+        "ctx_paged": lambda length: SelectionContext(
+            keys=k_pool, page_meta=pm_pool, accum_scores=acc, length=length,
+            ds_channels=ds, page_table=jnp.asarray(pt)),
+    }
+
+
+@pytest.mark.parametrize("selector", SELECTORS)
+@pytest.mark.parametrize("ragged", [False, True])
+def test_paged_pipeline_matches_contiguous(rng, selector, ragged):
+    fx = _paged_fixture(rng)
+    length = jnp.asarray([256, 180]) if ragged else jnp.asarray([256, 256])
+    cfg = TwilightConfig(selector=selector, p=0.9, candidate_frac=0.5,
+                         page_size=16, min_candidate=64)
+    ref = twilight_decode_attention(
+        fx["q"], fx["K"], fx["V"], cfg, ctx=fx["ctx"](length),
+        qkeys=fx["qkeys"], length=length)
+    paged = twilight_decode_attention(
+        fx["q"], fx["k_pool"], fx["v_pool"], cfg, ctx=fx["ctx_paged"](length),
+        qkeys=fx["qkeys_pool"], length=length)
+    np.testing.assert_allclose(np.asarray(paged.out), np.asarray(ref.out),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(paged.stats.candidate_budget),
+                                  np.asarray(ref.stats.candidate_budget))
+    np.testing.assert_array_equal(np.asarray(paged.stats.pruned_budget),
+                                  np.asarray(ref.stats.pruned_budget))
+    # Same logical candidate sets: the paged selector emits logical indices.
+    np.testing.assert_array_equal(np.asarray(paged.indices),
+                                  np.asarray(ref.indices))
+
+
+def test_paged_pipeline_with_pruned_cap(rng):
+    """The B1 re-compaction path translates through the page table too."""
+    fx = _paged_fixture(rng)
+    length = jnp.asarray([256, 200])
+    cfg = TwilightConfig(selector="quest", p=0.999, candidate_frac=1.0,
+                         page_size=16, pruned_cap_frac=0.25)
+    ref = twilight_decode_attention(
+        fx["q"], fx["K"], fx["V"], cfg, ctx=fx["ctx"](length),
+        qkeys=fx["qkeys"], length=length)
+    paged = twilight_decode_attention(
+        fx["q"], fx["k_pool"], fx["v_pool"], cfg, ctx=fx["ctx_paged"](length),
+        qkeys=fx["qkeys_pool"], length=length)
+    np.testing.assert_allclose(np.asarray(paged.out), np.asarray(ref.out),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_requires_compact():
+    rng = np.random.default_rng(0)
+    fx = _paged_fixture(rng)
+    length = jnp.asarray([256, 256])
+    cfg = TwilightConfig(selector="quest", compact=False, page_size=16)
+    with pytest.raises(ValueError, match="compact"):
+        twilight_decode_attention(
+            fx["q"], fx["k_pool"], fx["v_pool"], cfg,
+            ctx=fx["ctx_paged"](length), qkeys=fx["qkeys_pool"],
+            length=length)
+
+
+# ---------------------------------------------------------------------------
+# Model: paged decode == contiguous decode at ragged lengths
+# ---------------------------------------------------------------------------
+
+def test_model_paged_decode_matches_contiguous(rng):
+    from repro.models import (decode_step, decode_step_paged,
+                              init_paged_decode_state, init_params, prefill,
+                              write_prefill_slot)
+    cfg = get_smoke_config("qwen2-1.5b")
+    ps = cfg.twilight.page_size
+    capacity = 64
+    max_pages = capacity // ps
+    import jax
+    params = init_params(cfg, jax.random.PRNGKey(7))
+    prompts = [rng.integers(8, cfg.vocab_size, L).astype(np.int32)
+               for L in (24, 13)]
+    steps = [rng.integers(8, cfg.vocab_size, 3).astype(np.int32)
+             for _ in prompts]
+
+    oracle = []
+    for pr, ts in zip(prompts, steps):
+        lg, st = prefill(params, cfg, {"tokens": jnp.asarray(pr[None])},
+                         n_max=capacity)
+        outs = [np.asarray(lg[0, len(pr) - 1, :cfg.vocab_size], np.float32)]
+        for t in ts:
+            lg2, st, _ = decode_step(params, cfg, st, jnp.asarray([t]))
+            outs.append(np.asarray(lg2[0, :cfg.vocab_size], np.float32))
+        oracle.append(outs)
+
+    b = 2
+    alloc = PageAllocator(1 + b * max_pages)
+    state = init_paged_decode_state(cfg, b, alloc.num_pages)
+    pt = np.zeros((b, max_pages), np.int32)
+    lengths = np.zeros((b,), np.int32)
+    paged = [[], []]
+    for s, pr in enumerate(prompts):
+        n_req = pages_for(len(pr), ps)
+        pages = alloc.alloc(n_req)
+        lg, pstate = prefill(params, cfg, {"tokens": jnp.asarray(pr[None])},
+                             n_max=n_req * ps)
+        state = write_prefill_slot(cfg, state, pstate, s, jnp.asarray(pages))
+        pt[s, :n_req] = pages
+        lengths[s] = len(pr)
+        paged[s].append(
+            np.asarray(lg[0, len(pr) - 1, :cfg.vocab_size], np.float32))
+
+    live = np.ones((b,), bool)
+    for i in range(3):
+        for s in range(b):
+            if lengths[s] % ps == 0:
+                pt[s, lengths[s] // ps] = alloc.alloc(1)[0]
+        tok = jnp.asarray([steps[0][i], steps[1][i]])
+        lg, state, stats = decode_step_paged(
+            params, cfg, state, tok, jnp.asarray(pt), jnp.asarray(lengths),
+            jnp.asarray(live))
+        assert stats["pruned_budget"].shape == (b,)
+        for s in range(b):
+            paged[s].append(np.asarray(lg[s, :cfg.vocab_size], np.float32))
+        lengths += 1
+
+    for s in range(b):
+        for i, (ref, got) in enumerate(zip(oracle[s], paged[s])):
+            np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4,
+                                       err_msg=f"slot {s} step {i}")
+
+
+# ---------------------------------------------------------------------------
+# Engine: continuous batching == per-request contiguous oracle
+# ---------------------------------------------------------------------------
+
+def _requests(rng, cfg, shapes):
+    return [Request(uid=uid,
+                    prompt=rng.integers(8, cfg.vocab_size, L
+                                        ).astype(np.int32),
+                    max_new_tokens=mn)
+            for uid, (L, mn) in enumerate(shapes)]
+
+
+def test_engine_continuous_matches_oracle(rng):
+    cfg = get_smoke_config("qwen2-1.5b")
+    reqs = _requests(rng, cfg, [(24, 5), (17, 3), (9, 1)])
+    # batch_size=1 waves serve each request alone — the padding-free oracle
+    # (ragged waves left-pad, which shifts RoPE positions and changes the
+    # answer; continuous batching is padding-free by construction).
+    solo = DecodeEngine(cfg, batch_size=1, cache_capacity=64, seed=7)
+    paged = DecodeEngine(cfg, params=solo.params, batch_size=2,
+                         cache_capacity=64, seed=7, paged=True)
+    want = {r.uid: r.tokens for r in solo.generate(reqs)}
+    got = {r.uid: r.tokens for r in paged.generate(reqs)}
+    assert got == want
+    for r in paged.generate(reqs[:1]):
+        assert r.decode_steps == 5 and len(r.tokens) == 5
+
+
+def test_engine_tight_pool_preemption(rng):
+    """A pool far below worst case forces recompute preemption; tokens must
+    still match the oracle exactly.
+
+    Sizing: two 17-token prompts (3 pages each) decoding 20 tokens each in
+    a 8-allocatable-page pool — both admit (worst case 5 pages each), then
+    both cross page boundaries twice, exhausting the pool mid-decode.
+    """
+    cfg = get_smoke_config("qwen2-1.5b")
+    reqs = _requests(rng, cfg, [(17, 20), (17, 20)])
+    solo = DecodeEngine(cfg, batch_size=1, cache_capacity=40, seed=7)
+    tight = DecodeEngine(cfg, params=solo.params, batch_size=2,
+                         cache_capacity=40, seed=7, paged=True, num_pages=9)
+    want = {r.uid: r.tokens for r in solo.generate(reqs)}
+    got = {r.uid: r.tokens for r in tight.generate(reqs)}
+    assert tight.last_preemptions > 0, "pool sizing must force preemption"
+    assert got == want
+
+
+def test_engine_rejects_oversized_request(rng):
+    cfg = get_smoke_config("qwen2-1.5b")
+    ps = cfg.twilight.page_size
+    engine = DecodeEngine(cfg, batch_size=2, cache_capacity=64, seed=0,
+                          paged=True, num_pages=3)
+    reqs = _requests(rng, cfg, [(40, 8)])
+    with pytest.raises(ValueError, match="num_pages"):
+        engine.generate(reqs)
+
+
+def test_wave_per_slot_sampling(rng):
+    """A greedy and a sampling request share one wave; the greedy slot's
+    tokens must be exactly its solo-greedy continuation (previously the
+    engine collapsed the wave to all(r.greedy))."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    p0 = rng.integers(8, cfg.vocab_size, 24).astype(np.int32)
+    p1 = rng.integers(8, cfg.vocab_size, 24).astype(np.int32)
+    eng = DecodeEngine(cfg, batch_size=2, cache_capacity=64, seed=7)
+    mixed = {r.uid: r.tokens for r in eng.generate([
+        Request(uid=0, prompt=p0, max_new_tokens=5, greedy=True),
+        Request(uid=1, prompt=p1, max_new_tokens=5, greedy=False)])}
+    ref = DecodeEngine(cfg, params=eng.params, batch_size=2,
+                       cache_capacity=64, seed=123)
+    pure = {r.uid: r.tokens for r in ref.generate([
+        Request(uid=0, prompt=p0, max_new_tokens=5, greedy=True),
+        Request(uid=1, prompt=p1, max_new_tokens=5, greedy=True)])}
+    assert mixed[0] == pure[0]
+
+
+# ---------------------------------------------------------------------------
+# spgemv-routed compact estimate
+# ---------------------------------------------------------------------------
+
+def test_spgemv_estimate_matches_jnp(rng):
+    b, hq, hkv, n, d = 2, 8, 2, 256, 64
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    qk = quantize_int4(K)
+    idx = jnp.broadcast_to(jnp.arange(128, dtype=jnp.int32), (b, hkv, 128))
+    ref = TwilightPruner(use_spgemv=False).estimate_scores_at(q, idx, qkeys=qk)
+    ker = TwilightPruner(use_spgemv=True).estimate_scores_at(q, idx, qkeys=qk)
+    # The kernel dequantizes in f32 inside the epilogue; the jnp reference
+    # materializes a bf16 K̃ — tolerance covers that rounding gap only.
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_estimate_backend_resolution():
+    import jax
+    assert TwilightConfig(estimate_backend="pallas").make_pruner().use_spgemv
+    assert not TwilightConfig(estimate_backend="jnp").make_pruner().use_spgemv
+    auto = TwilightConfig(estimate_backend="auto").make_pruner().use_spgemv
+    assert auto == (jax.default_backend() == "tpu")
+    # estimate_bits > 4 has no packed codes to feed the kernel.
+    assert not TwilightConfig(estimate_backend="pallas",
+                              estimate_bits=16).make_pruner().use_spgemv
