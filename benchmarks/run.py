@@ -30,6 +30,7 @@ TABLES = {
     "fig10": latency.fig10_time_breakdown,  # select/prune/attend split
     "tabE": latency.tabE_offload,  # offloading scenario
     "mixed": latency.serve_mixed_workload,  # continuous vs wave batching
+    "shared_prefix": latency.serve_shared_prefix_workload,  # COW prefix cache
     "alg1": latency.alg1_topp_microbench,  # top-p binary search wall-clock
     "kernels": latency.kernels_interpret_sanity,  # Pallas interpret sanity
 }

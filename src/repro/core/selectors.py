@@ -100,7 +100,10 @@ class SelectionContext(NamedTuple):
     page_meta: PageMeta | None
     accum_scores: jax.Array | None  # (b, hkv, n) running attention mass (H2O)
     length: jax.Array | None  # (b,) valid lengths; None = all valid
-    ds_channels: jax.Array | None  # (hkv, r) label channel indices (DS)
+    # DS label channel indices: (hkv, r) global for contiguous caches, or
+    # per-slot (b, hkv, r) for the paged pool (each request calibrated on
+    # its own prompt).
+    ds_channels: jax.Array | None
     page_table: jax.Array | None = None  # (b, max_pages) i32 physical ids
 
 
@@ -359,10 +362,13 @@ class DoubleSparsitySelector:
         b, n, hkv, d = keys.shape
         hq = q.shape[1]
         group = hq // hkv
-        # Gather label channels.
-        k_lab = jnp.take_along_axis(keys, ch[None, None, :, :], axis=-1)  # (b,n,hkv,r)
+        # Gather label channels.  Channels are global (hkv, r) for the
+        # contiguous cache, per-slot (b, hkv, r) for the paged pool (each
+        # request calibrated on its own prompt).
+        ch_b = ch if ch.ndim == 3 else ch[None]  # (b|1, hkv, r)
+        k_lab = jnp.take_along_axis(keys, ch_b[:, None, :, :], axis=-1)  # (b,n,hkv,r)
         qg = q.reshape(b, hkv, group, d)
-        q_lab = jnp.take_along_axis(qg, ch[None, :, None, :], axis=-1)  # (b,hkv,g,r)
+        q_lab = jnp.take_along_axis(qg, ch_b[:, :, None, :], axis=-1)  # (b,hkv,g,r)
         scores = jnp.einsum("bhgr,bnhr->bhgn", q_lab, k_lab.astype(q.dtype))
         # Group-max ranking keeps the per-KV-head candidate count at
         # exactly the budget (group-wise budgets, Appendix B.2).

@@ -6,8 +6,12 @@
 ``--paged`` switches to the continuous-batching engine over the shared page
 pool; ``--mixed`` generates a ragged workload (varied prompt lengths and
 per-request max_new_tokens) — the regime where continuous batching beats
-wave batching.  ``--compare`` runs both schedulers on the same workload and
-reports both tok/s figures.
+wave batching.  ``--prefix-share`` additionally turns on copy-on-write
+prefix caching with chunked prefill (attention-only stacks), and
+``--shared-prefix-len N`` makes every request open with the same N-token
+prefix — the regime where sharing pays.  ``--compare`` runs both
+schedulers on the same workload and reports both tok/s figures (with
+``--prefix-share``: share-on vs share-off paged engines).
 """
 
 from __future__ import annotations
@@ -23,6 +27,9 @@ from repro.serving import DecodeEngine, Request
 
 def _build_requests(cfg, args, rng) -> list[Request]:
     reqs = []
+    shared = (rng.integers(8, cfg.vocab_size, args.shared_prefix_len
+                           ).astype(np.int32)
+              if args.shared_prefix_len else None)
     for uid in range(args.requests):
         extras = {}
         if cfg.frontend == "audio":
@@ -38,31 +45,42 @@ def _build_requests(cfg, args, rng) -> list[Request]:
                                        args.max_new + 1))
         else:
             prompt_len, max_new = args.prompt_len, args.max_new
+        prompt = rng.integers(8, cfg.vocab_size, prompt_len).astype(np.int32)
+        if shared is not None:
+            prompt = np.concatenate([shared, prompt])
         reqs.append(Request(
             uid=uid,
-            prompt=rng.integers(8, cfg.vocab_size, prompt_len
-                                ).astype(np.int32),
+            prompt=prompt,
             max_new_tokens=max_new,
             extras=extras or None,
         ))
     return reqs
 
 
-def _run(cfg, args, reqs, *, paged: bool, params=None) -> float:
+def _run(cfg, args, reqs, *, paged: bool, prefix_share: bool = False,
+         params=None) -> float:
     engine = DecodeEngine(cfg, params=params, batch_size=args.batch,
                           cache_capacity=args.capacity, seed=args.seed,
-                          paged=paged, num_pages=args.pages)
+                          paged=paged, num_pages=args.pages,
+                          prefix_share=prefix_share)
     t0 = time.time()
     results = engine.generate(reqs)
     wall = time.time() - t0
     total_tokens = sum(r.decode_steps for r in results)
     budgets = [r.mean_pruned_budget for r in results]
-    mode = "continuous/paged" if paged else "wave/contiguous"
+    mode = ("continuous/paged+prefix-share" if prefix_share
+            else "continuous/paged" if paged else "wave/contiguous")
     print(f"[serve] {cfg.name} ({mode}): {len(results)} requests, "
           f"{total_tokens} tokens in {wall:.1f}s "
           f"({total_tokens / wall:.1f} tok/s CPU-interpret)")
     print(f"[serve] mean Twilight pruned budget: {np.mean(budgets):.1f} "
           f"tokens (capacity {args.capacity})")
+    if prefix_share:
+        print(f"[serve] prefix cache: {engine.last_prefix_hits} hits, "
+              f"{engine.last_prefix_tokens} prompt tokens reused, "
+              f"{engine.last_cow_copies} COW copies, "
+              f"{engine.last_evictions} evictions, "
+              f"{engine.last_prefill_chunks} prefill chunks")
     return total_tokens / wall
 
 
@@ -81,8 +99,14 @@ def main() -> None:
                     help="page-pool size (default: worst case + null page)")
     ap.add_argument("--mixed", action="store_true",
                     help="ragged workload: varied prompt/max-new per request")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="COW prefix caching + chunked prefill "
+                         "(implies --paged; attention-only stacks)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="prepend the same N-token prefix to every request")
     ap.add_argument("--compare", action="store_true",
-                    help="run both schedulers on the same workload")
+                    help="run both schedulers on the same workload "
+                         "(with --prefix-share: share-on vs share-off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -94,11 +118,19 @@ def main() -> None:
         from repro.models import init_params
         import jax
         params = init_params(cfg, jax.random.PRNGKey(args.seed))
-        wave = _run(cfg, args, reqs, paged=False, params=params)
-        cont = _run(cfg, args, reqs, paged=True, params=params)
-        print(f"[serve] continuous vs wave: {cont / wave:.2f}x tok/s")
+        if args.prefix_share:
+            base = _run(cfg, args, reqs, paged=True, params=params)
+            shared = _run(cfg, args, reqs, paged=True, prefix_share=True,
+                          params=params)
+            print(f"[serve] prefix-share vs paged: "
+                  f"{shared / base:.2f}x tok/s")
+        else:
+            wave = _run(cfg, args, reqs, paged=False, params=params)
+            cont = _run(cfg, args, reqs, paged=True, params=params)
+            print(f"[serve] continuous vs wave: {cont / wave:.2f}x tok/s")
     else:
-        _run(cfg, args, reqs, paged=args.paged)
+        _run(cfg, args, reqs, paged=args.paged or args.prefix_share,
+             prefix_share=args.prefix_share)
 
 
 if __name__ == "__main__":

@@ -23,8 +23,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import (
     decode_step,
+    decode_step_paged,
     forward,
     init_decode_state,
+    init_paged_decode_state,
     init_params,
     prefill,
 )
@@ -34,6 +36,7 @@ from repro.sharding import (
     MeshAxes,
     batch_specs,
     decode_state_specs,
+    paged_decode_state_specs,
     param_specs,
 )
 from repro.sharding.act import activation_rules
@@ -55,6 +58,12 @@ INPUT_SHAPES = {
     "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
     "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
     "long_500k": InputShape("long_500k", "decode", 524288, 1),
+    # Continuous-batching serving shape: decode_step_paged over the shared
+    # page pool (seq_len = per-slot capacity; the pool itself is sized by
+    # paged_pool_pages and sharded over `model`, see
+    # sharding.rules.paged_decode_state_specs for the page-id remap).
+    "decode_paged_32k": InputShape("decode_paged_32k", "decode_paged",
+                                   32768, 128),
 }
 
 # Fixed encoder memory length for the enc-dec arch in decode shapes (the
@@ -92,6 +101,22 @@ def decode_state_struct(cfg: ModelConfig, shape: InputShape) -> Tree:
     return jax.eval_shape(functools.partial(
         init_decode_state, cfg, shape.global_batch, shape.seq_len,
         n_enc=n_enc))
+
+
+def paged_pool_pages(cfg: ModelConfig, shape: InputShape) -> int:
+    """Pool size for the paged serving shape: worst case (every slot at its
+    per-slot capacity) + the null page, rounded up to 512 so the pool's
+    page dim divides evenly over any production `model` axis size."""
+    max_pages = shape.seq_len // cfg.twilight.page_size
+    want = 1 + shape.global_batch * max_pages
+    return -(-want // 512) * 512
+
+
+def paged_decode_state_struct(cfg: ModelConfig, shape: InputShape) -> Tree:
+    n_enc = ENC_MEMORY_LEN if cfg.encoder_layers else 0
+    return jax.eval_shape(functools.partial(
+        init_paged_decode_state, cfg, shape.global_batch,
+        paged_pool_pages(cfg, shape), n_enc=n_enc))
 
 
 @dataclasses.dataclass
@@ -235,6 +260,42 @@ def build_step_plan(cfg: ModelConfig, shape: InputShape,
             arg_structs=(p_struct, b_struct),
             in_shardings=(tree_ns(p_specs), tree_ns(b_specs)),
             out_shardings=(ns(logits_sp), tree_ns(st_specs)),
+        )
+
+    if shape.kind == "decode_paged":
+        # Continuous-batching decode over the shared page pool: the pool
+        # shards over `model` (whole pages per shard, see
+        # paged_decode_state_specs); page tables / lengths / live masks are
+        # small per-slot data sharded over the batch axes.
+        bsz = shape.global_batch
+        max_pages = shape.seq_len // cfg.twilight.page_size
+        num_pages = paged_pool_pages(cfg, shape)
+        st_struct = paged_decode_state_struct(cfg, shape)
+        st_specs = paged_decode_state_specs(st_struct, cfg, mesh,
+                                            batch=bsz, num_pages=num_pages)
+        b_ax = (axes.batch
+                if bsz % _axes_size(axes.batch, mesh) == 0 and bsz > 1
+                else None)
+        logits_sp = P(b_ax,
+                      "model" if cfg.padded_vocab % mesh.shape["model"] == 0
+                      else None)
+
+        def fn(params, state, token, pt, lengths, live):
+            return decode_step_paged(params, cfg, state, token, pt,
+                                     lengths, live)
+
+        return StepPlan(
+            fn=_with_rules(fn, rules),
+            arg_structs=(p_struct, st_struct,
+                         _struct((bsz,), jnp.int32),
+                         _struct((bsz, max_pages), jnp.int32),
+                         _struct((bsz,), jnp.int32),
+                         _struct((bsz,), jnp.bool_)),
+            in_shardings=(tree_ns(p_specs), tree_ns(st_specs), ns(P(b_ax)),
+                          ns(P(b_ax, None)), ns(P(b_ax)), ns(P(b_ax))),
+            out_shardings=(ns(logits_sp), tree_ns(st_specs),
+                           tree_ns({"pruned_budget": P(b_ax)})),
+            donate_argnums=(1,),
         )
 
     # decode

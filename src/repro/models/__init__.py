@@ -21,6 +21,7 @@ from repro.models.common import (
     block_pattern,
 )
 from repro.models.model import (
+    copy_page,
     count_params,
     decode_step,
     decode_step_paged,
@@ -29,6 +30,8 @@ from repro.models.model import (
     init_paged_decode_state,
     init_params,
     prefill,
+    prefill_chunk,
+    supports_chunked_prefill,
     write_prefill_slot,
 )
 
@@ -39,6 +42,7 @@ __all__ = [
     "SSMConfig",
     "XLSTMConfig",
     "block_pattern",
+    "copy_page",
     "count_params",
     "decode_step",
     "decode_step_paged",
@@ -47,5 +51,7 @@ __all__ = [
     "init_paged_decode_state",
     "init_params",
     "prefill",
+    "prefill_chunk",
+    "supports_chunked_prefill",
     "write_prefill_slot",
 ]

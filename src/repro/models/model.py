@@ -575,8 +575,13 @@ def prefill(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array],
 _NULL_PAGE = 0
 
 
-def _attn_pool_init(cfg: ModelConfig, num_pages: int) -> Params:
-    """Shared K/V (+Twilight shadow) pool for one attention layer."""
+def _attn_pool_init(cfg: ModelConfig, batch: int, num_pages: int) -> Params:
+    """Shared K/V (+Twilight shadow) pool for one attention layer.
+
+    ``ds_channels`` is per-*slot* (batch, hkv, r): each request's
+    Double-Sparsity label channels are calibrated on its own prompt, so
+    admitting one request never perturbs another slot's selection (the
+    contiguous cache keeps a single set — wave mates share a prefill)."""
     dtype = jnp.dtype(cfg.dtype)
     hkv, dh = cfg.n_kv_heads, cfg.d_head
     tw = cfg.twilight
@@ -591,7 +596,7 @@ def _attn_pool_init(cfg: ModelConfig, num_pages: int) -> Params:
         pool["qk_zero"] = jnp.zeros((rows, hkv, 1), jnp.float32)
         pool["pmax"] = jnp.zeros((num_pages, hkv, dh), dtype)
         pool["pmin"] = jnp.zeros((num_pages, hkv, dh), dtype)
-        pool["ds_channels"] = jnp.zeros((hkv, 16), jnp.int32)
+        pool["ds_channels"] = jnp.zeros((batch, hkv, 16), jnp.int32)
     return pool
 
 
@@ -612,7 +617,7 @@ def init_paged_decode_state(cfg: ModelConfig, batch: int, num_pages: int,
     blocks = []
     for spec in specs:
         if spec.kind == "attn":
-            st = _attn_pool_init(cfg, num_pages)
+            st = _attn_pool_init(cfg, batch, num_pages)
         else:
             st = _mixer_state_init(cfg, spec.kind, batch, 0)
         if spec.has_cross and spec.kind == "attn":
@@ -633,10 +638,9 @@ def write_prefill_slot(cfg: ModelConfig, state: Params, pstate: Params,
     ``n_max = len(page_ids) * page_size`` (a whole number of pages; rows
     beyond the true prompt length are zeros and stay invalid until decode
     overwrites them).  Attention K/V/INT4 rows and Quest page stats land in
-    the physical pages ``page_ids``; recurrent mixer states and cross-attn
-    caches land in per-slot row ``slot``.  ``ds_channels`` (calibrated on
-    this prompt) is layer-global and simply replaced — the Double-Sparsity
-    label set is whole-pool calibration state, not per-slot.
+    the physical pages ``page_ids``; recurrent mixer states, cross-attn
+    caches, and the Double-Sparsity label channels (calibrated on this
+    prompt) land in per-slot row ``slot``.
     """
     specs, _ = layer_schedule(cfg)
     ps = cfg.twilight.page_size
@@ -660,7 +664,8 @@ def write_prefill_slot(cfg: ModelConfig, state: Params, pstate: Params,
                     new[name] = new[name].at[:, page_ids].set(
                         src[name][:, 0, :n_req])
             if "ds_channels" in pool:
-                new["ds_channels"] = src["ds_channels"]
+                new["ds_channels"] = new["ds_channels"].at[:, slot].set(
+                    src["ds_channels"])
             for name in ("cross_k", "cross_v"):
                 if name in pool:
                     new[name] = new[name].at[:, slot].set(src[name][:, 0])
@@ -669,6 +674,205 @@ def write_prefill_slot(cfg: ModelConfig, state: Params, pstate: Params,
                 lambda dst, s: dst.at[:, slot].set(s[:, 0]), pool, src)
         new_blocks.append(new)
     return {"blocks": new_blocks}
+
+
+def copy_page(cfg: ModelConfig, state: Params, src_page: jax.Array,
+              dst_page: jax.Array) -> Params:
+    """Device-side page duplication — the copy half of copy-on-write.
+
+    Copies one physical page's token rows (K/V + INT4 shadow) and its
+    Quest min/max metadata from ``src_page`` to ``dst_page`` in every
+    attention layer's pool.  Page ids are traced scalars, so the engine
+    jits this once and reuses it for every COW append.
+    """
+    specs, _ = layer_schedule(cfg)
+    ps = cfg.twilight.page_size
+    new_blocks = []
+    for spec, pool in zip(specs, state["blocks"]):
+        if spec.kind != "attn":
+            new_blocks.append(pool)
+            continue
+        new = dict(pool)
+        for name in ("k", "v", "qk_packed", "qk_scale", "qk_zero"):
+            if name in pool:
+                rows = jax.lax.dynamic_slice_in_dim(
+                    pool[name], src_page * ps, ps, axis=1)
+                new[name] = jax.lax.dynamic_update_slice_in_dim(
+                    pool[name], rows, dst_page * ps, axis=1)
+        for name in ("pmax", "pmin"):
+            if name in pool:
+                row = jax.lax.dynamic_slice_in_dim(
+                    pool[name], src_page, 1, axis=1)
+                new[name] = jax.lax.dynamic_update_slice_in_dim(
+                    pool[name], row, dst_page, axis=1)
+        new_blocks.append(new)
+    return {"blocks": new_blocks}
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked paged prefill (and thus prefix sharing) is attention-only.
+
+    Recurrent mixers (mamba/xLSTM) carry prefix-dependent state — reusing
+    cached pages would skip exactly the tokens that state needs, and a
+    fixed-size chunk cannot be right-padded without corrupting the scan —
+    so hybrid/SSM stacks keep the exact-length prefill path.  Cross-attn /
+    modality frontends are excluded for the same reason (encoder memory and
+    prefix embeddings are whole-prompt artifacts).
+    """
+    specs, _ = layer_schedule(cfg)
+    tw = cfg.twilight
+    return (all(s.kind == "attn" and not s.has_cross for s in specs)
+            and cfg.encoder_layers == 0 and cfg.frontend == "none"
+            and tw.enabled and tw.compact)
+
+
+def _attn_prefill_chunk(bp: Params, cfg: ModelConfig, h: jax.Array,
+                        cache: Params, page_table: jax.Array,
+                        slot: jax.Array, start: jax.Array,
+                        n_valid: jax.Array, is_last: jax.Array
+                        ) -> tuple[jax.Array, Params]:
+    """One attention layer over one prefill chunk, writing pool pages.
+
+    h: (1, C, d_model) — C is the (static, bucketed) chunk length, a
+    multiple of page_size.  Tokens ``start .. start + n_valid - 1`` are
+    real; the rest is padding whose K/V rows are routed to the null page.
+    Attention gathers the slot's whole logical view through its page
+    table, so the chunk attends to the already-resident prefix (cached or
+    written by earlier chunks) plus itself, causally.
+    """
+    from repro.core.selectors import gather_logical_rows
+
+    _, C, _ = h.shape
+    tw = cfg.twilight
+    ps = tw.page_size
+    max_pages = page_table.shape[0]
+    offs = jnp.arange(C)
+    pos = start + offs
+    q, k, v = ly.attn_qkv(bp, cfg, h, pos)
+    k1, v1 = k[0], v[0]  # (C, hkv, d)
+
+    lpage = pos // ps
+    phys = jnp.take(page_table, jnp.minimum(lpage, max_pages - 1))
+    valid_tok = offs < n_valid
+    row = jnp.where(valid_tok, phys * ps + pos % ps, _NULL_PAGE)
+
+    cache = dict(cache)
+    cache["k"] = cache["k"].at[row].set(k1)
+    cache["v"] = cache["v"].at[row].set(v1)
+
+    if tw.enabled:
+        qt = quant_lib.quantize_int4(k1.astype(jnp.float32))
+        cache["qk_packed"] = cache["qk_packed"].at[row].set(qt.packed)
+        cache["qk_scale"] = cache["qk_scale"].at[row].set(qt.scale)
+        cache["qk_zero"] = cache["qk_zero"].at[row].set(qt.zero)
+        # Quest metadata for every page the chunk touches.  A page whose
+        # first row lies inside the chunk is fresh (overwrite); a page
+        # partially filled before this chunk (COW append) merges with its
+        # existing stats.  Pages with no valid contribution write junk to
+        # the null page — never trusted.
+        neg = jnp.finfo(jnp.float32).min
+        k32 = k1.astype(jnp.float32)
+        for j in range(C // ps + 1):
+            lp = start // ps + j
+            in_page = (lpage == lp) & valid_tok
+            any_c = in_page.any()
+            sel = in_page[:, None, None]
+            kmax_c = jnp.where(sel, k32, neg).max(axis=0)  # (hkv, d)
+            kmin_c = jnp.where(sel, k32, -neg).min(axis=0)
+            phys_p = jnp.where(
+                any_c, jnp.take(page_table, jnp.minimum(lp, max_pages - 1)),
+                _NULL_PAGE)
+            fresh = (lp * ps) >= start
+            old_max = jnp.take(cache["pmax"], phys_p, axis=0
+                               ).astype(jnp.float32)
+            old_min = jnp.take(cache["pmin"], phys_p, axis=0
+                               ).astype(jnp.float32)
+            new_max = jnp.where(fresh, kmax_c, jnp.maximum(old_max, kmax_c))
+            new_min = jnp.where(fresh, kmin_c, jnp.minimum(old_min, kmin_c))
+            cache["pmax"] = cache["pmax"].at[phys_p].set(
+                new_max.astype(cache["pmax"].dtype))
+            cache["pmin"] = cache["pmin"].at[phys_p].set(
+                new_min.astype(cache["pmin"].dtype))
+
+    k_log = gather_logical_rows(cache["k"], page_table[None], ps)
+    v_log = gather_logical_rows(cache["v"], page_table[None], ps)
+    out = mha_attention(q, k_log, v_log, causal=True, q_offset=start)
+    out = out.reshape(1, C, cfg.n_heads * cfg.d_head) @ bp["wo"]
+
+    if tw.enabled and "ds_channels" in cache:
+        # Per-slot Double-Sparsity calibration over the whole resident
+        # prompt (cached prefix + suffix) — equal to the full-prompt
+        # calibration the contiguous prefill computes.  Only the final
+        # chunk's value is ever read (the slot is not live before then),
+        # so earlier chunks skip the O(capacity) reduction entirely.
+        def _calibrate(_):
+            n_cap = max_pages * ps
+            tot = start + n_valid
+            live_rows = (jnp.arange(n_cap) < tot)[:, None, None]
+            stat = jnp.sum(
+                jnp.where(live_rows,
+                          jnp.abs(k_log[0].astype(jnp.float32)), 0.0),
+                axis=0) / tot.astype(jnp.float32)
+            return jax.lax.top_k(stat, 16)[1].astype(jnp.int32)
+
+        old_row = jnp.take(cache["ds_channels"], slot, axis=0)
+        new_row = jax.lax.cond(is_last, _calibrate, lambda _: old_row, None)
+        cache["ds_channels"] = cache["ds_channels"].at[slot].set(new_row)
+    return out.astype(h.dtype), cache
+
+
+def prefill_chunk(params: Params, cfg: ModelConfig, state: Params,
+                  tokens: jax.Array, page_table: jax.Array, slot: jax.Array,
+                  start: jax.Array, n_valid: jax.Array,
+                  is_last: jax.Array | bool = True
+                  ) -> tuple[jax.Array, Params]:
+    """Prefill one fixed-size chunk of one slot's prompt into pool pages.
+
+    tokens: (C,) i32 (C static, a multiple of page_size — the engine
+    buckets ragged tails to a handful of sizes, so the jit cache holds a
+    few signatures instead of one per exact prompt length); page_table:
+    (max_pages,) i32 physical pages for this slot (pages covering
+    ``start .. start + n_valid`` must already be allocated); slot: ()
+    engine slot (for per-slot calibration state); start/n_valid: () i32;
+    is_last: () bool — the prompt's final chunk (runs the per-slot
+    Double-Sparsity calibration, skipped as dead work on earlier chunks).
+    Returns (logits (1, C, padded_vocab), state).  Attention-only stacks
+    only — see :func:`supports_chunked_prefill`.
+    """
+    specs, repeats = layer_schedule(cfg)
+    if not supports_chunked_prefill(cfg):
+        raise ValueError(f"{cfg.name}: chunked paged prefill requires an "
+                         "attention-only stack (no recurrent mixers, "
+                         "cross-attention, or modality frontend)")
+    x = jnp.take(params["embed"], tokens, axis=0)[None]  # (1, C, d)
+
+    def period_body(x, xs_slice):
+        bp_slice, st_slice = xs_slice
+        new_states = []
+        for p_idx, spec in enumerate(specs):
+            bp, st = bp_slice[p_idx], st_slice[p_idx]
+            h = ly.rms_norm(x, bp["norm1"], cfg.norm_eps)
+            mix, st = _attn_prefill_chunk(bp["mixer"], cfg, h, st,
+                                          page_table, slot, start, n_valid,
+                                          jnp.asarray(is_last))
+            x = x + mix
+            if "ffn" in bp:
+                h2 = ly.rms_norm(x, bp["norm2"], cfg.norm_eps)
+                if spec.is_moe:
+                    y, _ = ly.moe_apply(bp["ffn"], cfg, h2)
+                else:
+                    y = ly.mlp_apply(bp["ffn"], h2)
+                x = x + y
+            new_states.append(st)
+        return x, new_states
+
+    x, new_blocks = jax.lax.scan(period_body, x,
+                                 (params["blocks"], state["blocks"]),
+                                 length=repeats)
+    x = ly.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, {"blocks": new_blocks}
 
 
 def _selection_ctx_paged(cfg: ModelConfig, cache: Params,

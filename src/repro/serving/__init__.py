@@ -1,6 +1,7 @@
 from repro.serving.engine import DecodeEngine, GenerationResult, Request
 from repro.serving.paged_cache import NULL_PAGE, PageAllocator
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampler import sample_token, top_p_sample
 
 __all__ = ["DecodeEngine", "GenerationResult", "NULL_PAGE", "PageAllocator",
-           "Request", "sample_token", "top_p_sample"]
+           "PrefixCache", "Request", "sample_token", "top_p_sample"]

@@ -1,34 +1,54 @@
 """Serving engine: wave-batched (contiguous) and continuous (paged) decode.
 
-Two scheduling modes around the same model:
+Three scheduling modes around the same model:
 
 * ``paged=False`` — the legacy wave scheduler: fixed batch slots, every
   request in a wave decodes for the wave's ``max(max_new_tokens)`` against a
   per-slot contiguous cache of ``cache_capacity`` tokens.  Kept as the
   equivalence oracle (same role as ``TwilightConfig.compact=False``).
+  Waves are formed so that each request keeps ``cache_capacity -
+  max_new_tokens`` of its *own* prompt — a long-prompt/short-generation
+  request is no longer truncated by a wave mate's generation budget.
 * ``paged=True`` — **true continuous batching** over a shared page pool
   (``repro.serving.paged_cache``): slots retire and admit new requests at
   every decode step; each request owns only the KV pages its tokens fill
   (prefill allocates ceil(len/page_size), decode allocates one page per
-  boundary crossing, retirement frees them).  Per-request
+  boundary crossing, retirement drops references).  Per-request
   ``max_new_tokens``, ragged prompt lengths, and per-slot sampling modes
   are all data; the jitted step is compiled once per
   (batch, num_pages, max_pages) and reused.
+* ``paged=True, prefix_share=True`` — continuous batching plus **prefix
+  sharing with copy-on-write pages and chunked prefill** (attention-only
+  stacks, :func:`repro.models.supports_chunked_prefill`).  On admission the
+  engine matches the longest page-aligned cached prefix in a radix tree
+  (``repro.serving.prefix_cache``), takes shared references on those pages,
+  and prefills only the suffix — in fixed-size chunks *interleaved with
+  decode steps*, so a long admission never stalls live decodes for more
+  than one chunk.  Chunk lengths are bucketed (powers of two in pages), so
+  the prefill jit cache holds a handful of signatures instead of one per
+  exact prompt length.  A fully-cached prompt re-runs only its last token
+  for logits; that write lands in a shared page and triggers copy-on-write
+  (``PageAllocator.cow`` + the device-side ``models.copy_page``).
+  Completed prompts are indexed back into the tree; pool pressure first
+  evicts cold refcount-1 tree pages (LRU) and only then preempts.
 
-The decode loop stays async in both modes: sampling runs inside the jitted
+The decode loop stays async in all modes: sampling runs inside the jitted
 step, per-step token/budget frames stay on device, and the host fetches
 them ONCE after the queue drains.  Host-side work per step is pure
 bookkeeping (page allocation, admission, retirement) on numpy mirrors of
-the page table — never a device sync.
+the page table — never a device sync (the one exception: the prefix-share
+admission samples the first token from the prefill-chunk logits, exactly
+as the unshared path samples from its prefill logits).
 
 When the pool runs dry mid-decode the engine preempts the most recently
-admitted victim by *restart*: its pages are freed and the request is
-requeued at the front, to be re-served from its prompt.  For greedy
-requests the regenerated tokens are identical (asserted in
-``tests/test_paged_cache.py``); sampled requests draw a fresh
-continuation.  (True vLLM-style recompute — one prefill over
-prompt+generated — would need the victim's device-side token frames
-synced to the host mid-loop; left as a follow-up.)  Admission keeps one
+admitted victim by *restart*: its page references are dropped and the
+request is requeued at the front, to be re-served from its prompt (with
+prefix sharing the restart typically re-matches its own pages, making
+preemption cheap).  Reference counting makes preemption safe by
+construction: dropping the victim's references never reclaims a page the
+prefix cache or another live reader still holds.  For greedy requests the
+regenerated tokens are identical (asserted in ``tests/test_paged_cache.py``);
+sampled requests draw a fresh continuation.  Admission keeps one
 boundary-page of headroom per live slot to make preemption rare.
 """
 
@@ -44,15 +64,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import (
+    copy_page,
     decode_step,
     decode_step_paged,
     init_paged_decode_state,
     init_params,
     prefill,
+    prefill_chunk,
+    supports_chunked_prefill,
     write_prefill_slot,
 )
 from repro.models.common import ModelConfig
 from repro.serving.paged_cache import PageAllocator, pad_to_pages, pages_for
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampler import sample_token
 
 Tree = Any
@@ -84,11 +108,20 @@ class _SlotRun:
     req: Request
     slot: int
     pages: list[int]
-    tok0: jax.Array  # () device scalar — sampled from the prefill logits
-    start_frame: int  # first decode frame this slot participates in
-    emitted: int  # tokens sampled so far (tok0 included)
     t_admit: float
     order: int  # admission sequence number (preemption picks the newest)
+    tok0: jax.Array | None = None  # () device scalar — sampled at prefill end
+    start_frame: int = 0  # first decode frame this slot participates in
+    emitted: int = 0  # tokens sampled so far (tok0 included)
+    # Chunked-prefill progress (prefix-share mode only).
+    prompt: np.ndarray | None = None  # truncated prompt (tree key)
+    matched: int = 0  # tokens reused from the prefix cache
+    sfx_done: int = 0  # suffix tokens written so far
+    ready: bool = True  # prefill complete — slot decodes
+
+    @property
+    def suffix_len(self) -> int:
+        return 0 if self.prompt is None else len(self.prompt) - self.matched
 
 
 class DecodeEngine:
@@ -96,7 +129,9 @@ class DecodeEngine:
 
     def __init__(self, cfg: ModelConfig, params: Tree | None = None, *,
                  batch_size: int = 8, cache_capacity: int = 512, seed: int = 0,
-                 paged: bool = False, num_pages: int | None = None):
+                 paged: bool = False, num_pages: int | None = None,
+                 prefix_share: bool = False,
+                 prefill_chunk_pages: int = 4):
         tw = cfg.twilight
         if tw.enabled and tw.compact and tw.pruned_cap_frac is None:
             # Serving default: B1-scaled final gather (ROADMAP follow-up).
@@ -108,6 +143,7 @@ class DecodeEngine:
         self.batch_size = batch_size
         self.cache_capacity = cache_capacity
         self.paged = paged
+        self.prefix_share = prefix_share
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else init_params(cfg, key)
         self._sample_key = jax.random.PRNGKey(seed + 1)
@@ -116,6 +152,8 @@ class DecodeEngine:
             lambda p, batch: prefill(p, cfg, batch, cache_capacity))
         self._decode = jax.jit(lambda p, st, tok: decode_step(p, cfg, st, tok))
 
+        if prefix_share and not paged:
+            raise ValueError("prefix_share requires paged=True")
         if paged:
             tw = cfg.twilight
             if not (tw.enabled and tw.compact):
@@ -149,6 +187,23 @@ class DecodeEngine:
 
             self._step = jax.jit(_step_fn, donate_argnums=(1,))
 
+            if prefix_share:
+                if not supports_chunked_prefill(cfg):
+                    raise ValueError(
+                        f"{cfg.name}: prefix sharing requires an "
+                        "attention-only stack — recurrent mixer state is "
+                        "prefix-dependent and must be recomputed "
+                        "(supports_chunked_prefill)")
+                self.chunk_tokens = max(1, prefill_chunk_pages) * ps
+                self._chunk = jax.jit(
+                    lambda p, st, toks, pt, slot, start, nv, last:
+                    prefill_chunk(p, cfg, st, toks, pt, slot, start, nv,
+                                  last),
+                    donate_argnums=(1,))
+                self._copy_page = jax.jit(
+                    lambda st, src, dst: copy_page(cfg, st, src, dst),
+                    donate_argnums=(0,))
+
     # -- dispatch -----------------------------------------------------------
 
     def generate(self, requests: list[Request]) -> list[GenerationResult]:
@@ -158,21 +213,55 @@ class DecodeEngine:
         results: list[GenerationResult] = []
         queue = list(requests)
         while queue:
-            wave = queue[:self.batch_size]
-            queue = queue[self.batch_size:]
+            wave, queue = self._form_wave(queue)
             results.extend(self._serve_wave(wave))
         return results
 
     # -- wave mode (the contiguous-cache oracle) ----------------------------
 
+    def _own_keep(self, req: Request) -> int:
+        """Prompt tokens request may keep under its *own* decode budget."""
+        return max(1, self.cache_capacity - req.max_new_tokens)
+
+    def _form_wave(self, queue: list[Request]
+                   ) -> tuple[list[Request], list[Request]]:
+        """FIFO wave packing under the shared-position constraint.
+
+        Every slot in a wave appends at the same cache position, so the
+        wave must satisfy ``max(kept prompt) + max(max_new) <= capacity``.
+        Clipping each prompt to its own ``capacity - max_new`` budget and
+        closing the wave when a newcomer would violate the bound means a
+        long-prompt/short-generation request is never truncated by a wave
+        mate's generation budget (it previously was — the wave-wide
+        ``max(max_new_tokens)`` clipped every prompt).
+        """
+        wave: list[Request] = []
+        s = wave_max = 0
+        while queue and len(wave) < self.batch_size:
+            r = queue[0]
+            if r.max_new_tokens >= self.cache_capacity:
+                raise ValueError(
+                    f"request {r.uid}: max_new_tokens {r.max_new_tokens} "
+                    f"cannot fit cache_capacity {self.cache_capacity}")
+            ns = max(s, min(len(r.prompt), self._own_keep(r)))
+            nmax = max(wave_max, r.max_new_tokens)
+            if wave and ns + nmax > self.cache_capacity:
+                break
+            wave.append(queue.pop(0))
+            s, wave_max = ns, nmax
+        return wave, queue
+
     def _serve_wave(self, wave: list[Request]) -> list[GenerationResult]:
         t0 = time.time()
         b = len(wave)
-        s = max(len(r.prompt) for r in wave)
-        s = min(s, self.cache_capacity - max(r.max_new_tokens for r in wave))
+        # Each prompt is clipped by its OWN max_new_tokens; _form_wave
+        # guarantees the resulting batch fits the shared cache.
+        clipped = [r.prompt[-self._own_keep(r):] for r in wave]
+        s = max(len(p) for p in clipped)
+        max_new = max(r.max_new_tokens for r in wave)
+        assert s + max_new <= self.cache_capacity, "wave packing invariant"
         toks = np.zeros((b, s), np.int32)
-        for i, r in enumerate(wave):
-            pr = r.prompt[-s:]
+        for i, pr in enumerate(clipped):
             toks[i, -len(pr):] = pr  # left-pad with token 0
         batch = {"tokens": jnp.asarray(toks)}
         if self.cfg.frontend == "audio":
@@ -184,7 +273,6 @@ class DecodeEngine:
 
         logits, state = self._prefill(self.params, batch)
         last = logits[:, -1, :self.cfg.vocab_size]  # drop padded vocab rows
-        max_new = max(r.max_new_tokens for r in wave)
         # Per-slot sampling mode: a greedy and a sampling request can share
         # a wave (previously collapsed to all(r.greedy)).  A uniform wave
         # keeps the Python-bool fast path (argmax only — no wasted
@@ -235,9 +323,37 @@ class DecodeEngine:
         self._sample_key, k = jax.random.split(self._sample_key)
         return sample_token(k, logits_row[None], greedy=greedy)[0]
 
+    def _chunk_bucket(self, n: int) -> int:
+        """Smallest power-of-two multiple of page_size >= n tokens, capped
+        at the configured chunk length — the handful of jit signatures the
+        chunked-prefill path compiles."""
+        ps = self.cfg.twilight.page_size
+        c = ps
+        while c < min(n, self.chunk_tokens):
+            c *= 2
+        return min(c, self.chunk_tokens)
+
+    def _truncate(self, req: Request, prefix: int) -> np.ndarray:
+        """Clip the prompt so prompt + generation fits the cache capacity."""
+        prompt = np.asarray(req.prompt, np.int32)
+        cap = self.cache_capacity - prefix
+        if req.max_new_tokens >= cap:
+            raise ValueError(
+                f"request {req.uid}: max_new_tokens "
+                f"{req.max_new_tokens} cannot fit cache_capacity "
+                f"{self.cache_capacity} (prefix {prefix})")
+        keep = cap - req.max_new_tokens  # >= 1
+        return prompt[-keep:] if len(prompt) > keep else prompt
+
     def _serve_continuous(self, requests: list[Request]
                           ) -> list[GenerationResult]:
-        self.last_preemptions = 0  # telemetry: recompute preemptions
+        # Telemetry, inspected by tests/benchmarks.
+        self.last_preemptions = 0
+        self.last_prefix_hits = 0  # admissions that reused cached pages
+        self.last_prefix_tokens = 0  # prompt tokens served from the cache
+        self.last_cow_copies = 0  # shared pages copied before a write
+        self.last_evictions = 0  # tree pages reclaimed under pressure
+        self.last_prefill_chunks = 0
         if not requests:
             return []
         cfg = self.cfg
@@ -251,6 +367,7 @@ class DecodeEngine:
                 raise ValueError("audio requests must share a frame length")
 
         alloc = PageAllocator(self.num_pages)
+        tree = PrefixCache(ps, alloc) if self.prefix_share else None
         state = init_paged_decode_state(cfg, b, self.num_pages, n_enc=n_enc)
         pt = np.zeros((b, self.max_pages), np.int32)
         lengths = np.zeros((b,), np.int32)
@@ -264,19 +381,39 @@ class DecodeEngine:
         done: list[tuple[_SlotRun, float]] = []  # (run, retire time)
         order = 0
 
+        def reclaim(want: int) -> None:
+            """Pool pressure: evict cold prefix-cache pages before anything
+            drastic.  No-op when sharing is off or the tree has no
+            refcount-1 pages."""
+            if tree is not None and want > 0:
+                self.last_evictions += tree.evict(want)
+
+        def go_live(run: _SlotRun, s_total: int) -> None:
+            nonlocal cur_tok
+            slot = run.slot
+            run.ready = True
+            run.emitted = 1
+            run.start_frame = len(tok_frames)
+            if tree is not None and run.prompt is not None:
+                tree.insert(run.prompt, run.pages[:len(run.prompt) // ps])
+            if run.req.max_new_tokens <= 1:
+                alloc.free(run.pages)
+                slots[slot] = None
+                pt[slot] = 0
+                done.append((run, time.time()))
+                return
+            lengths[slot] = s_total
+            live[slot] = True
+            greedy[slot] = run.req.greedy
+            cur_tok = cur_tok.at[slot].set(run.tok0)
+
         def admit(slot: int) -> bool:
-            nonlocal state, cur_tok, order
+            """Unshared admission: one-shot contiguous prefill scattered
+            into freshly-allocated pages (the token-exactness oracle for
+            the prefix-share path)."""
+            nonlocal state, order
             req = pending[0]
-            prompt = np.asarray(req.prompt, np.int32)
-            cap = self.cache_capacity - prefix
-            if req.max_new_tokens >= cap:
-                raise ValueError(
-                    f"request {req.uid}: max_new_tokens "
-                    f"{req.max_new_tokens} cannot fit cache_capacity "
-                    f"{self.cache_capacity} (prefix {prefix})")
-            keep = cap - req.max_new_tokens  # >= 1
-            if len(prompt) > keep:
-                prompt = prompt[-keep:]
+            prompt = self._truncate(req, prefix)
             s_total = len(prompt) + prefix
             worst = pages_for(s_total + req.max_new_tokens, ps)
             if worst > alloc.capacity:
@@ -300,20 +437,72 @@ class DecodeEngine:
             tok0 = self._sample_one(logits[0, s_total - 1, :cfg.vocab_size],
                                     req.greedy)
             run = _SlotRun(req=req, slot=slot, pages=pages, tok0=tok0,
-                           start_frame=len(tok_frames), emitted=1,
                            t_admit=time.time(), order=order)
             order += 1
-            if req.max_new_tokens <= 1:
-                alloc.free(pages)
-                done.append((run, time.time()))
-                return True
             slots[slot] = run
             pt[slot, :n_req] = pages
             pt[slot, n_req:] = 0
-            lengths[slot] = s_total
-            live[slot] = True
-            greedy[slot] = req.greedy
-            cur_tok = cur_tok.at[slot].set(tok0)
+            go_live(run, s_total)
+            return True
+
+        def admit_shared(slot: int, use_cache: bool = True) -> bool:
+            """Prefix-share admission: match the longest page-aligned
+            cached prefix, take shared references, and stage the suffix for
+            chunked prefill.  A fully-cached prompt keeps its last token as
+            the suffix (its logits seed sampling); that token's write hits
+            a shared page, which is exactly the copy-on-write append."""
+            nonlocal state, order
+            req = pending[0]
+            prompt = self._truncate(req, prefix)
+            s_total = len(prompt)
+            worst = pages_for(s_total + req.max_new_tokens, ps)
+            if worst > alloc.capacity:
+                raise ValueError(
+                    f"request {req.uid} needs {worst} pages; pool has "
+                    f"{alloc.capacity} — raise num_pages")
+            pages_m, matched = (tree.match(prompt) if use_cache
+                                else ([], 0))
+            cow = False
+            if matched == s_total:
+                matched -= 1  # re-run the last token for its logits
+                cow = True
+            n_new = pages_for(s_total, ps) - len(pages_m) + (1 if cow else 0)
+            live_count = sum(1 for r in slots if r is not None)
+            need = (worst - len(pages_m) + (1 if cow else 0)
+                    if live_count == 0 else n_new + live_count)
+            if alloc.available < need:
+                reclaim(need - alloc.available)
+            if alloc.available < need:
+                if pages_m:
+                    alloc.free(pages_m)
+                if live_count == 0 and use_cache:
+                    # Alone and still short: the match itself may pin the
+                    # pool (e.g. worst == capacity and the COW page cannot
+                    # fit).  Retry cold — eviction can then reclaim
+                    # everything, and worst <= capacity guarantees admission.
+                    return admit_shared(slot, use_cache=False)
+                return False
+            pending.popleft()
+            if matched:
+                self.last_prefix_hits += 1
+                self.last_prefix_tokens += matched
+            if cow:
+                src = pages_m[-1]
+                new, copied = alloc.cow(src)
+                if copied:
+                    state = self._copy_page(state, jnp.int32(src),
+                                            jnp.int32(new))
+                    self.last_cow_copies += 1
+                pages_m = pages_m[:-1] + [new]
+            run = _SlotRun(req=req, slot=slot, pages=list(pages_m),
+                           t_admit=time.time(), order=order, prompt=prompt,
+                           matched=matched, ready=False)
+            order += 1
+            slots[slot] = run
+            pt[slot, :len(run.pages)] = run.pages
+            pt[slot, len(run.pages):] = 0
+            lengths[slot] = 0
+            live[slot] = False
             return True
 
         def retire(slot: int, preempted: bool = False) -> None:
@@ -323,6 +512,11 @@ class DecodeEngine:
             live[slot] = False
             pt[slot] = 0
             lengths[slot] = 0
+            # Reset the sampling mode so a freed slot doesn't carry its
+            # previous occupant's mode into the jitted step before
+            # re-admission (greedy is the junk-safe default: no stray
+            # top-p draw for a dead slot).
+            greedy[slot] = True
             if preempted:
                 pending.appendleft(run.req)
             else:
@@ -336,30 +530,85 @@ class DecodeEngine:
             self.last_preemptions += 1
             retire(victim, preempted=True)
 
-        while pending or any(live):
+        def ensure_pages(need: int, needy: int) -> bool:
+            """Make ``need`` pages available for slot ``needy``: evict cold
+            tree pages first, then preempt newest-first — re-trying
+            eviction after every preemption, since retiring a victim whose
+            pages are tree-shared frees nothing directly but exposes those
+            pages for reclaim.  Returns False if ``needy`` itself was
+            preempted (last resort)."""
+            if alloc.available < need:
+                reclaim(need - alloc.available)
+            while alloc.available < need:
+                preempt_for_page(needy)
+                if alloc.available < need:
+                    reclaim(need - alloc.available)
+                if slots[needy] is None:
+                    return False
+            return True
+
+        def advance_prefill(run: _SlotRun) -> None:
+            """Write one (bucketed) chunk of ``run``'s suffix into pool
+            pages; completing the suffix samples tok0 and flips the slot
+            live."""
+            nonlocal state
+            slot = run.slot
+            start = run.matched + run.sfx_done
+            remaining = run.suffix_len - run.sfx_done
+            n_valid = min(remaining, self.chunk_tokens)
+            c = self._chunk_bucket(n_valid)  # >= n_valid by construction
+            need = pages_for(start + n_valid, ps) - len(run.pages)
+            if need > 0:
+                if not ensure_pages(need, slot) or slots[slot] is not run:
+                    return  # self-preempted
+                new_pages = alloc.alloc(need)
+                pt[slot, len(run.pages):len(run.pages) + need] = new_pages
+                run.pages.extend(new_pages)
+            toks = np.zeros((c,), np.int32)
+            toks[:n_valid] = run.prompt[start:start + n_valid]
+            is_last = run.sfx_done + n_valid >= run.suffix_len
+            logits, state = self._chunk(
+                self.params, state, jnp.asarray(toks),
+                jnp.asarray(pt[slot]), jnp.int32(slot), jnp.int32(start),
+                jnp.int32(n_valid), jnp.asarray(is_last))
+            self.last_prefill_chunks += 1
+            run.sfx_done += n_valid
+            if run.sfx_done >= run.suffix_len:
+                run.tok0 = self._sample_one(
+                    logits[0, n_valid - 1, :cfg.vocab_size], run.req.greedy)
+                go_live(run, len(run.prompt))
+
+        while pending or any(r is not None for r in slots):
             # Admission: fill every free slot while the queue and pool allow
             # (an instantly-retired max_new=1 request frees its slot again).
             slot = 0
             while pending and slot < b:
                 if slots[slot] is None:
-                    if not admit(slot):
+                    ok = (admit_shared(slot) if self.prefix_share
+                          else admit(slot))
+                    if not ok:
                         break
                     if slots[slot] is None:
                         continue
                 slot += 1
+            # Advance ONE prefilling slot by one chunk, oldest first —
+            # interleaving admission work with decode steps bounds the
+            # decode stall a long admission can cause to one chunk.
+            prefilling = [r for r in slots if r is not None and not r.ready]
+            if prefilling:
+                advance_prefill(min(prefilling, key=lambda r: r.order))
             if not any(live):
-                if pending:
-                    # Nothing live to retire yet the head request stalls:
-                    # only possible transiently after mass preemption; loop.
+                if pending or any(r is not None for r in slots):
+                    # Nothing decodable yet: either prefills are still in
+                    # flight or admission stalls transiently after mass
+                    # preemption; loop.
                     continue
                 break
             # Boundary pages for this step's appends.
             for slot in range(b):
                 if live[slot] and lengths[slot] % ps == 0:
-                    while alloc.available < 1:
-                        preempt_for_page(slot)
-                    if not live[slot]:  # self-preempted (last resort)
-                        continue
+                    if not ensure_pages(1, slot) or not live[slot]:
+                        continue  # self-preempted (last resort)
                     page = alloc.alloc(1)[0]
                     slots[slot].pages.append(page)
                     pt[slot, lengths[slot] // ps] = page

@@ -1,4 +1,4 @@
-"""Paged KV-cache pool: vLLM-style block allocator + pool array helpers.
+"""Paged KV-cache pool: ref-counted block allocator + pool array helpers.
 
 The serving engine provisions ONE shared pool of ``num_pages`` fixed-size
 pages per attention layer instead of a contiguous ``(batch, capacity)``
@@ -7,20 +7,40 @@ cache per slot.  Each request owns only the pages its tokens actually fill
 page boundary), so memory scales with live tokens, not with
 ``batch * worst_case`` — the substrate that makes continuous batching pay.
 
+Pages are **ref-counted** so one physical page can back many readers:
+
+* ``alloc`` hands out pages at refcount 1 (the caller's reference);
+* ``share`` takes an extra reference — the prefix cache
+  (:mod:`repro.serving.prefix_cache`) shares every page it indexes, and a
+  request that matches a cached prefix shares those pages instead of
+  re-prefilling them;
+* ``free`` *decrements*; the page returns to the free list only when the
+  last reference drops.  Retiring a request therefore never yanks a page
+  out from under the prefix cache or another live reader — and preemption
+  is decrement-only, so a victim's shared prefix stays resident.
+* ``cow`` implements copy-on-write: writing to a page with refcount > 1
+  must first ``cow`` it, which allocates a private replacement (the caller
+  copies the device rows with ``models.model.copy_page``) and drops the
+  shared reference.  A page with refcount 1 is returned unchanged — the
+  caller already owns it exclusively.
+
 Layout (per attention layer, see ``models.model._attn_pool_init``):
 
 * ``k``/``v``:            (num_pages * page_size, hkv, d) token rows
 * ``qk_packed/scale/zero``: INT4 shadow cache, same token-row layout
 * ``pmax``/``pmin``:      (num_pages, hkv, d) Quest metadata per *physical*
   page — selectors gather it through the per-slot page table
+* ``ds_channels``:        (batch, hkv, r) per-slot Double-Sparsity label
+  channels, calibrated on each slot's own prompt
 * page table:             (batch, max_pages) i32, engine-managed **host**
   state mirrored to device as plain data each step
 
 Physical page 0 is the **null page**: never allocated, the scatter target
 for dead slots and the safe-gather target for invalid index-buffer slots.
-All allocation bookkeeping is host-side Python (a free list); device state
-never stores pointers, only the page-table array — so the jitted decode
-step stays a pure function of arrays and the allocator needs no tracing.
+All allocation bookkeeping is host-side Python (a free list + a refcount
+map); device state never stores pointers, only the page-table array — so
+the jitted decode step stays a pure function of arrays and the allocator
+needs no tracing.
 """
 
 from __future__ import annotations
@@ -41,15 +61,18 @@ def pad_to_pages(n_tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Free-list allocator over physical page ids ``1..num_pages-1``.
+    """Ref-counted free-list allocator over physical page ids ``1..num_pages-1``.
 
     Page 0 (:data:`NULL_PAGE`) is reserved.  Pages are recycled LIFO so a
     steady-state workload keeps touching the same hot pages.  Invariants
-    (asserted, and exercised by ``tests/test_paged_cache.py``):
+    (asserted, and exercised by ``tests/test_paged_cache.py`` and the
+    property tests in ``tests/test_prefix_cache.py``):
 
-    * a page is never handed out twice without an intervening ``free``
-    * ``free`` of an unallocated (or null) page raises
+    * a page is never handed out twice while any reference is live
+    * ``free`` of an unreferenced (or null) page raises
     * ``available + len(allocated) == num_pages - 1`` at all times
+    * ``share``/``free`` conserve references: a page returns to the free
+      list exactly when its refcount reaches 0
     """
 
     def __init__(self, num_pages: int):
@@ -57,7 +80,7 @@ class PageAllocator:
             raise ValueError("need at least one allocatable page + the null page")
         self.num_pages = num_pages
         self._free: list[int] = list(range(num_pages - 1, NULL_PAGE, -1))
-        self._allocated: set[int] = set()
+        self._ref: dict[int, int] = {}
 
     @property
     def available(self) -> int:
@@ -70,7 +93,11 @@ class PageAllocator:
 
     @property
     def allocated(self) -> frozenset[int]:
-        return frozenset(self._allocated)
+        return frozenset(self._ref)
+
+    def refcount(self, page: int) -> int:
+        """Live references on ``page`` (0 if unallocated)."""
+        return self._ref.get(page, 0)
 
     def alloc(self, n: int) -> list[int]:
         """Pop ``n`` pages off the free list; raises MemoryError if short."""
@@ -80,14 +107,43 @@ class PageAllocator:
             raise MemoryError(
                 f"page pool exhausted: want {n}, have {len(self._free)}")
         pages = [self._free.pop() for _ in range(n)]
-        self._allocated.update(pages)
+        for p in pages:
+            self._ref[p] = 1
         return pages
 
+    def share(self, pages: list[int]) -> None:
+        """Take one extra reference on each page (must be allocated)."""
+        for p in pages:
+            if p not in self._ref:
+                raise ValueError(f"cannot share unallocated page {p}")
+            self._ref[p] += 1
+
     def free(self, pages: list[int]) -> None:
+        """Drop one reference per page; recycle pages that reach 0."""
         for p in pages:
             if p == NULL_PAGE:
                 raise ValueError("cannot free the null page")
-            if p not in self._allocated:
+            if p not in self._ref:
                 raise ValueError(f"double free of page {p}")
-            self._allocated.remove(p)
-            self._free.append(p)
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._free.append(p)
+
+    def cow(self, page: int) -> tuple[int, bool]:
+        """Copy-on-write resolve for a page the caller wants to *write*.
+
+        Returns ``(writable_page, copied)``.  With refcount 1 the caller
+        already owns the page exclusively — returned unchanged, no copy.
+        With refcount > 1 a fresh page is allocated (raises MemoryError if
+        the pool is dry), the caller's reference on the shared page is
+        dropped, and ``copied=True`` signals that the device rows must be
+        duplicated (``models.model.copy_page``) before writing.
+        """
+        if self.refcount(page) < 1:
+            raise ValueError(f"cannot cow unallocated page {page}")
+        if self._ref[page] == 1:
+            return page, False
+        new = self.alloc(1)[0]
+        self.free([page])
+        return new, True

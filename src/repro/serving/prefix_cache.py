@@ -1,0 +1,181 @@
+"""Prefix cache: a radix tree over page-granular token prefixes.
+
+Real serving traffic is dominated by requests that share long system /
+few-shot prefixes.  Because the paged pool keys all Twilight metadata by
+*physical* page, a prefix that is already resident can be reused by any
+number of requests simultaneously: the engine matches the longest cached
+page-aligned prefix, takes a shared reference on those pages
+(:meth:`~repro.serving.paged_cache.PageAllocator.share`), and prefills only
+the suffix.
+
+Structure: one tree level per page.  A node's key is the exact
+``page_size``-token tuple written in its physical page; a path from the
+root spells out a token prefix page by page, so lookup is a dict walk —
+O(pages) with no scanning.  The tree owns one reference per indexed page;
+requests stack their own references on top, and copy-on-write in the
+engine keeps writers from ever mutating a page the tree (or another
+reader) still sees.
+
+Eviction is LRU over *leaf* nodes whose page refcount is exactly 1 (the
+tree's own reference — no live reader).  Interior nodes become evictable
+once their children are gone, so a cold chain drains tail-first;  pages
+with live readers are never reclaimed, which is what makes preemption and
+retirement decrement-only-safe.
+
+Insertion is first-writer-wins: if a node for a page-key already exists
+(two requests raced to prefill the same prefix), the existing physical
+page is kept and the duplicate stays private to its request — refcounts
+make both outcomes safe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from repro.serving.paged_cache import PageAllocator
+
+__all__ = ["PrefixCache"]
+
+
+@dataclasses.dataclass
+class _Node:
+    key: tuple[int, ...]  # the page_size tokens this page holds
+    page: int  # physical page id
+    parent: "_Node | None"
+    children: dict[tuple[int, ...], "_Node"] = dataclasses.field(
+        default_factory=dict)
+    last_used: int = 0  # LRU tick
+
+
+class PrefixCache:
+    """Radix tree mapping page-granular token prefixes to physical pages."""
+
+    def __init__(self, page_size: int, allocator: PageAllocator):
+        self.page_size = page_size
+        self.allocator = allocator
+        self._root: dict[tuple[int, ...], _Node] = {}
+        self._tick = 0
+        self.n_nodes = 0
+
+    # -- lookup -------------------------------------------------------------
+
+    def match(self, tokens: np.ndarray) -> tuple[list[int], int]:
+        """Longest cached page-aligned prefix of ``tokens``.
+
+        Returns ``(pages, n_matched_tokens)`` and takes one shared
+        reference per returned page — the caller owns those references and
+        releases them with ``allocator.free`` (directly, or via request
+        retirement).  Touches every node on the path for LRU.
+        """
+        ps = self.page_size
+        level = self._root
+        pages: list[int] = []
+        self._tick += 1
+        i = 0
+        while i + ps <= len(tokens):
+            node = level.get(tuple(int(t) for t in tokens[i:i + ps]))
+            if node is None:
+                break
+            node.last_used = self._tick
+            pages.append(node.page)
+            i += ps
+            level = node.children
+        if pages:
+            self.allocator.share(pages)
+        return pages, i
+
+    # -- insertion ----------------------------------------------------------
+
+    def insert(self, tokens: np.ndarray, pages: list[int]) -> int:
+        """Index the first ``len(pages)`` full pages of ``tokens``.
+
+        ``pages[j]`` must hold exactly ``tokens[j*ps:(j+1)*ps]`` (the
+        engine inserts a request's prompt pages once its prefill
+        completes).  New nodes take one tree-owned reference on their page;
+        existing nodes are kept untouched (first writer wins).  Returns the
+        number of nodes created.
+        """
+        ps = self.page_size
+        if len(pages) * ps > len(tokens):
+            raise ValueError(
+                f"{len(pages)} pages need {len(pages) * ps} tokens, "
+                f"have {len(tokens)}")
+        level = self._root
+        parent: _Node | None = None
+        created = 0
+        self._tick += 1
+        for j, page in enumerate(pages):
+            key = tuple(int(t) for t in tokens[j * ps:(j + 1) * ps])
+            node = level.get(key)
+            if node is None:
+                self.allocator.share([page])
+                node = _Node(key=key, page=page, parent=parent,
+                             last_used=self._tick)
+                level[key] = node
+                created += 1
+                self.n_nodes += 1
+            else:
+                node.last_used = self._tick
+            level = node.children
+            parent = node
+        return created
+
+    # -- eviction -----------------------------------------------------------
+
+    def _nodes(self) -> Iterator[_Node]:
+        stack = list(self._root.values())
+        while stack:
+            node = stack.pop()
+            yield node
+            stack.extend(node.children.values())
+
+    def reclaimable(self) -> int:
+        """Pages the tree could return to the pool right now: refcount-1
+        nodes whose entire subtree is also refcount-1 (whole cold chains
+        drain tail-first; a live reader anywhere below pins the chain)."""
+
+        def count(node: _Node) -> tuple[int, int]:
+            """(drainable pages, subtree size) in one walk."""
+            below = size = 0
+            for c in node.children.values():
+                d, s = count(c)
+                below += d
+                size += s
+            drainable = (self.allocator.refcount(node.page) == 1
+                         and below == size)
+            return below + (1 if drainable else 0), size + 1
+
+        return sum(count(r)[0] for r in self._root.values())
+
+    def evict(self, want: int) -> int:
+        """Reclaim up to ``want`` pages, LRU leaf first.
+
+        Only leaves whose page refcount is 1 (tree-only — no live reader)
+        are touched.  Each pass collects every evictable leaf and drains
+        them in LRU order; evicting a leaf may expose its parent for the
+        *next* pass (a parent's ``last_used`` is always >= its children's
+        — every match touching a child touched it — so deferring parents
+        preserves LRU order while keeping the walk O(passes * nodes), not
+        O(want * nodes)).  Returns the pages actually returned to the pool.
+        """
+        freed = 0
+        while freed < want:
+            leaves = [n for n in self._nodes()
+                      if not n.children
+                      and self.allocator.refcount(n.page) == 1]
+            if not leaves:
+                break
+            leaves.sort(key=lambda n: n.last_used)
+            for victim in leaves:
+                if freed >= want:
+                    break
+                level = (victim.parent.children if victim.parent is not None
+                         else self._root)
+                del level[victim.key]
+                self.n_nodes -= 1
+                self.allocator.free([victim.page])
+                freed += 1
+        return freed

@@ -4,6 +4,7 @@ from repro.sharding.rules import (
     decode_state_specs,
     logits_spec,
     opt_state_specs,
+    paged_decode_state_specs,
     param_specs,
 )
 
@@ -13,5 +14,6 @@ __all__ = [
     "decode_state_specs",
     "logits_spec",
     "opt_state_specs",
+    "paged_decode_state_specs",
     "param_specs",
 ]

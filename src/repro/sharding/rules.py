@@ -250,3 +250,61 @@ def _page_div(page_cap: int, s_ax, mesh) -> bool:
         if a is not None:
             size *= mesh.shape[a]
     return page_cap % size == 0
+
+
+def paged_decode_state_specs(state: Tree, cfg: ModelConfig, mesh, *,
+                             batch: int, num_pages: int) -> Tree:
+    """PartitionSpec tree for the *paged* decode state (shared page pool).
+
+    The pooled attention caches ``(num_pages * page_size, hkv, d)`` shard
+    their token-row dim over ``model`` — pages must not straddle shards, so
+    the pool is sharded only when ``num_pages`` divides by the tensor size
+    (each shard then holds ``num_pages // t`` whole pages; Quest metadata
+    ``(num_pages, hkv, d)`` shards its page dim identically, keeping a
+    page's rows and its min/max stats on the same chip).
+
+    **Page-id remap**: with ``t`` shards, physical page ``p`` lives on
+    shard ``p // (num_pages // t)`` at *local* page id
+    ``p % (num_pages // t)`` (local row ``local_page * page_size + off``).
+    The engine's page tables carry *global* ids — XLA lowers the pooled
+    gathers/scatters to all-gathers over ``model`` automatically, and a
+    future hand-written kernel must apply exactly this remap (plus a
+    broadcast of the null page 0, which lands on shard 0) to go
+    collective-free.  Per-slot state (recurrent mixers, cross-attn,
+    per-slot ``ds_channels``) shards its batch dim over the fsdp axes, like
+    the contiguous layout.
+    """
+    axes = MeshAxes.for_mesh(mesh)
+    fsdp_size, t_size = axes.sizes(mesh)
+    b_ax = axes.batch if _divisible(batch, fsdp_size) else None
+    pool_ax = axes.tensor if _divisible(num_pages, t_size) else None
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        name = ps.split("/")[-1]
+        shape = leaf.shape
+        stacked = ps.startswith("blocks/")
+        inner = shape[1:] if stacked else shape
+
+        def wrap(*s):
+            return P(None, *s) if stacked else P(*s)
+
+        if name in ("k", "v", "qk_packed", "qk_scale", "qk_zero"):
+            return wrap(pool_ax, None, None)  # (rows, hkv, c)
+        if name in ("pmax", "pmin"):
+            return wrap(pool_ax, None, None)  # (num_pages, hkv, d)
+        if name == "ds_channels":
+            return wrap(b_ax, None, None)  # (batch, hkv, r) per-slot
+        if name in ("cross_k", "cross_v"):
+            return wrap(b_ax, None, None, None)
+        if name == "ssm":  # (b, d_inner, d_state)
+            return wrap(b_ax, _tensor_if(axes, mesh, inner[1]), None)
+        if name == "conv":  # (b, k-1, d_inner)
+            return wrap(b_ax, None, _tensor_if(axes, mesh, inner[2]))
+        if name in ("C", "n", "m", "c", "h"):  # xLSTM states
+            rest = [None] * (len(inner) - 1)
+            return wrap(b_ax, *rest)
+        rest = [None] * max(0, len(inner) - 1)
+        return wrap(b_ax, *rest)
+
+    return jax.tree_util.tree_map_with_path(spec, state)

@@ -1,0 +1,393 @@
+"""Prefix caching: ref-counted/COW allocator, radix tree, shared decode.
+
+Four layers, mirroring how the feature is built:
+
+* allocator — randomized property tests for the ref-count invariants
+  (conservation, reuse only at refcount 0, COW semantics);
+* radix tree — insert/match/evict unit tests, including LRU order and the
+  refcount-1 eviction gate;
+* model — a COW'd page write never mutates the shared source page, and
+  chunked prefill fills pool pages identically to the contiguous prefill;
+* engine — shared-prefix decode is token-exact against the unshared paged
+  oracle for every paged-serving selector at ragged lengths, with a forced
+  COW append and forced pool-pressure eviction, and the chunked-prefill
+  jit cache stays within ceil(max_prompt / chunk) signatures.
+
+(H2O is the one selector paged serving cannot run — it needs per-token
+accumulated attention mass, which the pool does not carry — asserted to
+fail loudly rather than silently mis-serve.)
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.serving import DecodeEngine, PrefixCache, Request
+from repro.serving.paged_cache import NULL_PAGE, PageAllocator, pages_for
+
+PAGED_SELECTORS = ("full", "quest", "double_sparsity", "streaming")
+
+
+# ---------------------------------------------------------------------------
+# Allocator: ref-count + COW property tests
+# ---------------------------------------------------------------------------
+
+def test_refcount_conservation_random_ops():
+    """Randomized alloc/share/free against a shadow refcount model: pages
+    recycle exactly when their count reaches zero, and
+    available + allocated == capacity at every step."""
+    rng = np.random.default_rng(1)
+    alloc = PageAllocator(17)
+    model: dict[int, int] = {}  # page -> refcount
+    for _ in range(500):
+        op = rng.random()
+        if op < 0.4 and alloc.available:
+            n = int(rng.integers(1, alloc.available + 1))
+            for p in alloc.alloc(n):
+                assert p not in model, "page handed out while referenced"
+                model[p] = 1
+        elif op < 0.65 and model:
+            p = int(rng.choice(list(model)))
+            alloc.share([p])
+            model[p] += 1
+        elif model:
+            p = int(rng.choice(list(model)))
+            alloc.free([p])
+            model[p] -= 1
+            if model[p] == 0:
+                del model[p]
+        assert alloc.allocated == frozenset(model)
+        for p, c in model.items():
+            assert alloc.refcount(p) == c
+        assert alloc.available + len(model) == alloc.capacity
+    for p in list(model):
+        alloc.free([p] * model.pop(p))
+    assert alloc.available == alloc.capacity
+
+
+def test_share_requires_allocated_and_free_guards():
+    alloc = PageAllocator(5)
+    with pytest.raises(ValueError, match="share unallocated"):
+        alloc.share([1])
+    a = alloc.alloc(1)
+    alloc.share(a)
+    alloc.free(a)
+    alloc.free(a)  # second reference
+    with pytest.raises(ValueError, match="double free"):
+        alloc.free(a)
+    with pytest.raises(ValueError):
+        alloc.free([NULL_PAGE])
+
+
+def test_cow_semantics():
+    alloc = PageAllocator(6)
+    (p,) = alloc.alloc(1)
+    # Exclusive page: no copy, same page back.
+    q, copied = alloc.cow(p)
+    assert q == p and not copied and alloc.refcount(p) == 1
+    # Shared page: fresh page, our reference moves, the other stays.
+    alloc.share([p])
+    q, copied = alloc.cow(p)
+    assert copied and q != p
+    assert alloc.refcount(p) == 1 and alloc.refcount(q) == 1
+    with pytest.raises(ValueError):
+        alloc.cow(99)
+
+
+def test_cow_exhaustion_raises():
+    alloc = PageAllocator(3)
+    pages = alloc.alloc(2)
+    alloc.share([pages[0]])
+    with pytest.raises(MemoryError):
+        alloc.cow(pages[0])
+
+
+# ---------------------------------------------------------------------------
+# Radix tree: insert / match / evict
+# ---------------------------------------------------------------------------
+
+def _toks(rng, n):
+    return rng.integers(0, 100, n).astype(np.int32)
+
+
+def test_tree_insert_match_roundtrip():
+    rng = np.random.default_rng(0)
+    alloc = PageAllocator(17)
+    tree = PrefixCache(4, alloc)
+    toks = _toks(rng, 11)  # 2 full pages + tail
+    pages = alloc.alloc(2)
+    assert tree.insert(toks, pages) == 2
+    assert all(alloc.refcount(p) == 2 for p in pages)  # owner + tree
+
+    # Exact prefix reuse: longer prompt sharing both pages.
+    ext = np.concatenate([toks[:8], _toks(rng, 5)])
+    got, n = tree.match(ext)
+    assert got == pages and n == 8
+    assert all(alloc.refcount(p) == 3 for p in pages)
+    alloc.free(got)
+
+    # Divergence after one page matches only the first.
+    div = np.concatenate([toks[:4], _toks(rng, 8) + 100])
+    got, n = tree.match(div)
+    assert got == pages[:1] and n == 4
+    alloc.free(got)
+
+    # Sub-page prompts never match (page-granular tree).
+    got, n = tree.match(toks[:3])
+    assert got == [] and n == 0
+
+
+def test_tree_first_writer_wins():
+    rng = np.random.default_rng(1)
+    alloc = PageAllocator(9)
+    tree = PrefixCache(4, alloc)
+    toks = _toks(rng, 8)
+    first = alloc.alloc(2)
+    tree.insert(toks, first)
+    dup = alloc.alloc(2)
+    assert tree.insert(toks, dup) == 0  # nodes exist: duplicate stays private
+    assert all(alloc.refcount(p) == 1 for p in dup)
+    got, _ = tree.match(toks)
+    assert got == first
+    alloc.free(got)
+
+
+def test_tree_evict_lru_and_refcount_gate():
+    rng = np.random.default_rng(2)
+    alloc = PageAllocator(17)
+    tree = PrefixCache(4, alloc)
+    cold = _toks(rng, 8)
+    hot = _toks(rng, 8) + 100
+    cold_pages = alloc.alloc(2)
+    tree.insert(cold, cold_pages)
+    hot_pages = alloc.alloc(2)
+    tree.insert(hot, hot_pages)
+    alloc.free(cold_pages)  # only the tree holds these now
+    alloc.free(hot_pages)
+    got, _ = tree.match(hot)  # touch: hot becomes most-recent AND pinned
+    assert tree.reclaimable() == 2  # the cold chain
+    avail0 = alloc.available
+    # Ask for more than reclaimable: only the cold chain drains (leaf
+    # first, then its exposed parent); pinned hot pages survive.
+    assert tree.evict(4) == 2
+    assert alloc.available == avail0 + 2
+    assert tree.match(cold) == ([], 0)
+    re_got, n = tree.match(hot)
+    assert re_got == got and n == 8
+    alloc.free(got)
+    alloc.free(re_got)
+    # Unpinned now: eviction reclaims hot too.
+    assert tree.evict(4) == 2
+    assert alloc.available == alloc.capacity
+
+
+def test_tree_evict_order_is_lru():
+    rng = np.random.default_rng(3)
+    alloc = PageAllocator(9)
+    tree = PrefixCache(4, alloc)
+    a, bb = _toks(rng, 4), _toks(rng, 4) + 100
+    pa = alloc.alloc(1)
+    tree.insert(a, pa)
+    pb = alloc.alloc(1)
+    tree.insert(bb, pb)
+    alloc.free(pa)
+    alloc.free(pb)
+    got, _ = tree.match(a)  # refresh a: b is now LRU
+    alloc.free(got)
+    assert tree.evict(1) == 1
+    assert tree.match(bb) == ([], 0), "LRU victim is the untouched entry"
+    assert tree.match(a)[1] == 4
+
+
+# ---------------------------------------------------------------------------
+# Model: COW never mutates the shared page
+# ---------------------------------------------------------------------------
+
+def test_cow_write_leaves_source_page_intact(rng):
+    """share → write → COW: the writer lands in its private copy; the
+    shared source page's rows and Quest metadata stay bit-identical."""
+    from repro.models import (copy_page, init_paged_decode_state, init_params,
+                              prefill_chunk)
+    cfg = get_smoke_config("qwen2-1.5b")
+    ps = cfg.twilight.page_size
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    alloc = PageAllocator(9)
+    state = init_paged_decode_state(cfg, 2, alloc.num_pages)
+    pages = alloc.alloc(2)
+    max_pages = 4
+    pt = np.zeros((max_pages,), np.int32)
+    pt[:2] = pages
+    prompt = rng.integers(8, cfg.vocab_size, 2 * ps).astype(np.int32)
+    _, state = prefill_chunk(params, cfg, state, jnp.asarray(prompt),
+                             jnp.asarray(pt), jnp.int32(0), jnp.int32(0),
+                             jnp.int32(len(prompt)))
+
+    src = pages[-1]
+    snap = {}
+    for li, blk in enumerate(state["blocks"]):
+        snap[li] = {n: np.asarray(blk[n][:, src * ps:(src + 1) * ps]).copy()
+                    for n in ("k", "v", "qk_packed")}
+        snap[li]["pmax"] = np.asarray(blk["pmax"][:, src]).copy()
+
+    # COW: copy the shared page, then overwrite its last row in the copy.
+    alloc.share([src])  # a second reader appears (prefix-cache role)
+    dst, copied = alloc.cow(src)
+    assert copied
+    state = copy_page(cfg, state, jnp.int32(src), jnp.int32(dst))
+    pt2 = pt.copy()
+    pt2[1] = dst
+    other = (prompt[-1] + 1) % cfg.vocab_size
+    _, state = prefill_chunk(params, cfg, state,
+                             jnp.asarray(np.full((ps,), other, np.int32)),
+                             jnp.asarray(pt2), jnp.int32(1),
+                             jnp.int32(len(prompt) - 1), jnp.int32(1))
+
+    for li, blk in enumerate(state["blocks"]):
+        for n in ("k", "v", "qk_packed"):
+            np.testing.assert_array_equal(
+                np.asarray(blk[n][:, src * ps:(src + 1) * ps]), snap[li][n],
+                err_msg=f"layer {li} {n}: shared page mutated")
+        np.testing.assert_array_equal(np.asarray(blk["pmax"][:, src]),
+                                      snap[li]["pmax"])
+        # ... and the write really happened, in the private copy.
+        assert not np.array_equal(
+            np.asarray(blk["k"][:, dst * ps:(dst + 1) * ps]), snap[li]["k"])
+
+
+# ---------------------------------------------------------------------------
+# Engine: shared-prefix decode == unshared paged decode
+# ---------------------------------------------------------------------------
+
+def _shared_requests(rng, cfg, prefix_len=24):
+    """Ragged workload: four prefix-sharers (one fully cached duplicate,
+    page-aligned, forcing a COW append), one unrelated prompt.  The first
+    two admit concurrently into an empty tree; the later arrivals hit."""
+    prefix = rng.integers(8, cfg.vocab_size, prefix_len).astype(np.int32)
+
+    def ext(uid, tail, mn):
+        t = rng.integers(8, cfg.vocab_size, tail).astype(np.int32)
+        return Request(uid=uid, prompt=np.concatenate([prefix, t]),
+                       max_new_tokens=mn)
+
+    return [
+        ext(0, 9, 4),
+        ext(1, 4, 3),
+        Request(uid=2, prompt=prefix.copy(), max_new_tokens=3),  # COW
+        Request(uid=3,
+                prompt=rng.integers(8, cfg.vocab_size, 13).astype(np.int32),
+                max_new_tokens=3),
+        ext(4, 6, 3),  # late sharer: matches the resident prefix pages
+    ]
+
+
+@pytest.mark.parametrize("selector", PAGED_SELECTORS)
+def test_shared_prefix_matches_unshared(rng, selector):
+    cfg = get_smoke_config("qwen2-1.5b")
+    cfg = cfg.replace(twilight=dataclasses.replace(
+        cfg.twilight, selector=selector))
+    reqs = _shared_requests(rng, cfg)
+    base = DecodeEngine(cfg, batch_size=2, cache_capacity=64, seed=7,
+                        paged=True)
+    shared = DecodeEngine(cfg, params=base.params, batch_size=2,
+                          cache_capacity=64, seed=7, paged=True,
+                          prefix_share=True)
+    want = {r.uid: r.tokens for r in base.generate(reqs)}
+    got = {r.uid: r.tokens for r in shared.generate(reqs)}
+    assert got == want
+    assert shared.last_prefix_hits >= 2, "prefix reuse must actually happen"
+    assert shared.last_prefix_tokens > 0
+    assert shared.last_cow_copies >= 1, \
+        "the fully-cached duplicate must trigger a COW append"
+
+
+def test_shared_prefix_forced_eviction_matches(rng):
+    """A pool too small to retain every retired prompt forces LRU eviction
+    of cold prefix pages; tokens must still match the unshared oracle."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    ps = cfg.twilight.page_size
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(8, cfg.vocab_size, 24
+                                        ).astype(np.int32),
+                    max_new_tokens=4)
+            for i in range(3)]
+    # 7 allocatable pages; each request needs 4 (3 prompt + 1 boundary) and
+    # leaves 3 cached — the third admission must evict.
+    base = DecodeEngine(cfg, batch_size=1, cache_capacity=64, seed=7,
+                        paged=True, num_pages=8)
+    shared = DecodeEngine(cfg, params=base.params, batch_size=1,
+                          cache_capacity=64, seed=7, paged=True, num_pages=8,
+                          prefix_share=True)
+    want = {r.uid: r.tokens for r in base.generate(reqs)}
+    got = {r.uid: r.tokens for r in shared.generate(reqs)}
+    assert got == want
+    assert shared.last_evictions >= 1, "pool sizing must force eviction"
+    assert pages_for(24, ps) == 3
+
+
+def test_shared_prefix_preemption_matches(rng):
+    """Prefix sharing + a tight pool that forces recompute preemption:
+    greedy tokens still match, and restarted requests re-match their own
+    cached prefix instead of re-prefilling from scratch."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(8, cfg.vocab_size, 17
+                                        ).astype(np.int32),
+                    max_new_tokens=20)
+            for i in range(2)]
+    base = DecodeEngine(cfg, batch_size=1, cache_capacity=40, seed=7,
+                        paged=True)
+    tight = DecodeEngine(cfg, params=base.params, batch_size=2,
+                         cache_capacity=40, seed=7, paged=True, num_pages=9,
+                         prefix_share=True)
+    want = {r.uid: r.tokens for r in base.generate(reqs)}
+    got = {r.uid: r.tokens for r in tight.generate(reqs)}
+    assert tight.last_preemptions > 0, "pool sizing must force preemption"
+    assert got == want
+
+
+def test_h2o_unsupported_in_paged_serving(rng):
+    """H2O needs accumulated per-token attention mass, which the shared
+    pool does not carry — paged serving refuses it loudly."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    cfg = cfg.replace(twilight=dataclasses.replace(cfg.twilight,
+                                                   selector="h2o"))
+    engine = DecodeEngine(cfg, batch_size=1, cache_capacity=64, seed=0,
+                          paged=True)
+    req = Request(uid=0,
+                  prompt=rng.integers(8, cfg.vocab_size, 12).astype(np.int32),
+                  max_new_tokens=2)
+    with pytest.raises(ValueError, match="accum_scores"):
+        engine.generate([req])
+
+
+def test_chunked_prefill_jit_signatures(rng):
+    """Many distinct prompt lengths compile at most ceil(max_prompt/chunk)
+    chunk signatures (bucketed chunks) — not one per exact length, which is
+    what the unshared paged path pays."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    ps = cfg.twilight.page_size
+    engine = DecodeEngine(cfg, batch_size=2, cache_capacity=64, seed=0,
+                          paged=True, prefix_share=True,
+                          prefill_chunk_pages=2)
+    chunk = engine.chunk_tokens
+    assert chunk == 2 * ps
+    lengths = [5, 9, 14, 17, 23, 26, 31, 38, 45, 53]
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(8, cfg.vocab_size, L
+                                        ).astype(np.int32),
+                    max_new_tokens=2)
+            for i, L in enumerate(lengths)]
+    engine.generate(reqs)
+    n_sig = engine._chunk._cache_size()
+    assert n_sig <= -(-max(lengths) // chunk), n_sig
+
+
+def test_prefix_share_requires_attention_only():
+    cfg = get_smoke_config("jamba-1.5-large-398b")
+    with pytest.raises(ValueError, match="attention-only"):
+        DecodeEngine(cfg, batch_size=1, cache_capacity=64, paged=True,
+                     prefix_share=True)

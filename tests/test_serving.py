@@ -47,6 +47,68 @@ def test_engine_greedy_deterministic(rng):
     assert r1[0].tokens == r2[0].tokens
 
 
+def test_wave_clips_prompts_by_own_budget(rng):
+    """A long-prompt/short-generation request batched behind a
+    long-generation one keeps its own ``capacity - max_new`` prompt tokens:
+    wave formation splits the incompatible pair instead of silently
+    truncating (previously every prompt was clipped by the wave-wide
+    max(max_new_tokens))."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    long_prompt = rng.integers(8, cfg.vocab_size, 60).astype(np.int32)
+    short_prompt = rng.integers(8, cfg.vocab_size, 10).astype(np.int32)
+    reqs = [Request(uid=0, prompt=long_prompt, max_new_tokens=4),
+            Request(uid=1, prompt=short_prompt, max_new_tokens=40)]
+    eng = DecodeEngine(cfg, batch_size=2, cache_capacity=64, seed=7)
+    # Unit: the packer refuses the incompatible pair but batches compatible
+    # ones (shared cache position needs max(kept prompt) + max(max_new)
+    # <= capacity).
+    wave, rest = eng._form_wave(list(reqs))
+    assert [r.uid for r in wave] == [0] and [r.uid for r in rest] == [1]
+    both = [Request(uid=0, prompt=long_prompt, max_new_tokens=4),
+            Request(uid=1, prompt=long_prompt, max_new_tokens=4)]
+    wave, rest = eng._form_wave(list(both))
+    assert len(wave) == 2 and not rest
+    # End-to-end: uid 0 must decode exactly as if served alone with its
+    # full 60-token prompt (the old clip kept only 24 of them).
+    got = {r.uid: r.tokens for r in eng.generate(reqs)}
+    solo = DecodeEngine(cfg, params=eng.params, batch_size=1,
+                        cache_capacity=64, seed=7)
+    want = solo.generate([Request(uid=0, prompt=long_prompt,
+                                  max_new_tokens=4)])[0].tokens
+    assert got[0] == want
+
+
+def test_wave_rejects_oversized_max_new(rng):
+    """Wave mode raises the same clean error as the paged path instead of
+    silently producing a zero-width prompt batch."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    eng = DecodeEngine(cfg, batch_size=1, cache_capacity=64)
+    req = Request(uid=0,
+                  prompt=rng.integers(8, cfg.vocab_size, 10).astype(np.int32),
+                  max_new_tokens=64)
+    with pytest.raises(ValueError, match="cache_capacity"):
+        eng.generate([req])
+
+
+def test_paged_greedy_reset_on_retire(rng):
+    """A greedy request admitted into a slot freed by a sampling request
+    decodes greedily — the slot's sampling mode never leaks across
+    occupants (reset on retire + set on admission)."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    pa = rng.integers(8, cfg.vocab_size, 20).astype(np.int32)
+    pb = rng.integers(8, cfg.vocab_size, 20).astype(np.int32)
+    eng = DecodeEngine(cfg, batch_size=1, cache_capacity=64, seed=7,
+                       paged=True)
+    got = {r.uid: r.tokens for r in eng.generate([
+        Request(uid=0, prompt=pa, max_new_tokens=3, greedy=False),
+        Request(uid=1, prompt=pb, max_new_tokens=4, greedy=True)])}
+    solo = DecodeEngine(cfg, params=eng.params, batch_size=1,
+                        cache_capacity=64, seed=123, paged=True)
+    want = solo.generate([Request(uid=1, prompt=pb, max_new_tokens=4,
+                                  greedy=True)])[0].tokens
+    assert got[1] == want
+
+
 def test_engine_vlm(rng):
     cfg = get_smoke_config("internvl2-1b")
     engine = DecodeEngine(cfg, batch_size=2, cache_capacity=64)

@@ -9,8 +9,11 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
-from repro.launch.specs import INPUT_SHAPES, decode_state_struct, params_struct
-from repro.sharding import decode_state_specs, param_specs
+from repro.launch.specs import (INPUT_SHAPES, decode_state_struct,
+                                paged_decode_state_struct, paged_pool_pages,
+                                params_struct)
+from repro.sharding import (decode_state_specs, paged_decode_state_specs,
+                            param_specs)
 
 
 class _FakeMesh:
@@ -62,6 +65,32 @@ def test_decode_state_specs_divisible(arch, shape_name):
     specs = decode_state_specs(struct, cfg, mesh, batch=shape.global_batch,
                                capacity=shape.seq_len)
     _check_tree(struct, specs, mesh.shape)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_paged_decode_state_specs_divisible(arch):
+    """Shared-pool serving state: the (num_pages*page_size, hkv, d) pools
+    shard whole pages over `model` (page-id remap documented in
+    sharding.rules.paged_decode_state_specs); per-slot state shards over
+    the batch axes."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES["decode_paged_32k"]
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    struct = paged_decode_state_struct(cfg, shape)
+    num_pages = paged_pool_pages(cfg, shape)
+    assert num_pages % 16 == 0, "pool page dim must divide the model axis"
+    specs = paged_decode_state_specs(struct, cfg, mesh,
+                                     batch=shape.global_batch,
+                                     num_pages=num_pages)
+    _check_tree(struct, specs, mesh.shape)
+    # The pool actually shards: every attention layer's K pool carries the
+    # model axis on its token-row dim (xLSTM has no attention layers — and
+    # no pool to shard).
+    flat = jax.tree_util.tree_leaves_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    k_specs = [s for path, s in flat if "'k'" in str(path[-1])]
+    if cfg.xlstm is None:
+        assert k_specs and all(s[1] == "model" for s in k_specs)
 
 
 def test_multipod_param_specs_divisible():
