@@ -164,7 +164,6 @@ def fig6_quant_bits():
             mask, stats = pruner.prune(q, cand, keys=K)
         else:
             # Simulate 2/8-bit by quantizing K at that precision.
-            from repro.core.quant import QuantizedTensor
             levels = 2 ** bits - 1
             Kf = np.asarray(K)
             lo, hi = Kf.min(-1, keepdims=True), Kf.max(-1, keepdims=True)

@@ -298,6 +298,195 @@ def serve_shared_prefix_workload(batch: int = 8, n_requests: int = 64,
     return rows
 
 
+def serve_persistent_workload(batch: int = 8, n_batches: int = 4,
+                              requests_per_batch: int = 8,
+                              prefix_len: int = 8192, suffix_len: int = 512,
+                              max_new: int = 128, seed: int = 0,
+                              json_path: str | None = None):
+    """Persistent session vs fresh-engine-per-call — modeled.
+
+    ``n_batches`` successive ``submit()`` batches (each: shared system
+    prefix + private suffixes) are served either by ONE persistent engine —
+    whose radix tree survives between calls, so every batch after the first
+    prefills only suffixes — or by a fresh engine per batch, which re-pays
+    the prefix prefill once per call (the pre-persistence engine: the pool
+    and tree were torn down after every ``generate()``).  Same 7B-class
+    cost model as the shared-prefix workload.
+
+    Reports per-mode radix-tree hit rate, mean TTFT, and end-to-end tok/s;
+    optionally dumps the rows as JSON (the CI perf artifact).
+    """
+    if n_batches < 1 or requests_per_batch < 1:
+        raise ValueError(f"need >= 1 batch of >= 1 request, got "
+                         f"{n_batches} x {requests_per_batch}")
+    rng = np.random.default_rng(seed)
+    n_layers, hkv, d = 32, 8, 128
+    weight_bytes = 8e9 * 2  # 8B params bf16, read once per step/chunk
+    w_us = weight_bytes / HBM_BW * 1e6
+    chunk = 2048
+    n_total = n_batches * requests_per_batch
+    suffixes = rng.integers(max(1, suffix_len // 4), suffix_len + 1, n_total)
+    new_tokens = rng.integers(max(1, max_new // 4), max_new + 1, n_total)
+    total_new = int(new_tokens.sum())
+
+    def attn_us(ctx: int) -> float:
+        b0 = max(64, ctx // 4)
+        b1 = max(64, int(0.02 * ctx))
+        return n_layers * bytes_to_us(attn_bytes_quest_twi(ctx, hkv, d, b0, b1))
+
+    def prefill_us(start: int, end: int) -> float:
+        us, s = 0.0, start
+        while s < end:
+            e = min(s + chunk, end)
+            us += w_us + n_layers * bytes_to_us(2 * e * hkv * d * 2)
+            s = e
+        return us
+
+    def run(persistent: bool) -> tuple[float, float, float]:
+        """Serve the batches serially.  Returns (hit rate, mean TTFT us,
+        total us)."""
+        ttft, total_us, hits = [], 0.0, 0
+        cached = False  # radix tree holds the prefix
+        for b0_idx in range(n_batches):
+            if not persistent:
+                cached = False  # fresh engine: tree torn down with the call
+            queue = list(range(b0_idx * requests_per_batch,
+                               (b0_idx + 1) * requests_per_batch))
+            slots: list[list[int] | None] = [None] * batch
+            while queue or any(s is not None for s in slots):
+                for j in range(batch):
+                    if slots[j] is None and queue:
+                        i = queue.pop(0)
+                        s_total = prefix_len + int(suffixes[i])
+                        if cached:
+                            hits += 1
+                            start = prefix_len
+                        else:
+                            start = 0
+                        p_us = prefill_us(start, s_total)
+                        cached = True
+                        total_us += p_us  # chunks stall the shared queue
+                        # Queue-inclusive TTFT, same semantics as the
+                        # shared-prefix workload (the gate compares both).
+                        ttft.append(total_us)
+                        slots[j] = [s_total, int(new_tokens[i])]
+                total_us += w_us + sum(attn_us(s[0]) for s in slots
+                                       if s is not None)
+                for j in range(batch):
+                    if slots[j] is not None:
+                        slots[j][0] += 1
+                        slots[j][1] -= 1
+                        if slots[j][1] == 0:
+                            slots[j] = None
+        return hits / n_total, float(np.mean(ttft)), total_us
+
+    rows = []
+    for tag, persistent in (("fresh", False), ("persistent", True)):
+        hit_rate, ttft_us, total = run(persistent)
+        tok_s = total_new / (total * 1e-6)
+        rows.append({"name": f"persistent_{tag}_b{batch}",
+                     "hit_rate": hit_rate, "ttft_us": ttft_us,
+                     "total_us": total, "tok_s": tok_s})
+        csv_row(f"persistent_{tag}_b{batch}", total,
+                f"hit_rate={hit_rate:.2f};ttft_us={ttft_us:.1f};"
+                f"tok_s={tok_s:.1f}")
+    speed = rows[0]["total_us"] / rows[1]["total_us"]
+    ttft_speed = rows[0]["ttft_us"] / rows[1]["ttft_us"]
+    csv_row(f"persistent_speedup_b{batch}", 0.0,
+            f"ttft={ttft_speed:.2f};tok_s={speed:.2f}")
+    rows.append({"name": f"persistent_speedup_b{batch}",
+                 "ttft_speedup": ttft_speed, "tok_s_speedup": speed})
+    if json_path:
+        import json
+        with open(json_path, "w") as f:
+            json.dump({"workload": "persistent", "batch": batch,
+                       "n_batches": n_batches, "prefix_len": prefix_len,
+                       "rows": rows}, f, indent=2)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Perf-trajectory gate: compare a run's JSON rows against a blessed baseline
+# ---------------------------------------------------------------------------
+
+# Metrics the gate watches, with their good direction.
+_GATE_METRICS = {"tok_s": "higher", "ttft_us": "lower"}
+
+
+def compare_benchmarks(current: dict, baseline: dict,
+                       threshold: float = 0.10) -> tuple[list[dict], str]:
+    """Compare two benchmark JSON documents row-by-row.
+
+    Returns ``(regressions, markdown)``: rows whose modeled ``tok_s``
+    dropped or ``ttft_us`` rose by more than ``threshold`` relative to the
+    baseline, plus a markdown delta table for the CI job summary.  Rows or
+    metrics missing on either side are skipped (renames don't fail the
+    gate — a removed row simply leaves the trajectory).
+    """
+    base_rows = {r["name"]: r for r in baseline.get("rows", [])}
+    regressions, lines = [], []
+    lines.append("| row | metric | baseline | current | delta |")
+    lines.append("|---|---|---:|---:|---:|")
+    for row in current.get("rows", []):
+        base = base_rows.get(row["name"])
+        if base is None:
+            continue
+        for metric, direction in _GATE_METRICS.items():
+            if metric not in row or metric not in base:
+                continue
+            cur, old = float(row[metric]), float(base[metric])
+            if old == 0:
+                continue
+            rel = (cur - old) / old
+            worse = rel < -threshold if direction == "higher" \
+                else rel > threshold
+            flag = " ⛔" if worse else ""
+            lines.append(f"| {row['name']} | {metric} | {old:.1f} | "
+                         f"{cur:.1f} | {rel:+.1%}{flag} |")
+            if worse:
+                regressions.append({"name": row["name"], "metric": metric,
+                                    "baseline": old, "current": cur,
+                                    "rel": rel})
+    return regressions, "\n".join(lines)
+
+
+def run_compare(rows: list[dict], workload: str, baseline_path: str,
+                threshold: float, warn_only: bool) -> int:
+    """Gate the just-computed ``rows`` against ``baseline_path``.
+
+    Prints the delta table, appends it to ``$GITHUB_STEP_SUMMARY`` when CI
+    provides one, and returns the process exit code (nonzero on a >
+    ``threshold`` modeled tok/s or TTFT regression unless ``warn_only``).
+    """
+    import json
+    import os
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"# perf gate: baseline unreadable ({e}) — skipping")
+        return 0
+    regressions, table = compare_benchmarks(
+        {"rows": rows}, baseline, threshold=threshold)
+    verdict = ("REGRESSION" if regressions and not warn_only
+               else "regression (warn-only)" if regressions else "ok")
+    md = (f"### Perf trajectory: `{workload}` — {verdict}\n\n"
+          f"threshold ±{threshold:.0%} on modeled tok/s and TTFT\n\n"
+          f"{table}\n")
+    print(md)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(md + "\n")
+    if regressions and not warn_only:
+        for r in regressions:
+            print(f"# perf gate FAIL: {r['name']} {r['metric']} "
+                  f"{r['baseline']:.1f} -> {r['current']:.1f} "
+                  f"({r['rel']:+.1%})")
+        return 1
+    return 0
+
+
 def tabE_offload():
     """Appendix E: offloading — per-token load cost dominates (PCIe-class
     32 GB/s instead of HBM), so pruned budgets win ~proportionally."""
@@ -364,28 +553,56 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--workload", default=None,
-                    choices=["mixed", "shared-prefix"],
+                    choices=["mixed", "shared-prefix", "persistent"],
                     help="mixed: continuous vs wave batching on mixed "
                          "max_new_tokens; shared-prefix: COW prefix "
-                         "sharing + chunked prefill vs full re-prefill "
+                         "sharing + chunked prefill vs full re-prefill; "
+                         "persistent: one long-lived engine across N "
+                         "submit() batches vs a fresh engine per batch "
                          "(modeled costs)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--batches", type=int, default=4,
+                    help="successive submit() batches (persistent workload)")
     ap.add_argument("--prefix-len", type=int, default=8192)
     ap.add_argument("--json", default=None,
                     help="also dump the workload rows as JSON (CI artifact)")
+    ap.add_argument("--compare", default=None, metavar="BASELINE.json",
+                    help="perf-trajectory gate: compare this run's rows "
+                         "against a baseline JSON; exits nonzero on a "
+                         "> threshold modeled tok/s or TTFT regression")
+    ap.add_argument("--compare-warn-only", action="store_true",
+                    help="report regressions but exit zero (PR builds)")
+    ap.add_argument("--compare-threshold", type=float, default=0.10,
+                    help="relative regression tolerance (default 10%%)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    rows = None
     if args.workload == "mixed":
         serve_mixed_workload(batch=args.batch, n_requests=args.requests,
                              seed=args.seed)
     elif args.workload == "shared-prefix":
-        serve_shared_prefix_workload(batch=args.batch,
-                                     n_requests=args.requests,
-                                     prefix_len=args.prefix_len,
-                                     seed=args.seed, json_path=args.json)
+        rows = serve_shared_prefix_workload(batch=args.batch,
+                                            n_requests=args.requests,
+                                            prefix_len=args.prefix_len,
+                                            seed=args.seed,
+                                            json_path=args.json)
+    elif args.workload == "persistent":
+        rows = serve_persistent_workload(
+            batch=args.batch, n_batches=max(1, args.batches),
+            requests_per_batch=max(1, args.requests
+                                   // max(1, args.batches)),
+            prefix_len=args.prefix_len, seed=args.seed,
+            json_path=args.json)
     else:
         for fn in (fig7_attention_speedup, fig8_e2e_tpot,
                    fig10_time_breakdown, tabE_offload, alg1_topp_microbench):
             fn()
+    if args.compare:
+        if rows is None:
+            raise SystemExit("--compare requires --workload "
+                             "shared-prefix|persistent")
+        raise SystemExit(run_compare(rows, args.workload, args.compare,
+                                     args.compare_threshold,
+                                     args.compare_warn_only))

@@ -31,6 +31,7 @@ TABLES = {
     "tabE": latency.tabE_offload,  # offloading scenario
     "mixed": latency.serve_mixed_workload,  # continuous vs wave batching
     "shared_prefix": latency.serve_shared_prefix_workload,  # COW prefix cache
+    "persistent": latency.serve_persistent_workload,  # session vs per-call
     "alg1": latency.alg1_topp_microbench,  # top-p binary search wall-clock
     "kernels": latency.kernels_interpret_sanity,  # Pallas interpret sanity
 }

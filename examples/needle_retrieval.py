@@ -6,7 +6,6 @@ miniature.
     PYTHONPATH=src python examples/needle_retrieval.py
 """
 
-import dataclasses
 
 import numpy as np
 

@@ -153,7 +153,9 @@ class TwilightPruner:
         pool layout — the gathers dispatch on rank.
         ``slot_weights`` (b, hkv, m) f32 is the group-max estimated weight
         per slot — the ranking key for the optional B1 re-compaction before
-        the final attention gather.
+        the final attention gather, and (masked to the kept slots) the
+        per-step increment the serving engine scatter-adds into its
+        page-granular H2O mass accumulator.
         """
         b, hkv, m = indices.shape
         hq = q.shape[1]

@@ -105,6 +105,13 @@ class SelectionContext(NamedTuple):
     # its own prompt).
     ds_channels: jax.Array | None
     page_table: jax.Array | None = None  # (b, max_pages) i32 physical ids
+    # Page-granular accumulated attention mass (H2O in serving): the decode
+    # step scatter-adds the pruner's post-top-p weights per page, so H2O
+    # ranks *pages* exactly like Quest does — (b, n_pages, hkv) for
+    # contiguous caches, (num_pages, hkv) keyed by *physical* page for the
+    # shared pool (gathered through ``page_table``).  Token-level
+    # ``accum_scores`` takes precedence when both are set.
+    page_mass: jax.Array | None = None
 
 
 class TokenSelector(Protocol):
@@ -412,14 +419,97 @@ class StreamingSelector:
 
 @dataclasses.dataclass(frozen=True)
 class H2OSelector:
-    """H2O [8]: heavy hitters by accumulated attention mass + recent window."""
+    """H2O [8]: heavy hitters by accumulated attention mass + recent window.
+
+    Two granularities, dispatched on what the context carries:
+
+    * token-level ``accum_scores`` (b, hkv, n) — the paper's formulation;
+      used by the dense oracle and the raw-pipeline tests.
+    * page-level ``page_mass`` — the *serving* formulation: the decode step
+      folds the pruner's post-top-p weights into a per-page accumulator
+      (per-slot pages for contiguous caches, physical pages for the shared
+      pool), and H2O ranks whole pages like Quest does.  This is what makes
+      H2O runnable over a paged pool: the pool has nowhere to keep n-length
+      per-token state, but per-page mass is O(num_pages) and survives page
+      remapping because it is keyed by physical page.
+    """
 
     recent_frac: float = 0.5
     name: str = "h2o"
 
+    def _page_mask(self, q: jax.Array, ctx: SelectionContext, budget: int
+                   ) -> tuple[jax.Array, int]:
+        """Page-granular H2O mask (b, hkv, n_pages) and the pages budget."""
+        if ctx.page_meta is None:
+            raise ValueError("page-mass H2O requires page_meta")
+        ps = ctx.page_meta.page_size
+        mass = ctx.page_mass
+        if ctx.page_table is not None:
+            # Pooled mass is physical-page keyed: gather each slot's pages
+            # through its table so ranking runs over the logical page axis.
+            mass = jnp.take(mass, ctx.page_table, axis=0)  # (b, mp, hkv)
+        mass = jnp.moveaxis(mass, 1, 2)  # (b, hkv, n_pages)
+        b, hkv, n_pages = mass.shape
+        pages_budget = max(1, budget // ps)
+        n_recent = max(1, int(pages_budget * self.recent_frac))
+        length = (ctx.length if ctx.length is not None
+                  else jnp.full((b,), n_pages * ps))
+        n_live = -(-length // ps)  # (b,) pages with >= 1 valid token
+        page = jnp.arange(n_pages)
+        live = page[None, :] < n_live[:, None]  # (b, n_pages)
+        recent = live & (page[None, :] >= (n_live - n_recent)[:, None])
+        # Rank-based selection, NOT a >= threshold mask: fresh pages all
+        # carry mass 0, so early decode steps are guaranteed ties — a
+        # threshold mask would then select every live page and downstream
+        # capacity truncation (which keeps the LOWEST positions) would
+        # silently drop the recent window, including the current token's
+        # page.  Instead the recent window outranks any mass and the
+        # remaining slots go to the highest-mass pages, ties resolving
+        # deterministically toward older pages (stable sort — the
+        # attention-sink end, matching the streaming intuition).
+        neg = jnp.finfo(jnp.float32).min
+        prio = jnp.where(live[:, None, :], mass, neg)
+        prio = jnp.where(recent[:, None, :], jnp.inf, prio)
+        order = jnp.argsort(prio, axis=-1, stable=True, descending=True)
+        keep = order[..., :min(pages_budget, n_pages)]
+        mask = jnp.zeros((b, hkv, n_pages), bool)
+        b_idx = jnp.arange(b)[:, None, None]
+        h_idx = jnp.arange(hkv)[None, :, None]
+        mask = mask.at[b_idx, h_idx, keep].set(True)
+        return mask & live[:, None, :], pages_budget
+
+    def _select_pages(self, q: jax.Array, ctx: SelectionContext,
+                      budget: int) -> jax.Array:
+        pm = ctx.page_meta
+        page_mask, _ = self._page_mask(q, ctx, budget)
+        n = page_mask.shape[-1] * pm.page_size
+        tok = jnp.repeat(page_mask, pm.page_size, axis=-1)
+        return tok & _length_mask(n, ctx.length, q)
+
+    def _select_indices_pages(
+        self, q: jax.Array, ctx: SelectionContext, budget: int
+    ) -> tuple[jax.Array, jax.Array]:
+        """Page-aligned compact candidates, exactly like Quest's."""
+        pm = ctx.page_meta
+        page_mask, pages_budget = self._page_mask(q, ctx, budget)
+        b, hkv, n_pages = page_mask.shape
+        ps = pm.page_size
+        cap_pages = min(n_pages, pages_budget)
+        pidx, pvalid = indices_from_mask(page_mask, cap_pages)
+        offs = jnp.arange(ps, dtype=jnp.int32)
+        idx = (pidx[..., None] * ps + offs).reshape(b, hkv, cap_pages * ps)
+        valid = jnp.broadcast_to(
+            pvalid[..., None], (b, hkv, cap_pages, ps)
+        ).reshape(b, hkv, cap_pages * ps)
+        if ctx.length is not None:
+            valid &= idx < ctx.length[:, None, None]
+        return jnp.where(valid, idx, 0), valid
+
     def select(self, q: jax.Array, ctx: SelectionContext, budget: int) -> jax.Array:
         if ctx.accum_scores is None:
-            raise ValueError("H2OSelector requires accum_scores")
+            if ctx.page_mass is not None:
+                return self._select_pages(q, ctx, budget)
+            raise ValueError("H2OSelector requires accum_scores or page_mass")
         b, hkv, n = ctx.accum_scores.shape
         n_recent = int(budget * self.recent_frac)
         n_heavy = budget - n_recent
@@ -436,6 +526,8 @@ class H2OSelector:
     def select_indices(
         self, q: jax.Array, ctx: SelectionContext, budget: int
     ) -> tuple[jax.Array, jax.Array]:
+        if ctx.accum_scores is None and ctx.page_mass is not None:
+            return self._select_indices_pages(q, ctx, budget)
         mask = self.select(q, ctx, budget)
         # Heavy hitters are scored per KV head (no group union): heavy +
         # recent together stay within the budget.

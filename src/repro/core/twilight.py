@@ -162,6 +162,10 @@ class TwilightOutput(NamedTuple):
     indices: jax.Array | None = None  # (b, hkv, m) i32 — compact path only
     candidate_valid: jax.Array | None = None  # (b, hkv, m) bool
     pruned_valid: jax.Array | None = None  # (b, hkv, m) bool
+    # (b, hkv, m) f32 group-max post-softmax estimated weight per candidate
+    # slot (compact path with pruning only).  The serving engine folds
+    # ``slot_weights[pruned_valid]`` into its per-page H2O mass accumulator.
+    slot_weights: jax.Array | None = None
 
 
 def _trivial_stats(b: int, hq: int, hkv: int, n: jax.Array | int) -> PrunerStats:
@@ -238,7 +242,7 @@ def _compact_pipeline(
         out = compact_decode_attention(q, kg, vg, attn_valid)
     return TwilightOutput(out=out, candidate_mask=None, pruned_mask=None,
                           stats=stats, indices=indices, candidate_valid=valid,
-                          pruned_valid=kept)
+                          pruned_valid=kept, slot_weights=slot_weights)
 
 
 def twilight_decode_attention(

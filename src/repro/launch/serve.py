@@ -3,14 +3,19 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --requests 8 --prompt-len 96 --max-new 16
 
-``--paged`` switches to the continuous-batching engine over the shared page
-pool; ``--mixed`` generates a ragged workload (varied prompt lengths and
-per-request max_new_tokens) — the regime where continuous batching beats
-wave batching.  ``--prefix-share`` additionally turns on copy-on-write
-prefix caching with chunked prefill (attention-only stacks), and
-``--shared-prefix-len N`` makes every request open with the same N-token
-prefix — the regime where sharing pays.  ``--compare`` runs both
-schedulers on the same workload and reports both tok/s figures (with
+``--paged`` switches to the persistent continuous-batching engine over the
+shared page pool; ``--mixed`` generates a ragged workload (varied prompt
+lengths and per-request max_new_tokens) — the regime where continuous
+batching beats wave batching.  ``--prefix-share`` additionally turns on
+copy-on-write prefix caching with chunked prefill (attention-only stacks),
+and ``--shared-prefix-len N`` makes every request open with the same
+N-token prefix — the regime where sharing pays.  ``--calls N`` splits the
+workload into N successive ``generate()`` calls against ONE engine: the
+paged engine is a persistent session, so calls 2..N hit the radix tree
+populated by call 1 (per-call hit telemetry is printed).  ``--selector``
+overrides the Twilight selector — ``h2o`` now runs paged, backed by the
+pool's per-physical-page accumulated attention mass.  ``--compare`` runs
+both schedulers on the same workload and reports both tok/s figures (with
 ``--prefix-share``: share-on vs share-off paged engines).
 """
 
@@ -63,24 +68,42 @@ def _run(cfg, args, reqs, *, paged: bool, prefix_share: bool = False,
                           cache_capacity=args.capacity, seed=args.seed,
                           paged=paged, num_pages=args.pages,
                           prefix_share=prefix_share)
+    n_calls = max(1, args.calls) if paged else 1
+    per_call = -(-len(reqs) // n_calls)
     t0 = time.time()
-    results = engine.generate(reqs)
+    results = []
+    for c in range(n_calls):
+        chunk = reqs[c * per_call:(c + 1) * per_call]
+        if not chunk:
+            break
+        results.extend(engine.generate(chunk))
+        if prefix_share and n_calls > 1:
+            print(f"[serve]   call {c}: {len(chunk)} requests, "
+                  f"{engine.last_prefix_hits} prefix hits, "
+                  f"{engine.last_prefix_tokens} tokens reused")
     wall = time.time() - t0
     total_tokens = sum(r.decode_steps for r in results)
     budgets = [r.mean_pruned_budget for r in results]
     mode = ("continuous/paged+prefix-share" if prefix_share
             else "continuous/paged" if paged else "wave/contiguous")
+    if n_calls > 1:
+        mode += f", persistent x{n_calls} calls"
     print(f"[serve] {cfg.name} ({mode}): {len(results)} requests, "
           f"{total_tokens} tokens in {wall:.1f}s "
           f"({total_tokens / wall:.1f} tok/s CPU-interpret)")
     print(f"[serve] mean Twilight pruned budget: {np.mean(budgets):.1f} "
           f"tokens (capacity {args.capacity})")
     if prefix_share:
-        print(f"[serve] prefix cache: {engine.last_prefix_hits} hits, "
-              f"{engine.last_prefix_tokens} prompt tokens reused, "
-              f"{engine.last_cow_copies} COW copies, "
-              f"{engine.last_evictions} evictions, "
-              f"{engine.last_prefill_chunks} prefill chunks")
+        print(f"[serve] prefix cache (session): "
+              f"{engine.session_prefix_hits} hits, "
+              f"{engine.session_prefix_tokens} prompt tokens reused, "
+              f"{engine.session_cow_copies} COW copies, "
+              f"{engine.session_evictions} evictions, "
+              f"{engine.session_prefill_chunks} prefill chunks")
+    if paged:
+        print(f"[serve] session: {engine.session_submitted} submitted, "
+              f"{engine.session_completed} completed, "
+              f"{engine.session_preemptions} preemptions")
     return total_tokens / wall
 
 
@@ -104,6 +127,12 @@ def main() -> None:
                          "(implies --paged; attention-only stacks)")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help="prepend the same N-token prefix to every request")
+    ap.add_argument("--calls", type=int, default=1,
+                    help="split the workload into N successive generate() "
+                         "calls against one persistent engine (paged only)")
+    ap.add_argument("--selector", default=None,
+                    help="override the Twilight selector (e.g. h2o — now "
+                         "paged-capable via per-page accumulated mass)")
     ap.add_argument("--compare", action="store_true",
                     help="run both schedulers on the same workload "
                          "(with --prefix-share: share-on vs share-off)")
@@ -111,6 +140,10 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.selector:
+        import dataclasses
+        cfg = cfg.replace(twilight=dataclasses.replace(
+            cfg.twilight, selector=args.selector))
     rng = np.random.default_rng(args.seed)
     reqs = _build_requests(cfg, args, rng)
 

@@ -21,7 +21,6 @@ materialized (``PrunerStats.weights`` is None on this path).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -289,6 +288,12 @@ def _attn_cache_init(cfg: ModelConfig, batch: int, n_max: int) -> Params:
         cache["pmax"] = jnp.zeros((batch, n_pages, hkv, dh), dtype)
         cache["pmin"] = jnp.zeros((batch, n_pages, hkv, dh), dtype)
         cache["ds_channels"] = jnp.zeros((hkv, 16), jnp.int32)
+        if tw.selector == "h2o":
+            # Page-granular accumulated attention mass: decode scatter-adds
+            # the pruner's post-top-p weights per page so the H2O selector
+            # can rank pages (the serving formulation of H2O — per-token
+            # mass has no home in a paged pool, per-page mass does).
+            cache["h2o_mass"] = jnp.zeros((batch, n_pages, hkv), jnp.float32)
     return cache
 
 
@@ -339,8 +344,38 @@ def _selection_ctx(cfg: ModelConfig, cache: Params, length: jax.Array
     qkeys = quant_lib.QuantizedTensor(
         packed=cache["qk_packed"], scale=cache["qk_scale"], zero=cache["qk_zero"])
     ctx = SelectionContext(keys=cache["k"], page_meta=pm, accum_scores=None,
-                           length=length, ds_channels=cache["ds_channels"])
+                           length=length, ds_channels=cache["ds_channels"],
+                           page_mass=cache.get("h2o_mass"))
     return ctx, qkeys
+
+
+def _h2o_mass_update(mass: jax.Array, tw_out, page_size: int,
+                     page_table: jax.Array | None = None,
+                     live: jax.Array | None = None) -> jax.Array:
+    """Fold one step's post-top-p weights into the page-mass accumulator.
+
+    ``mass`` is (b, n_pages, hkv) for contiguous caches or (num_pages, hkv)
+    physical-page keyed for the shared pool (``page_table`` set).  Kept
+    candidate slots contribute their group-max estimated weight to the page
+    their token lives in; dead engine slots (``live`` false) contribute
+    nothing real — their junk lands on the null page, which is never ranked.
+    """
+    if tw_out.slot_weights is None:
+        return mass  # prune disabled: no weights to accumulate
+    w = jnp.where(tw_out.pruned_valid, tw_out.slot_weights, 0.0)
+    page = tw_out.indices // page_size  # (b, hkv, m) logical pages
+    b, hkv, m = page.shape
+    if page_table is None:
+        b_idx = jnp.arange(b)[:, None, None]
+        h_idx = jnp.arange(hkv)[None, :, None]
+        return mass.at[b_idx, page, h_idx].add(w)
+    if live is not None:
+        w = jnp.where(live[:, None, None], w, 0.0)
+    pt = jnp.broadcast_to(page_table[:, None, :],
+                          (b, hkv, page_table.shape[1]))
+    phys = jnp.take_along_axis(pt, page, axis=2)  # (b, hkv, m) physical
+    h_idx = jnp.arange(hkv)[None, :, None]
+    return mass.at[phys, h_idx].add(w)
 
 
 def _attn_decode(bp: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
@@ -379,6 +414,9 @@ def _attn_decode(bp: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
     ctx, qkeys = _selection_ctx(cfg, cache, length)
     tw_out = twilight_decode_attention(
         q[:, 0], cache["k"], cache["v"], tw, ctx=ctx, qkeys=qkeys, length=length)
+    if "h2o_mass" in cache and tw_out.indices is not None:
+        cache["h2o_mass"] = _h2o_mass_update(cache["h2o_mass"], tw_out,
+                                             tw.page_size)
     out = tw_out.out.reshape(b, 1, cfg.n_heads * cfg.d_head) @ bp["wo"]
     budget = tw_out.stats.pruned_budget.astype(jnp.float32).mean()
     return out.astype(x.dtype), cache, budget
@@ -597,6 +635,12 @@ def _attn_pool_init(cfg: ModelConfig, batch: int, num_pages: int) -> Params:
         pool["pmax"] = jnp.zeros((num_pages, hkv, dh), dtype)
         pool["pmin"] = jnp.zeros((num_pages, hkv, dh), dtype)
         pool["ds_channels"] = jnp.zeros((batch, hkv, 16), jnp.int32)
+        if tw.selector == "h2o":
+            # Physical-page H2O mass: shared pages accumulate mass from
+            # every reader (prefix sharing pools the signal); pages are
+            # zeroed when (re)written fresh so recycled pages never carry a
+            # previous occupant's mass.
+            pool["h2o_mass"] = jnp.zeros((num_pages, hkv), jnp.float32)
     return pool
 
 
@@ -663,6 +707,10 @@ def write_prefill_slot(cfg: ModelConfig, state: Params, pstate: Params,
                 if name in pool:
                     new[name] = new[name].at[:, page_ids].set(
                         src[name][:, 0, :n_req])
+            if "h2o_mass" in pool:
+                # Fresh pages start with zero accumulated mass — recycled
+                # pages must not inherit a previous occupant's signal.
+                new["h2o_mass"] = new["h2o_mass"].at[:, page_ids].set(0.0)
             if "ds_channels" in pool:
                 new["ds_channels"] = new["ds_channels"].at[:, slot].set(
                     src["ds_channels"])
@@ -699,7 +747,7 @@ def copy_page(cfg: ModelConfig, state: Params, src_page: jax.Array,
                     pool[name], src_page * ps, ps, axis=1)
                 new[name] = jax.lax.dynamic_update_slice_in_dim(
                     pool[name], rows, dst_page * ps, axis=1)
-        for name in ("pmax", "pmin"):
+        for name in ("pmax", "pmin", "h2o_mass"):
             if name in pool:
                 row = jax.lax.dynamic_slice_in_dim(
                     pool[name], src_page, 1, axis=1)
@@ -793,6 +841,13 @@ def _attn_prefill_chunk(bp: Params, cfg: ModelConfig, h: jax.Array,
                 new_max.astype(cache["pmax"].dtype))
             cache["pmin"] = cache["pmin"].at[phys_p].set(
                 new_min.astype(cache["pmin"].dtype))
+            if "h2o_mass" in cache:
+                # Pages the chunk starts fresh drop any recycled mass; a
+                # partially-resident page (COW append) keeps the mass
+                # ``copy_page`` carried over from its source.
+                old_mass = jnp.take(cache["h2o_mass"], phys_p, axis=0)
+                cache["h2o_mass"] = cache["h2o_mass"].at[phys_p].set(
+                    jnp.where(fresh, 0.0, old_mass))
 
     k_log = gather_logical_rows(cache["k"], page_table[None], ps)
     v_log = gather_logical_rows(cache["v"], page_table[None], ps)
@@ -887,7 +942,8 @@ def _selection_ctx_paged(cfg: ModelConfig, cache: Params,
         zero=cache["qk_zero"])
     ctx = SelectionContext(keys=cache["k"], page_meta=pm, accum_scores=None,
                            length=length, ds_channels=cache["ds_channels"],
-                           page_table=page_table)
+                           page_table=page_table,
+                           page_mass=cache.get("h2o_mass"))
     return ctx, qkeys
 
 
@@ -931,12 +987,23 @@ def _attn_decode_paged(bp: Params, cfg: ModelConfig, x: jax.Array,
         new_min = jnp.where(fresh, k1, jnp.minimum(old_min, k1))
         cache["pmax"] = cache["pmax"].at[phys_page].set(new_max)
         cache["pmin"] = cache["pmin"].at[phys_page].set(new_min)
+        if "h2o_mass" in cache:
+            # A freshly-started page may be a recycled one: zero its mass
+            # before selection so a previous occupant's signal never leaks
+            # (matches the contiguous cache, whose rows init to zero).
+            old_mass = jnp.take(cache["h2o_mass"], phys_page, axis=0)
+            fresh_live = fresh[:, :, 0] & live[:, None]
+            cache["h2o_mass"] = cache["h2o_mass"].at[phys_page].set(
+                jnp.where(fresh_live, 0.0, old_mass))
 
     length = lengths + 1
     ctx, qkeys = _selection_ctx_paged(cfg, cache, page_table, length)
     tw_out = twilight_decode_attention(
         q[:, 0], cache["k"], cache["v"], tw, ctx=ctx, qkeys=qkeys,
         length=length)
+    if "h2o_mass" in cache and tw_out.indices is not None:
+        cache["h2o_mass"] = _h2o_mass_update(
+            cache["h2o_mass"], tw_out, ps, page_table=page_table, live=live)
     out = tw_out.out.reshape(b, 1, cfg.n_heads * cfg.d_head) @ bp["wo"]
     budget = tw_out.stats.pruned_budget.astype(jnp.float32).mean(axis=-1)
     return out.astype(x.dtype), cache, budget

@@ -1,4 +1,4 @@
-"""Serving engine: wave-batched (contiguous) and continuous (paged) decode.
+"""Serving engine: wave-batched (contiguous) and persistent continuous decode.
 
 Three scheduling modes around the same model:
 
@@ -9,13 +9,11 @@ Three scheduling modes around the same model:
   Waves are formed so that each request keeps ``cache_capacity -
   max_new_tokens`` of its *own* prompt — a long-prompt/short-generation
   request is no longer truncated by a wave mate's generation budget.
-* ``paged=True`` — **true continuous batching** over a shared page pool
-  (``repro.serving.paged_cache``): slots retire and admit new requests at
-  every decode step; each request owns only the KV pages its tokens fill
-  (prefill allocates ceil(len/page_size), decode allocates one page per
-  boundary crossing, retirement drops references).  Per-request
-  ``max_new_tokens``, ragged prompt lengths, and per-slot sampling modes
-  are all data; the jitted step is compiled once per
+* ``paged=True`` — **persistent continuous batching** over a shared page
+  pool (``repro.serving.paged_cache``): slots retire and admit new requests
+  at every decode step; each request owns only the KV pages its tokens fill.
+  Per-request ``max_new_tokens``, ragged prompt lengths, and per-slot
+  sampling modes are all data; the jitted step is compiled once per
   (batch, num_pages, max_pages) and reused.
 * ``paged=True, prefix_share=True`` — continuous batching plus **prefix
   sharing with copy-on-write pages and chunked prefill** (attention-only
@@ -23,33 +21,63 @@ Three scheduling modes around the same model:
   engine matches the longest page-aligned cached prefix in a radix tree
   (``repro.serving.prefix_cache``), takes shared references on those pages,
   and prefills only the suffix — in fixed-size chunks *interleaved with
-  decode steps*, so a long admission never stalls live decodes for more
-  than one chunk.  Chunk lengths are bucketed (powers of two in pages), so
-  the prefill jit cache holds a handful of signatures instead of one per
-  exact prompt length.  A fully-cached prompt re-runs only its last token
-  for logits; that write lands in a shared page and triggers copy-on-write
-  (``PageAllocator.cow`` + the device-side ``models.copy_page``).
-  Completed prompts are indexed back into the tree; pool pressure first
-  evicts cold refcount-1 tree pages (LRU) and only then preempts.
+  decode steps*.  A fully-cached prompt re-runs only its last token; that
+  write lands in a shared page and triggers copy-on-write.
+
+**Persistent sessions.**  A paged engine is a long-lived server object: the
+page pool, INT4 shadow, Quest metadata, per-slot DS channels, the
+``PageAllocator``, and the ``PrefixCache`` radix tree are *engine-lifetime*
+state, created on the first admission and reused across calls.  The
+streaming API is::
+
+    engine.submit(requests)   # enqueue; reclaims cold tree pages if dry
+    engine.step()             # one iteration: admit, prefill 1 chunk, decode
+    results = engine.drain()  # harvest finished requests (one host sync)
+    engine.reset()            # drop all session state, pool back to free
+
+``generate()`` is a thin wave-compat wrapper (submit + step-until-done +
+drain) — successive ``generate()`` calls against one engine therefore hit
+and extend the same radix tree, which is what makes the prefix cache pay on
+real traffic (per-call pools only helped requests inside one call).
+
+**Sampling is a per-request stream**: token ``j`` of request ``uid`` is
+drawn with ``fold_in(fold_in(base_key, uid), j)``, so a request's
+continuation is a pure function of its uid and emitted-token index — not of
+batch composition, scheduling, or preemption history.  This is what makes
+preempted *sampled* requests token-exact (see below) and paged results
+reproducible against a fresh engine.  Wave mode keeps its legacy per-step
+global stream.
 
 The decode loop stays async in all modes: sampling runs inside the jitted
 step, per-step token/budget frames stay on device, and the host fetches
-them ONCE after the queue drains.  Host-side work per step is pure
-bookkeeping (page allocation, admission, retirement) on numpy mirrors of
-the page table — never a device sync (the one exception: the prefix-share
-admission samples the first token from the prefill-chunk logits, exactly
-as the unshared path samples from its prefill logits).
+them in ONE sync per :meth:`drain` (frames still referenced by live slots
+are kept and rebased).  Host-side work per step is pure bookkeeping on
+numpy mirrors of the page table — never a device sync, with two documented
+exceptions: the prefix-share admission samples the first token from the
+prefill-chunk logits, and **preemption** syncs the victim's emitted tokens.
 
-When the pool runs dry mid-decode the engine preempts the most recently
-admitted victim by *restart*: its page references are dropped and the
-request is requeued at the front, to be re-served from its prompt (with
-prefix sharing the restart typically re-matches its own pages, making
-preemption cheap).  Reference counting makes preemption safe by
+**True recompute preemption.**  When the pool runs dry mid-decode the
+engine preempts the most recently admitted victim: its emitted tokens are
+synced to host once, its page references are dropped, and the request is
+requeued at the front carrying those tokens.  On re-admission the *prompt*
+is re-prefilled as usual (chunked ``prefill_chunk`` under prefix sharing —
+typically re-matching the victim's own still-cached pages — one-shot
+otherwise), and the generated tokens then **replay through teacher-forced
+decode steps**: the slot decodes normally but the sampled token is
+overridden by the next recorded one until the replay queue drains.  Forced
+decode is the only exact recompute — the original rows were written by the
+*pruned* decode path, and full-attention prefill over the same tokens
+produces measurably different K/V.  Because sampling is a per-request
+stream, the draw at the final forced position lands on exactly the key the
+unpreempted engine would have used — so preempted requests are token-exact
+whether greedy or sampled (the old restart-from-prompt redrew a sampled
+victim's continuation).  Reference counting makes preemption safe by
 construction: dropping the victim's references never reclaims a page the
-prefix cache or another live reader still holds.  For greedy requests the
-regenerated tokens are identical (asserted in ``tests/test_paged_cache.py``);
-sampled requests draw a fresh continuation.  Admission keeps one
-boundary-page of headroom per live slot to make preemption rare.
+prefix cache or another live reader still holds.  One H2O caveat: a
+victim's accumulated page mass is rebuilt by the replay steps themselves,
+but mass contributed by its pre-preemption steps to *evicted* pages is
+gone — H2O selection, an approximation signal to begin with, may therefore
+rank pages slightly differently after a preemption.
 """
 
 from __future__ import annotations
@@ -81,6 +109,9 @@ from repro.serving.sampler import sample_token
 
 Tree = Any
 
+_SESSION_COUNTERS = ("preemptions", "prefix_hits", "prefix_tokens",
+                     "cow_copies", "evictions", "prefill_chunks")
+
 
 @dataclasses.dataclass
 class Request:
@@ -102,6 +133,15 @@ class GenerationResult:
 
 
 @dataclasses.dataclass
+class _Pending:
+    """Queue entry: a request plus any tokens it already generated before a
+    preemption (replayed through prefill on re-admission)."""
+
+    req: Request
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
 class _SlotRun:
     """Host bookkeeping for one admitted request."""
 
@@ -110,11 +150,17 @@ class _SlotRun:
     pages: list[int]
     t_admit: float
     order: int  # admission sequence number (preemption picks the newest)
-    tok0: jax.Array | None = None  # () device scalar — sampled at prefill end
+    tok0: jax.Array | int | None = None  # pending token — sampled or replayed
     start_frame: int = 0  # first decode frame this slot participates in
     emitted: int = 0  # tokens sampled so far (tok0 included)
+    prior: list[int] = dataclasses.field(default_factory=list)
+    # Remaining teacher-forced tokens of a preempted request's replay (the
+    # decode loop overrides the sampled token with the next forced one
+    # until the queue drains — reproducing the *pruned* decode path that
+    # wrote these rows originally, which full-attention prefill cannot).
+    replay: deque[int] | None = None
     # Chunked-prefill progress (prefix-share mode only).
-    prompt: np.ndarray | None = None  # truncated prompt (tree key)
+    prompt: np.ndarray | None = None  # truncated prompt (+ replay) tree key
     matched: int = 0  # tokens reused from the prefix cache
     sfx_done: int = 0  # suffix tokens written so far
     ready: bool = True  # prefill complete — slot decodes
@@ -125,7 +171,11 @@ class _SlotRun:
 
 
 class DecodeEngine:
-    """Batched decode engine around (prefill, decode_step[_paged])."""
+    """Batched decode engine around (prefill, decode_step[_paged]).
+
+    Paged engines are persistent sessions — see the module docstring for
+    the ``submit``/``step``/``drain``/``reset`` lifecycle.
+    """
 
     def __init__(self, cfg: ModelConfig, params: Tree | None = None, *,
                  batch_size: int = 8, cache_capacity: int = 512, seed: int = 0,
@@ -146,11 +196,19 @@ class DecodeEngine:
         self.prefix_share = prefix_share
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else init_params(cfg, key)
-        self._sample_key = jax.random.PRNGKey(seed + 1)
+        self._sample_key = jax.random.PRNGKey(seed + 1)  # wave-mode stream
+        self._base_key = jax.random.PRNGKey(seed + 1)  # per-request streams
 
         self._prefill = jax.jit(
             lambda p, batch: prefill(p, cfg, batch, cache_capacity))
         self._decode = jax.jit(lambda p, st, tok: decode_step(p, cfg, st, tok))
+
+        # Per-call telemetry (reset by generate()) and session totals.
+        for name in _SESSION_COUNTERS:
+            setattr(self, "last_" + name, 0)
+            setattr(self, "session_" + name, 0)
+        self.session_submitted = 0
+        self.session_completed = 0
 
         if prefix_share and not paged:
             raise ValueError("prefix_share requires paged=True")
@@ -178,14 +236,21 @@ class DecodeEngine:
                     cfg, st, pst, slot, pages),
                 donate_argnums=(0,))
 
-            def _step_fn(p, state, tok, pt, lengths, live, greedy, key):
+            def _step_fn(p, state, tok, pt, lengths, live, greedy, uids,
+                         emitted, base_key):
                 logits, state, stats = decode_step_paged(
                     p, cfg, state, tok, pt, lengths, live)
-                nxt = sample_token(key, logits[:, :cfg.vocab_size],
-                                   greedy=greedy)
+                lg = logits[:, :cfg.vocab_size]
+
+                def samp(uid, e, row, g):
+                    k = jax.random.fold_in(
+                        jax.random.fold_in(base_key, uid), e)
+                    return sample_token(k, row[None], greedy=g)[0]
+
+                nxt = jax.vmap(samp)(uids, emitted, lg, greedy)
                 return nxt, state, stats["pruned_budget"]
 
-            self._step = jax.jit(_step_fn, donate_argnums=(1,))
+            self._step_jit = jax.jit(_step_fn, donate_argnums=(1,))
 
             if prefix_share:
                 if not supports_chunked_prefill(cfg):
@@ -204,12 +269,78 @@ class DecodeEngine:
                     lambda st, src, dst: copy_page(cfg, st, src, dst),
                     donate_argnums=(0,))
 
+            # Engine-lifetime session state, created on first submit()
+            # (the audio encoder length is only known from real requests).
+            self._alloc: PageAllocator | None = None
+            self._tree: PrefixCache | None = None
+            self._state = None  # device pytree: pools + mixer states
+            self._n_enc = 0
+            self._order = 0
+            self._pending: deque[_Pending] = deque()
+            self._slots: list[_SlotRun | None] = [None] * batch_size
+            self._done: list[tuple[_SlotRun, float]] = []
+            self._results: list[GenerationResult] = []
+            self._tok_frames: list[jax.Array] = []
+            self._budget_frames: list[jax.Array] = []
+
     # -- dispatch -----------------------------------------------------------
 
     def generate(self, requests: list[Request]) -> list[GenerationResult]:
-        """Serve requests: continuous batching when paged, else waves."""
+        """Serve requests: continuous batching when paged, else waves.
+
+        On a paged engine this is a thin wrapper over the persistent
+        ``submit``/``step``/``drain`` session — the pool and prefix tree
+        survive between calls, so later calls hit earlier calls' prefixes.
+        """
         if self.paged:
-            return self._serve_continuous(requests)
+            for name in _SESSION_COUNTERS:
+                setattr(self, "last_" + name, 0)
+            if not requests:
+                return []
+            uids = {r.uid for r in requests}
+            if len(uids) != len(requests):
+                raise ValueError("duplicate uids in one generate() call")
+
+            def counts() -> dict[int, int]:
+                # Host bookkeeping only — no device sync until the single
+                # drain() below.
+                c: dict[int, int] = {}
+                for run, _ in self._done:
+                    c[run.req.uid] = c.get(run.req.uid, 0) + 1
+                for r in self._results:
+                    c[r.uid] = c.get(r.uid, 0) + 1
+                return c
+
+            # Completion = one MORE finished result per uid than before
+            # this call, so a stale undrained result buffered under the
+            # same uid (submit()/drain() interleaving) can't satisfy it.
+            base = counts()
+            self.submit(requests)
+            while True:
+                have = counts()
+                if all(have.get(u, 0) > base.get(u, 0) for u in uids):
+                    break
+                if not self.busy():
+                    raise RuntimeError(
+                        "engine idle with requests unaccounted for")
+                self.step()
+            out = self.drain(uids)
+            if not any(base.get(u, 0) for u in uids):
+                return out
+            # A reused uid with an undrained pre-call result (streaming /
+            # wrapper mix): return only this call's results — stale ones
+            # stay buffered for a later drain().  drain() lists buffered
+            # results before newly-finished ones, so the first base[u]
+            # per uid are the stale ones.
+            seen: dict[int, int] = {}
+            mine: list[GenerationResult] = []
+            for r in out:
+                seen[r.uid] = seen.get(r.uid, 0) + 1
+                if seen[r.uid] > base.get(r.uid, 0):
+                    mine.append(r)
+                else:
+                    self._results.append(r)
+            return mine
         results: list[GenerationResult] = []
         queue = list(requests)
         while queue:
@@ -309,7 +440,87 @@ class DecodeEngine:
             ))
         return results
 
-    # -- continuous mode (paged pool) ---------------------------------------
+    # -- continuous mode: persistent session --------------------------------
+
+    def _bump(self, name: str, n: int = 1) -> None:
+        setattr(self, "last_" + name, getattr(self, "last_" + name) + n)
+        setattr(self, "session_" + name,
+                getattr(self, "session_" + name) + n)
+
+    def _ensure_session(self, requests: list[Request]) -> None:
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            n_enc = len(requests[0].extras["frames"])
+            if any(len(r.extras["frames"]) != n_enc for r in requests):
+                raise ValueError("audio requests must share a frame length")
+            if self._alloc is not None and n_enc != self._n_enc:
+                raise ValueError(
+                    f"audio frame length {n_enc} differs from the session's "
+                    f"{self._n_enc} — call reset() first")
+            self._n_enc = n_enc
+        if self._alloc is not None:
+            return
+        b = self.batch_size
+        self._alloc = PageAllocator(self.num_pages)
+        self._tree = (PrefixCache(cfg.twilight.page_size, self._alloc)
+                      if self.prefix_share else None)
+        self._state = init_paged_decode_state(cfg, b, self.num_pages,
+                                              n_enc=self._n_enc)
+        self._pt = np.zeros((b, self.max_pages), np.int32)
+        self._lengths = np.zeros((b,), np.int32)
+        self._live = np.zeros((b,), bool)
+        self._greedy = np.ones((b,), bool)
+        self._uids = np.zeros((b,), np.int32)
+        self._emitted = np.zeros((b,), np.int32)
+        self._cur_tok = jnp.zeros((b,), jnp.int32)
+
+    def busy(self) -> bool:
+        """True while the session holds queued or in-flight requests."""
+        if not self.paged or self._alloc is None:
+            return False
+        return bool(self._pending) or any(r is not None for r in self._slots)
+
+    def submit(self, requests: list[Request]) -> None:
+        """Enqueue requests on the persistent session (paged engines only).
+
+        If the pool is dry — a steady state for a long-lived engine whose
+        free pages have all been absorbed by the prefix tree — cold
+        refcount-1 tree pages are reclaimed here, ahead of admission, so
+        the new work starts by recycling cache instead of falling straight
+        through to preemption (eviction previously ran only inside the
+        admission pressure path).
+        """
+        if not self.paged:
+            raise ValueError("submit()/step()/drain() require paged=True — "
+                             "wave mode serves via generate()")
+        if not requests:
+            return
+        self._ensure_session(requests)
+        for r in requests:
+            self._pending.append(_Pending(req=r))
+        self.session_submitted += len(requests)
+        if self._tree is not None and self._alloc.available == 0:
+            head = self._pending[0].req
+            want = pages_for(len(head.prompt) + 1, self.cfg.twilight.page_size)
+            self._bump("evictions", self._tree.evict(want))
+
+    def _reclaim(self, want: int) -> None:
+        """Pool pressure: evict cold prefix-cache pages before anything
+        drastic.  No-op when sharing is off or the tree has no refcount-1
+        pages."""
+        if self._tree is not None and want > 0:
+            self._bump("evictions", self._tree.evict(want))
+
+    def _sample_req(self, logits_row: jax.Array, req: Request,
+                    idx: int) -> jax.Array:
+        """Draw token ``idx`` of ``req``'s per-request sampling stream.
+
+        The uid is folded mod 2^31-1 — the same mapping the jitted step
+        applies to its i32 uid array — so the admission-time draw and the
+        in-step draws belong to one stream."""
+        k = jax.random.fold_in(
+            jax.random.fold_in(self._base_key, req.uid % (2 ** 31 - 1)), idx)
+        return sample_token(k, logits_row[None], greedy=req.greedy)[0]
 
     def _batch_one(self, req: Request, prompt: np.ndarray) -> dict:
         batch = {"tokens": jnp.asarray(prompt[None])}
@@ -318,10 +529,6 @@ class DecodeEngine:
         elif self.cfg.frontend == "vision":
             batch["patches"] = jnp.asarray(req.extras["patches"][None])
         return batch
-
-    def _sample_one(self, logits_row: jax.Array, greedy: bool) -> jax.Array:
-        self._sample_key, k = jax.random.split(self._sample_key)
-        return sample_token(k, logits_row[None], greedy=greedy)[0]
 
     def _chunk_bucket(self, n: int) -> int:
         """Smallest power-of-two multiple of page_size >= n tokens, capped
@@ -345,311 +552,406 @@ class DecodeEngine:
         keep = cap - req.max_new_tokens  # >= 1
         return prompt[-keep:] if len(prompt) > keep else prompt
 
-    def _serve_continuous(self, requests: list[Request]
-                          ) -> list[GenerationResult]:
-        # Telemetry, inspected by tests/benchmarks.
-        self.last_preemptions = 0
-        self.last_prefix_hits = 0  # admissions that reused cached pages
-        self.last_prefix_tokens = 0  # prompt tokens served from the cache
-        self.last_cow_copies = 0  # shared pages copied before a write
-        self.last_evictions = 0  # tree pages reclaimed under pressure
-        self.last_prefill_chunks = 0
-        if not requests:
-            return []
+    def _sync_generated(self, run: _SlotRun) -> list[int]:
+        """Host-sync every token ``run`` has emitted so far — the one
+        mid-loop device sync, paid once per preemption.
+
+        ``prior + [tok0]`` covers everything up to the resumption point (a
+        run preempted again mid-replay simply re-carries its full original
+        list — the frame range below is empty then); real sampled frames
+        follow from ``start_frame``."""
+        if run.tok0 is None:
+            return list(run.prior)
+        toks = list(run.prior) + [int(np.asarray(run.tok0))]
+        n_frames = run.emitted - len(run.prior) - 1
+        if n_frames > 0:
+            frames = self._tok_frames[run.start_frame:
+                                      run.start_frame + n_frames]
+            toks.extend(np.asarray(jnp.stack(frames))[:, run.slot].tolist())
+        return toks
+
+    def _go_live(self, run: _SlotRun, s_total: int) -> None:
+        slot = run.slot
+        run.ready = True
+        run.emitted = 1  # the pending token (sampled tok0 or first replay)
+        run.start_frame = len(self._tok_frames)
+        if self._tree is not None and run.prompt is not None:
+            ps = self.cfg.twilight.page_size
+            self._tree.insert(run.prompt,
+                              run.pages[:len(run.prompt) // ps])
+        if run.req.max_new_tokens <= len(run.prior) + 1:
+            # Fresh max_new=1 request — or a replay that already covers the
+            # whole budget: everything to emit is known, retire instantly.
+            self._alloc.free(run.pages)
+            self._slots[slot] = None
+            self._pt[slot] = 0
+            self._done.append((run, time.time()))
+            self.session_completed += 1
+            return
+        self._lengths[slot] = s_total
+        self._live[slot] = True
+        self._greedy[slot] = run.req.greedy
+        self._uids[slot] = run.req.uid % (2 ** 31 - 1)
+        self._emitted[slot] = run.emitted
+        cur = run.replay[0] if run.replay else run.tok0
+        self._cur_tok = self._cur_tok.at[slot].set(cur)
+
+    def _admit(self, slot: int) -> bool:
+        """Unshared admission: one-shot contiguous prefill of the *prompt*
+        scattered into freshly-allocated pages (the token-exactness oracle
+        for the prefix-share path).  A preempted request's generated tokens
+        are NOT prefilled — they replay through teacher-forced decode
+        steps, because the original rows were written by the *pruned*
+        decode path and full-attention prefill would recompute them
+        differently."""
         cfg = self.cfg
         ps = cfg.twilight.page_size
         prefix = cfg.n_prefix_tokens if cfg.frontend == "vision" else 0
+        pend = self._pending[0]
+        req = pend.req
+        prompt = self._truncate(req, prefix)
+        s_total = len(prompt) + prefix
+        worst = pages_for(s_total + req.max_new_tokens, ps)
+        if worst > self._alloc.capacity:
+            raise ValueError(
+                f"request {req.uid} needs {worst} pages; pool has "
+                f"{self._alloc.capacity} — raise num_pages")
+        n_req = pages_for(s_total, ps)
+        live_count = sum(1 for r in self._slots if r is not None)
+        # Alone, a request is admitted only if its worst case fits (it
+        # then completes without preemption — no livelock); alongside
+        # live slots, keep one boundary page of headroom per slot.
+        need = worst if live_count == 0 else n_req + live_count
+        if self._alloc.available < need:
+            return False
+        self._pending.popleft()
+        pages = self._alloc.alloc(n_req)
+        logits, pstate = self._prefill_paged(
+            self.params, self._batch_one(req, prompt))
+        self._state = self._write(self._state, pstate, jnp.int32(slot),
+                                  jnp.asarray(pages, jnp.int32))
+        if pend.generated:
+            tok0: jax.Array | int = pend.generated[-1]
+            prior = pend.generated[:-1]
+            replay = deque(pend.generated)
+        else:
+            tok0 = self._sample_req(
+                logits[0, s_total - 1, :cfg.vocab_size], req, 0)
+            prior, replay = [], None
+        run = _SlotRun(req=req, slot=slot, pages=pages, tok0=tok0,
+                       t_admit=time.time(), order=self._order, prior=prior,
+                       replay=replay)
+        self._order += 1
+        self._slots[slot] = run
+        self._pt[slot, :n_req] = pages
+        self._pt[slot, n_req:] = 0
+        self._go_live(run, s_total)
+        return True
+
+    def _admit_shared(self, slot: int, use_cache: bool = True) -> bool:
+        """Prefix-share admission: match the longest page-aligned cached
+        prefix, take shared references, and stage the suffix for chunked
+        prefill.  A fully-cached prompt keeps its last token as the suffix
+        (its logits seed sampling); that token's write hits a shared page,
+        which is exactly the copy-on-write append.  A preempted request's
+        prompt typically re-matches its own still-cached pages; its
+        generated tokens then replay through teacher-forced decode steps
+        (see :meth:`_admit`)."""
+        cfg = self.cfg
+        ps = cfg.twilight.page_size
+        pend = self._pending[0]
+        req = pend.req
+        prompt = self._truncate(req, 0)
+        s_total = len(prompt)
+        worst = pages_for(s_total + req.max_new_tokens, ps)
+        if worst > self._alloc.capacity:
+            raise ValueError(
+                f"request {req.uid} needs {worst} pages; pool has "
+                f"{self._alloc.capacity} — raise num_pages")
+        pages_m, matched = (self._tree.match(prompt) if use_cache
+                            else ([], 0))
+        cow = False
+        if matched == s_total:
+            matched -= 1  # re-run the last token for its logits
+            cow = True
+        n_new = pages_for(s_total, ps) - len(pages_m) + (1 if cow else 0)
+        live_count = sum(1 for r in self._slots if r is not None)
+        need = (worst - len(pages_m) + (1 if cow else 0)
+                if live_count == 0 else n_new + live_count)
+        if self._alloc.available < need:
+            self._reclaim(need - self._alloc.available)
+        if self._alloc.available < need:
+            if pages_m:
+                self._alloc.free(pages_m)
+            if live_count == 0 and use_cache:
+                # Alone and still short: the match itself may pin the
+                # pool (e.g. worst == capacity and the COW page cannot
+                # fit).  Retry cold — eviction can then reclaim
+                # everything, and worst <= capacity guarantees admission.
+                return self._admit_shared(slot, use_cache=False)
+            return False
+        self._pending.popleft()
+        if matched:
+            self._bump("prefix_hits")
+            self._bump("prefix_tokens", matched)
+        if cow:
+            src = pages_m[-1]
+            new, copied = self._alloc.cow(src)
+            if copied:
+                self._state = self._copy_page(self._state, jnp.int32(src),
+                                              jnp.int32(new))
+                self._bump("cow_copies")
+            pages_m = pages_m[:-1] + [new]
+        run = _SlotRun(req=req, slot=slot, pages=list(pages_m),
+                       t_admit=time.time(), order=self._order, prompt=prompt,
+                       matched=matched, ready=False,
+                       prior=pend.generated[:-1],
+                       tok0=(pend.generated[-1] if pend.generated else None),
+                       replay=(deque(pend.generated) if pend.generated
+                               else None))
+        self._order += 1
+        self._slots[slot] = run
+        self._pt[slot, :len(run.pages)] = run.pages
+        self._pt[slot, len(run.pages):] = 0
+        self._lengths[slot] = 0
+        self._live[slot] = False
+        return True
+
+    def _retire(self, slot: int, preempted: bool = False) -> None:
+        run = self._slots[slot]
+        if preempted:
+            # True recompute preemption: carry the emitted tokens back to
+            # the queue (host-synced here) so re-admission replays them.
+            self._pending.appendleft(
+                _Pending(req=run.req, generated=self._sync_generated(run)))
+        self._alloc.free(run.pages)
+        self._slots[slot] = None
+        self._live[slot] = False
+        self._pt[slot] = 0
+        self._lengths[slot] = 0
+        # Reset the sampling mode so a freed slot doesn't carry its
+        # previous occupant's mode into the jitted step before
+        # re-admission (greedy is the junk-safe default: no stray
+        # top-p draw for a dead slot).
+        self._greedy[slot] = True
+        self._uids[slot] = 0
+        self._emitted[slot] = 0
+        if not preempted:
+            self._done.append((run, time.time()))
+            self.session_completed += 1
+
+    def _preempt_for_page(self, needy: int) -> None:
+        victims = [r for r in (self._slots[s] for s in range(self.batch_size))
+                   if r is not None and r.slot != needy]
+        victim = (max(victims, key=lambda r: r.order).slot
+                  if victims else needy)
+        self._bump("preemptions")
+        self._retire(victim, preempted=True)
+
+    def _ensure_pages(self, need: int, needy: int) -> bool:
+        """Make ``need`` pages available for slot ``needy``: evict cold
+        tree pages first, then preempt newest-first — re-trying eviction
+        after every preemption, since retiring a victim whose pages are
+        tree-shared frees nothing directly but exposes those pages for
+        reclaim.  Returns False if ``needy`` itself was preempted (last
+        resort)."""
+        if self._alloc.available < need:
+            self._reclaim(need - self._alloc.available)
+        while self._alloc.available < need:
+            self._preempt_for_page(needy)
+            if self._alloc.available < need:
+                self._reclaim(need - self._alloc.available)
+            if self._slots[needy] is None:
+                return False
+        return True
+
+    def _advance_prefill(self, run: _SlotRun) -> None:
+        """Write one (bucketed) chunk of ``run``'s suffix into pool pages;
+        completing the suffix flips the slot live (sampling tok0 from the
+        chunk logits, unless a replayed token is already pending)."""
+        cfg = self.cfg
+        ps = cfg.twilight.page_size
+        slot = run.slot
+        start = run.matched + run.sfx_done
+        remaining = run.suffix_len - run.sfx_done
+        n_valid = min(remaining, self.chunk_tokens)
+        c = self._chunk_bucket(n_valid)  # >= n_valid by construction
+        need = pages_for(start + n_valid, ps) - len(run.pages)
+        if need > 0:
+            if (not self._ensure_pages(need, slot)
+                    or self._slots[slot] is not run):
+                return  # self-preempted
+            new_pages = self._alloc.alloc(need)
+            self._pt[slot, len(run.pages):len(run.pages) + need] = new_pages
+            run.pages.extend(new_pages)
+        toks = np.zeros((c,), np.int32)
+        toks[:n_valid] = run.prompt[start:start + n_valid]
+        is_last = run.sfx_done + n_valid >= run.suffix_len
+        logits, self._state = self._chunk(
+            self.params, self._state, jnp.asarray(toks),
+            jnp.asarray(self._pt[slot]), jnp.int32(slot), jnp.int32(start),
+            jnp.int32(n_valid), jnp.asarray(is_last))
+        self._bump("prefill_chunks")
+        run.sfx_done += n_valid
+        if run.sfx_done >= run.suffix_len:
+            if run.tok0 is None:
+                run.tok0 = self._sample_req(
+                    logits[0, n_valid - 1, :cfg.vocab_size], run.req, 0)
+            self._go_live(run, len(run.prompt))
+
+    def step(self) -> int:
+        """One engine iteration: admit into free slots, advance one
+        prefilling slot by one chunk, allocate boundary pages, run one
+        jitted decode step, retire finished slots.  Returns the number of
+        finished requests awaiting :meth:`drain`."""
+        if not self.paged:
+            raise ValueError("step() requires paged=True")
+        if self._alloc is None:
+            return 0
         b = self.batch_size
-        n_enc = 0
-        if cfg.frontend == "audio":
-            n_enc = len(requests[0].extras["frames"])
-            if any(len(r.extras["frames"]) != n_enc for r in requests):
-                raise ValueError("audio requests must share a frame length")
-
-        alloc = PageAllocator(self.num_pages)
-        tree = PrefixCache(ps, alloc) if self.prefix_share else None
-        state = init_paged_decode_state(cfg, b, self.num_pages, n_enc=n_enc)
-        pt = np.zeros((b, self.max_pages), np.int32)
-        lengths = np.zeros((b,), np.int32)
-        live = np.zeros((b,), bool)
-        greedy = np.ones((b,), bool)
-        slots: list[_SlotRun | None] = [None] * b
-        pending: deque[Request] = deque(requests)
-        cur_tok = jnp.zeros((b,), jnp.int32)
-        tok_frames: list[jax.Array] = []  # (b,) per step, stay on device
-        budget_frames: list[jax.Array] = []
-        done: list[tuple[_SlotRun, float]] = []  # (run, retire time)
-        order = 0
-
-        def reclaim(want: int) -> None:
-            """Pool pressure: evict cold prefix-cache pages before anything
-            drastic.  No-op when sharing is off or the tree has no
-            refcount-1 pages."""
-            if tree is not None and want > 0:
-                self.last_evictions += tree.evict(want)
-
-        def go_live(run: _SlotRun, s_total: int) -> None:
-            nonlocal cur_tok
-            slot = run.slot
-            run.ready = True
-            run.emitted = 1
-            run.start_frame = len(tok_frames)
-            if tree is not None and run.prompt is not None:
-                tree.insert(run.prompt, run.pages[:len(run.prompt) // ps])
-            if run.req.max_new_tokens <= 1:
-                alloc.free(run.pages)
-                slots[slot] = None
-                pt[slot] = 0
-                done.append((run, time.time()))
-                return
-            lengths[slot] = s_total
-            live[slot] = True
-            greedy[slot] = run.req.greedy
-            cur_tok = cur_tok.at[slot].set(run.tok0)
-
-        def admit(slot: int) -> bool:
-            """Unshared admission: one-shot contiguous prefill scattered
-            into freshly-allocated pages (the token-exactness oracle for
-            the prefix-share path)."""
-            nonlocal state, order
-            req = pending[0]
-            prompt = self._truncate(req, prefix)
-            s_total = len(prompt) + prefix
-            worst = pages_for(s_total + req.max_new_tokens, ps)
-            if worst > alloc.capacity:
-                raise ValueError(
-                    f"request {req.uid} needs {worst} pages; pool has "
-                    f"{alloc.capacity} — raise num_pages")
-            n_req = pages_for(s_total, ps)
-            live_count = sum(1 for r in slots if r is not None)
-            # Alone, a request is admitted only if its worst case fits (it
-            # then completes without preemption — no livelock); alongside
-            # live slots, keep one boundary page of headroom per slot.
-            need = worst if live_count == 0 else n_req + live_count
-            if alloc.available < need:
-                return False
-            pending.popleft()
-            pages = alloc.alloc(n_req)
-            logits, pstate = self._prefill_paged(
-                self.params, self._batch_one(req, prompt))
-            state = self._write(state, pstate, jnp.int32(slot),
-                                jnp.asarray(pages, jnp.int32))
-            tok0 = self._sample_one(logits[0, s_total - 1, :cfg.vocab_size],
-                                    req.greedy)
-            run = _SlotRun(req=req, slot=slot, pages=pages, tok0=tok0,
-                           t_admit=time.time(), order=order)
-            order += 1
-            slots[slot] = run
-            pt[slot, :n_req] = pages
-            pt[slot, n_req:] = 0
-            go_live(run, s_total)
-            return True
-
-        def admit_shared(slot: int, use_cache: bool = True) -> bool:
-            """Prefix-share admission: match the longest page-aligned
-            cached prefix, take shared references, and stage the suffix for
-            chunked prefill.  A fully-cached prompt keeps its last token as
-            the suffix (its logits seed sampling); that token's write hits
-            a shared page, which is exactly the copy-on-write append."""
-            nonlocal state, order
-            req = pending[0]
-            prompt = self._truncate(req, prefix)
-            s_total = len(prompt)
-            worst = pages_for(s_total + req.max_new_tokens, ps)
-            if worst > alloc.capacity:
-                raise ValueError(
-                    f"request {req.uid} needs {worst} pages; pool has "
-                    f"{alloc.capacity} — raise num_pages")
-            pages_m, matched = (tree.match(prompt) if use_cache
-                                else ([], 0))
-            cow = False
-            if matched == s_total:
-                matched -= 1  # re-run the last token for its logits
-                cow = True
-            n_new = pages_for(s_total, ps) - len(pages_m) + (1 if cow else 0)
-            live_count = sum(1 for r in slots if r is not None)
-            need = (worst - len(pages_m) + (1 if cow else 0)
-                    if live_count == 0 else n_new + live_count)
-            if alloc.available < need:
-                reclaim(need - alloc.available)
-            if alloc.available < need:
-                if pages_m:
-                    alloc.free(pages_m)
-                if live_count == 0 and use_cache:
-                    # Alone and still short: the match itself may pin the
-                    # pool (e.g. worst == capacity and the COW page cannot
-                    # fit).  Retry cold — eviction can then reclaim
-                    # everything, and worst <= capacity guarantees admission.
-                    return admit_shared(slot, use_cache=False)
-                return False
-            pending.popleft()
-            if matched:
-                self.last_prefix_hits += 1
-                self.last_prefix_tokens += matched
-            if cow:
-                src = pages_m[-1]
-                new, copied = alloc.cow(src)
-                if copied:
-                    state = self._copy_page(state, jnp.int32(src),
-                                            jnp.int32(new))
-                    self.last_cow_copies += 1
-                pages_m = pages_m[:-1] + [new]
-            run = _SlotRun(req=req, slot=slot, pages=list(pages_m),
-                           t_admit=time.time(), order=order, prompt=prompt,
-                           matched=matched, ready=False)
-            order += 1
-            slots[slot] = run
-            pt[slot, :len(run.pages)] = run.pages
-            pt[slot, len(run.pages):] = 0
-            lengths[slot] = 0
-            live[slot] = False
-            return True
-
-        def retire(slot: int, preempted: bool = False) -> None:
-            run = slots[slot]
-            alloc.free(run.pages)
-            slots[slot] = None
-            live[slot] = False
-            pt[slot] = 0
-            lengths[slot] = 0
-            # Reset the sampling mode so a freed slot doesn't carry its
-            # previous occupant's mode into the jitted step before
-            # re-admission (greedy is the junk-safe default: no stray
-            # top-p draw for a dead slot).
-            greedy[slot] = True
-            if preempted:
-                pending.appendleft(run.req)
-            else:
-                done.append((run, time.time()))
-
-        def preempt_for_page(needy: int) -> None:
-            victims = [r for r in (slots[s] for s in range(b))
-                       if r is not None and r.slot != needy]
-            victim = (max(victims, key=lambda r: r.order).slot
-                      if victims else needy)
-            self.last_preemptions += 1
-            retire(victim, preempted=True)
-
-        def ensure_pages(need: int, needy: int) -> bool:
-            """Make ``need`` pages available for slot ``needy``: evict cold
-            tree pages first, then preempt newest-first — re-trying
-            eviction after every preemption, since retiring a victim whose
-            pages are tree-shared frees nothing directly but exposes those
-            pages for reclaim.  Returns False if ``needy`` itself was
-            preempted (last resort)."""
-            if alloc.available < need:
-                reclaim(need - alloc.available)
-            while alloc.available < need:
-                preempt_for_page(needy)
-                if alloc.available < need:
-                    reclaim(need - alloc.available)
-                if slots[needy] is None:
-                    return False
-            return True
-
-        def advance_prefill(run: _SlotRun) -> None:
-            """Write one (bucketed) chunk of ``run``'s suffix into pool
-            pages; completing the suffix samples tok0 and flips the slot
-            live."""
-            nonlocal state
-            slot = run.slot
-            start = run.matched + run.sfx_done
-            remaining = run.suffix_len - run.sfx_done
-            n_valid = min(remaining, self.chunk_tokens)
-            c = self._chunk_bucket(n_valid)  # >= n_valid by construction
-            need = pages_for(start + n_valid, ps) - len(run.pages)
-            if need > 0:
-                if not ensure_pages(need, slot) or slots[slot] is not run:
-                    return  # self-preempted
-                new_pages = alloc.alloc(need)
-                pt[slot, len(run.pages):len(run.pages) + need] = new_pages
-                run.pages.extend(new_pages)
-            toks = np.zeros((c,), np.int32)
-            toks[:n_valid] = run.prompt[start:start + n_valid]
-            is_last = run.sfx_done + n_valid >= run.suffix_len
-            logits, state = self._chunk(
-                self.params, state, jnp.asarray(toks),
-                jnp.asarray(pt[slot]), jnp.int32(slot), jnp.int32(start),
-                jnp.int32(n_valid), jnp.asarray(is_last))
-            self.last_prefill_chunks += 1
-            run.sfx_done += n_valid
-            if run.sfx_done >= run.suffix_len:
-                run.tok0 = self._sample_one(
-                    logits[0, n_valid - 1, :cfg.vocab_size], run.req.greedy)
-                go_live(run, len(run.prompt))
-
-        while pending or any(r is not None for r in slots):
-            # Admission: fill every free slot while the queue and pool allow
-            # (an instantly-retired max_new=1 request frees its slot again).
-            slot = 0
-            while pending and slot < b:
-                if slots[slot] is None:
-                    ok = (admit_shared(slot) if self.prefix_share
-                          else admit(slot))
-                    if not ok:
-                        break
-                    if slots[slot] is None:
-                        continue
-                slot += 1
-            # Advance ONE prefilling slot by one chunk, oldest first —
-            # interleaving admission work with decode steps bounds the
-            # decode stall a long admission can cause to one chunk.
-            prefilling = [r for r in slots if r is not None and not r.ready]
-            if prefilling:
-                advance_prefill(min(prefilling, key=lambda r: r.order))
-            if not any(live):
-                if pending or any(r is not None for r in slots):
-                    # Nothing decodable yet: either prefills are still in
-                    # flight or admission stalls transiently after mass
-                    # preemption; loop.
+        ps = self.cfg.twilight.page_size
+        # Admission: fill every free slot while the queue and pool allow
+        # (an instantly-retired max_new=1 request frees its slot again).
+        slot = 0
+        while self._pending and slot < b:
+            if self._slots[slot] is None:
+                ok = (self._admit_shared(slot) if self.prefix_share
+                      else self._admit(slot))
+                if not ok:
+                    break
+                if self._slots[slot] is None:
                     continue
-                break
-            # Boundary pages for this step's appends.
-            for slot in range(b):
-                if live[slot] and lengths[slot] % ps == 0:
-                    if not ensure_pages(1, slot) or not live[slot]:
-                        continue  # self-preempted (last resort)
-                    page = alloc.alloc(1)[0]
-                    slots[slot].pages.append(page)
-                    pt[slot, lengths[slot] // ps] = page
-            if not any(live):
+            slot += 1
+        # Advance ONE prefilling slot by one chunk, oldest first —
+        # interleaving admission work with decode steps bounds the decode
+        # stall a long admission can cause to one chunk.
+        prefilling = [r for r in self._slots if r is not None and not r.ready]
+        if prefilling:
+            self._advance_prefill(min(prefilling, key=lambda r: r.order))
+        if not any(self._live):
+            return len(self._done) + len(self._results)
+        # Boundary pages for this step's appends.
+        for slot in range(b):
+            if self._live[slot] and self._lengths[slot] % ps == 0:
+                if not self._ensure_pages(1, slot) or not self._live[slot]:
+                    continue  # self-preempted (last resort)
+                page = self._alloc.alloc(1)[0]
+                self._slots[slot].pages.append(page)
+                self._pt[slot, self._lengths[slot] // ps] = page
+        if not any(self._live):
+            return len(self._done) + len(self._results)
+        # One jitted step for the whole batch; dead slots compute junk
+        # into the null page.
+        self._cur_tok, self._state, budget = self._step_jit(
+            self.params, self._state, self._cur_tok, jnp.asarray(self._pt),
+            jnp.asarray(self._lengths), jnp.asarray(self._live),
+            jnp.asarray(self._greedy), jnp.asarray(self._uids),
+            jnp.asarray(self._emitted), self._base_key)
+        self._tok_frames.append(self._cur_tok)
+        self._budget_frames.append(budget)
+        for slot in range(b):
+            if not self._live[slot]:
                 continue
-            # One jitted step for the whole batch; dead slots compute junk
-            # into the null page.
-            self._sample_key, k = jax.random.split(self._sample_key)
-            cur_tok, state, budget = self._step(
-                self.params, state, cur_tok, jnp.asarray(pt),
-                jnp.asarray(lengths), jnp.asarray(live), jnp.asarray(greedy),
-                k)
-            tok_frames.append(cur_tok)
-            budget_frames.append(budget)
-            for slot in range(b):
-                if not live[slot]:
+            self._lengths[slot] += 1
+            run = self._slots[slot]
+            run.emitted += 1
+            self._emitted[slot] = run.emitted
+            if run.replay:
+                # Teacher-forced replay of a preempted request: the token
+                # just written came off the queue; while more remain,
+                # override the sampled token with the next forced one.
+                # (The per-request key stream makes the draw at the final
+                # forced position land exactly where the oracle's would.)
+                run.replay.popleft()
+                if run.replay:
+                    self._cur_tok = self._cur_tok.at[slot].set(
+                        run.replay[0])
+                    run.start_frame = len(self._tok_frames)
                     continue
-                lengths[slot] += 1
-                run = slots[slot]
-                run.emitted += 1
-                if run.emitted >= run.req.max_new_tokens:
-                    retire(slot)
+                run.replay = None
+            if run.emitted >= run.req.max_new_tokens:
+                self._retire(slot)
+        return len(self._done) + len(self._results)
 
-        # Single host sync: fetch every decode frame at once.
-        toks = (np.stack([np.asarray(t) for t in tok_frames])
-                if tok_frames else np.zeros((0, b), np.int32))
-        buds = (np.stack([np.asarray(x) for x in budget_frames])
-                if budget_frames else np.zeros((0, b), np.float32))
-        results = []
-        for run, t_done in done:
-            n_dec = run.req.max_new_tokens - 1
-            frames = toks[run.start_frame:run.start_frame + n_dec, run.slot]
-            frame_buds = buds[run.start_frame:run.start_frame + n_dec,
+    def drain(self, uids: set[int] | None = None) -> list[GenerationResult]:
+        """Harvest finished requests (one host sync for all pending
+        frames).  With ``uids`` only matching results are returned; the
+        rest stay buffered for a later drain.  Frames still referenced by
+        live slots are kept on device and rebased."""
+        if not self.paged or self._alloc is None:
+            return []
+        harvested = list(self._results)
+        if self._done:
+            # One host sync, bounded to the frames the finished runs need —
+            # frames only live slots reference stay on device untouched.
+            need = max(r.start_frame + r.req.max_new_tokens - len(r.prior) - 1
+                       for r, _ in self._done)
+            need = min(max(need, 0), len(self._tok_frames))
+            toks = (np.asarray(jnp.stack(self._tok_frames[:need]))
+                    if need else np.zeros((0, self.batch_size), np.int32))
+            buds = (np.asarray(jnp.stack(self._budget_frames[:need]))
+                    if need else np.zeros((0, self.batch_size), np.float32))
+            for run, t_done in self._done:
+                n_dec = run.req.max_new_tokens - len(run.prior) - 1
+                frames = toks[run.start_frame:run.start_frame + n_dec,
                               run.slot]
-            results.append(GenerationResult(
-                uid=run.req.uid,
-                tokens=[int(np.asarray(run.tok0))] + frames.tolist(),
-                prompt_len=len(run.req.prompt),
-                decode_steps=run.req.max_new_tokens,
-                mean_pruned_budget=(float(frame_buds.mean())
-                                    if len(frame_buds) else 0.0),
-                wall_s=t_done - run.t_admit,
-            ))
-        return results
+                frame_buds = buds[run.start_frame:run.start_frame + n_dec,
+                                  run.slot]
+                harvested.append(GenerationResult(
+                    uid=run.req.uid,
+                    tokens=(list(run.prior) + [int(np.asarray(run.tok0))]
+                            + frames.tolist()),
+                    prompt_len=len(run.req.prompt),
+                    decode_steps=run.req.max_new_tokens,
+                    mean_pruned_budget=(float(frame_buds.mean())
+                                        if len(frame_buds) else 0.0),
+                    wall_s=t_done - run.t_admit,
+                ))
+            self._done = []
+        # Compact the frame buffer: drop frames no live run references.
+        starts = [r.start_frame for r in self._slots
+                  if r is not None and r.ready]
+        keep_from = min(starts, default=len(self._tok_frames))
+        if keep_from:
+            del self._tok_frames[:keep_from]
+            del self._budget_frames[:keep_from]
+            for r in self._slots:
+                if r is not None and r.ready:
+                    r.start_frame -= keep_from
+        if uids is None:
+            self._results = []
+            return harvested
+        self._results = [r for r in harvested if r.uid not in uids]
+        return [r for r in harvested if r.uid in uids]
+
+    def reset(self) -> None:
+        """Tear the session down: live slots and the pending queue are
+        dropped (their requests are NOT completed), undrained results are
+        discarded, every prefix-tree reference is released — the allocator
+        must come back fully-free (a refcount leak raises) — and the
+        device pools themselves are released.  The next ``submit()``
+        rebuilds the session from scratch (which is also what lets an
+        audio engine accept a different encoder frame length)."""
+        if not self.paged or self._alloc is None:
+            return
+        for slot in range(self.batch_size):
+            run = self._slots[slot]
+            if run is not None:
+                self._alloc.free(run.pages)
+                self._slots[slot] = None
+        self._pending.clear()
+        self._done.clear()
+        self._results.clear()
+        self._tok_frames.clear()
+        self._budget_frames.clear()
+        if self._tree is not None:
+            self._tree.clear()
+        leaked = self._alloc.capacity - self._alloc.available
+        self._alloc = None
+        self._tree = None
+        self._state = None
+        self._n_enc = 0
+        if leaked:
+            raise RuntimeError(
+                f"page leak on reset: {leaked} pages still referenced — "
+                "refcounts out of balance")

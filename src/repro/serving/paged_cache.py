@@ -30,6 +30,12 @@ Layout (per attention layer, see ``models.model._attn_pool_init``):
 * ``qk_packed/scale/zero``: INT4 shadow cache, same token-row layout
 * ``pmax``/``pmin``:      (num_pages, hkv, d) Quest metadata per *physical*
   page — selectors gather it through the per-slot page table
+* ``h2o_mass``:           (num_pages, hkv) accumulated attention mass per
+  *physical* page (H2O serving state; ``selector == "h2o"`` only).  The
+  decode step scatter-adds the pruner's post-top-p weights; pages are
+  zeroed when written fresh so recycling never leaks a previous occupant's
+  signal, ``copy_page`` carries the row across a COW, and shared prefix
+  pages pool every reader's mass.
 * ``ds_channels``:        (batch, hkv, r) per-slot Double-Sparsity label
   channels, calibrated on each slot's own prompt
 * page table:             (batch, max_pages) i32, engine-managed **host**

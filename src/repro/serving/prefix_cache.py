@@ -150,6 +150,24 @@ class PrefixCache:
 
         return sum(count(r)[0] for r in self._root.values())
 
+    def clear(self) -> int:
+        """Release every tree-owned page reference (``DecodeEngine.reset``).
+
+        Drains the whole tree leaf-first via :meth:`evict`; with no live
+        readers this returns every indexed page to the pool.  Returns the
+        number of pages released; raises if pinned pages remain (a live
+        reader still holds references — clear() is only valid on a
+        quiesced engine)."""
+        freed = 0
+        while self.n_nodes:
+            got = self.evict(self.n_nodes)
+            if not got:
+                raise RuntimeError(
+                    f"prefix cache has {self.n_nodes} pinned nodes — "
+                    "live readers must retire before clear()")
+            freed += got
+        return freed
+
     def evict(self, want: int) -> int:
         """Reclaim up to ``want`` pages, LRU leaf first.
 

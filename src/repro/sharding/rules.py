@@ -224,6 +224,8 @@ def decode_state_specs(state: Tree, cfg: ModelConfig, mesh, *,
             return wrap(b_ax, s_ax, h_ax, None)
         if name in ("pmax", "pmin"):
             return wrap(b_ax, p_ax, h_ax, None)
+        if name == "h2o_mass":  # (b, n_pages, hkv) page-granular H2O mass
+            return wrap(b_ax, p_ax, h_ax)
         if name in ("cross_k", "cross_v"):
             return wrap(b_ax, None, h_ax, None)
         if name == "ds_channels":
@@ -293,6 +295,10 @@ def paged_decode_state_specs(state: Tree, cfg: ModelConfig, mesh, *,
             return wrap(pool_ax, None, None)  # (rows, hkv, c)
         if name in ("pmax", "pmin"):
             return wrap(pool_ax, None, None)  # (num_pages, hkv, d)
+        if name == "h2o_mass":
+            # (num_pages, hkv) physical-page H2O mass: shards its page dim
+            # with the pool (same remap as pmax/pmin) — never over batch.
+            return wrap(pool_ax, None)
         if name == "ds_channels":
             return wrap(b_ax, None, None)  # (batch, hkv, r) per-slot
         if name in ("cross_k", "cross_v"):

@@ -15,8 +15,6 @@ Plus: allocator alloc/free/fragmentation invariants, per-slot sampling
 modes in one wave, and the spgemv-routed compact estimate.
 """
 
-import dataclasses
-
 import jax.numpy as jnp
 import numpy as np
 import pytest

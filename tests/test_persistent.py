@@ -1,0 +1,346 @@
+"""Persistent serving sessions: engine-lifetime state, streaming API, H2O
+in paged serving, and true recompute preemption.
+
+Four layers, mirroring how the PR is built:
+
+* core — the page-granular H2O path (``SelectionContext.page_mass``) over
+  a shuffled physical pool matches the contiguous page-mass layout;
+* engine/H2O — paged H2O decode (per-physical-page mass maintained by the
+  jitted step) emits exactly the tokens the contiguous per-request oracle
+  emits at ragged lengths;
+* persistence — one engine serves successive ``generate()`` calls
+  token-exactly vs fresh per-call engines while its radix tree accrues
+  cross-call hits; ``submit()/step()/drain()`` stream results
+  incrementally; ``reset()`` returns every page (allocator refcounts
+  balance) and the engine serves again afterwards; a dry pool is reclaimed
+  from cold tree pages at ``submit()`` time;
+* preemption — a preempted *sampled* request resumes token-exact under
+  true recompute preemption (teacher-forced replay), where the old
+  restart-from-prompt redrew its continuation.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    PageMeta,
+    SelectionContext,
+    TwilightConfig,
+    quantize_int4,
+    twilight_decode_attention,
+)
+from repro.serving import DecodeEngine, Request
+from repro.serving.engine import _Pending
+
+
+# ---------------------------------------------------------------------------
+# Core: page-mass H2O — pooled physical pages == contiguous layout
+# ---------------------------------------------------------------------------
+
+def test_h2o_page_mass_paged_matches_contiguous(rng):
+    """Same logical page mass behind a shuffled physical pool must select
+    the same candidate set and produce allclose attention output."""
+    b, hq, hkv, n, d, ps = 2, 8, 2, 256, 64, 16
+    n_pages = n // ps
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    mass = rng.random((b, n_pages, hkv)).astype(np.float32)
+    length = jnp.asarray([256, 180])
+
+    num_pages = 1 + b * n_pages + 3
+    perm = rng.permutation(np.arange(1, num_pages))
+    pt = np.zeros((b, n_pages), np.int32)
+    rows = num_pages * ps
+    k_pool = np.asarray(rng.normal(size=(rows, hkv, d)), np.float32)
+    v_pool = np.asarray(rng.normal(size=(rows, hkv, d)), np.float32)
+    mass_pool = rng.random((num_pages, hkv)).astype(np.float32)  # junk init
+    pmax_pool = np.zeros((num_pages, hkv, d), np.float32)
+    pmin_pool = np.zeros((num_pages, hkv, d), np.float32)
+    Knp, Vnp = np.asarray(K), np.asarray(V)
+    i = 0
+    for bb in range(b):
+        for p in range(n_pages):
+            phys = int(perm[i]); i += 1
+            pt[bb, p] = phys
+            k_pool[phys * ps:(phys + 1) * ps] = Knp[bb, p * ps:(p + 1) * ps]
+            v_pool[phys * ps:(phys + 1) * ps] = Vnp[bb, p * ps:(p + 1) * ps]
+            mass_pool[phys] = mass[bb, p]
+            pmax_pool[phys] = Knp[bb, p * ps:(p + 1) * ps].max(0)
+            pmin_pool[phys] = Knp[bb, p * ps:(p + 1) * ps].min(0)
+
+    pm = PageMeta(kmax=jnp.asarray(np.stack([pmax_pool[pt[bb]]
+                                             for bb in range(b)])),
+                  kmin=jnp.asarray(np.stack([pmin_pool[pt[bb]]
+                                             for bb in range(b)])),
+                  page_size=ps)
+    pm_pool = PageMeta(kmax=jnp.asarray(pmax_pool),
+                       kmin=jnp.asarray(pmin_pool), page_size=ps)
+    cfg = TwilightConfig(selector="h2o", p=0.9, candidate_frac=0.5,
+                         page_size=ps, min_candidate=64)
+    ref = twilight_decode_attention(
+        q, K, V, cfg,
+        ctx=SelectionContext(keys=K, page_meta=pm, accum_scores=None,
+                             length=length, ds_channels=None,
+                             page_mass=jnp.asarray(mass)),
+        qkeys=quantize_int4(K), length=length)
+    paged = twilight_decode_attention(
+        q, jnp.asarray(k_pool), jnp.asarray(v_pool), cfg,
+        ctx=SelectionContext(keys=jnp.asarray(k_pool), page_meta=pm_pool,
+                             accum_scores=None, length=length,
+                             ds_channels=None, page_table=jnp.asarray(pt),
+                             page_mass=jnp.asarray(mass_pool)),
+        qkeys=quantize_int4(jnp.asarray(k_pool)), length=length)
+    np.testing.assert_array_equal(np.asarray(paged.indices),
+                                  np.asarray(ref.indices))
+    np.testing.assert_allclose(np.asarray(paged.out), np.asarray(ref.out),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Engine: H2O paged == contiguous per-request oracle at ragged lengths
+# ---------------------------------------------------------------------------
+
+def test_h2o_paged_engine_matches_contiguous(rng):
+    """The jitted step maintains per-physical-page mass from the pruner's
+    post-top-p weights; H2O continuous batching must emit exactly what the
+    solo contiguous engine (page-mass cache rows) emits."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    cfg = cfg.replace(twilight=dataclasses.replace(cfg.twilight,
+                                                   selector="h2o"))
+    reqs = [Request(uid=uid,
+                    prompt=rng.integers(8, cfg.vocab_size, L
+                                        ).astype(np.int32),
+                    max_new_tokens=mn)
+            for uid, (L, mn) in enumerate([(24, 5), (17, 3), (9, 4)])]
+    solo = DecodeEngine(cfg, batch_size=1, cache_capacity=64, seed=7)
+    paged = DecodeEngine(cfg, params=solo.params, batch_size=2,
+                         cache_capacity=64, seed=7, paged=True)
+    want = {r.uid: r.tokens for r in solo.generate(reqs)}
+    got = {r.uid: r.tokens for r in paged.generate(reqs)}
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# Persistence: cross-call prefix reuse, streaming API, reset, dry-pool
+# ---------------------------------------------------------------------------
+
+def _prefixed_batch(rng, cfg, prefix, uids, tails, max_new=3):
+    return [Request(uid=u,
+                    prompt=np.concatenate(
+                        [prefix,
+                         rng.integers(8, cfg.vocab_size, t).astype(np.int32)]),
+                    max_new_tokens=max_new)
+            for u, t in zip(uids, tails)]
+
+
+def test_persistent_engine_cross_call_prefix_reuse(rng):
+    """One engine, three successive generate() calls sharing a prefix:
+    every call is token-exact vs a fresh per-call engine, and calls 2..3
+    hit the radix tree populated by call 1 (cross-call reuse — the whole
+    point of hoisting the pool out of generate())."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    prefix = rng.integers(8, cfg.vocab_size, 24).astype(np.int32)
+    persist = DecodeEngine(cfg, batch_size=2, cache_capacity=64, seed=7,
+                           paged=True, prefix_share=True)
+    calls = [((0, 1), (9, 4)), ((2, 3), (6, 11)), ((4, 5), (5, 8))]
+    for call, (uids, tails) in enumerate(calls):
+        reqs = _prefixed_batch(rng, cfg, prefix, uids, tails)
+        fresh = DecodeEngine(cfg, params=persist.params, batch_size=2,
+                             cache_capacity=64, seed=7, paged=True)
+        want = {r.uid: r.tokens for r in fresh.generate(reqs)}
+        got = {r.uid: r.tokens for r in persist.generate(reqs)}
+        assert got == want, f"call {call} diverged from the per-call oracle"
+        if call > 0:
+            assert persist.last_prefix_hits >= 2, \
+                f"call {call} must hit the tree populated by earlier calls"
+            assert persist.last_prefix_tokens >= 2 * (len(prefix) // 2)
+    assert persist.session_prefix_hits >= 4
+    assert persist.session_completed == 6
+
+
+def test_submit_step_drain_streaming(rng):
+    """The streaming API: feed a second batch between decode steps of the
+    first, harvest incrementally; every request matches its solo run."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(8, cfg.vocab_size, L
+                                        ).astype(np.int32),
+                    max_new_tokens=mn)
+            for i, (L, mn) in enumerate([(24, 6), (17, 3), (13, 4), (9, 5)])]
+    eng = DecodeEngine(cfg, batch_size=2, cache_capacity=64, seed=7,
+                       paged=True)
+    eng.submit(reqs[:2])
+    got = {}
+    eng.step()  # first batch in flight
+    eng.submit(reqs[2:])  # fed between decode steps
+    while eng.busy():
+        eng.step()
+        for r in eng.drain():
+            got[r.uid] = r.tokens
+    for r in eng.drain():
+        got[r.uid] = r.tokens
+    solo = DecodeEngine(cfg, params=eng.params, batch_size=1,
+                        cache_capacity=64, seed=7)
+    want = {r.uid: r.tokens for r in solo.generate(reqs)}
+    assert got == want
+
+
+def test_reset_balances_refcounts_and_engine_serves_again(rng):
+    """reset() drops slots, queue, and every tree reference: the refcounts
+    must balance exactly (a leak raises — conservation across admissions,
+    COW, eviction, and tree inserts), the session is released, and the
+    engine must serve fresh requests afterwards."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    prefix = rng.integers(8, cfg.vocab_size, 24).astype(np.int32)
+    eng = DecodeEngine(cfg, batch_size=2, cache_capacity=64, seed=7,
+                       paged=True, prefix_share=True)
+    eng.generate(_prefixed_batch(rng, cfg, prefix, (0, 1, 2), (9, 4, 6)))
+    assert eng._alloc.available < eng._alloc.capacity, \
+        "the tree must retain pages for the test to mean anything"
+    eng.reset()  # raises on a refcount leak
+    assert eng._alloc is None and eng._tree is None and eng._state is None
+    # Mid-flight reset: submit, step once (requests in flight), reset.
+    eng.submit(_prefixed_batch(rng, cfg, prefix, (3, 4), (5, 7), max_new=8))
+    eng.step()
+    eng.reset()
+    assert not eng.busy()
+    # And the engine still serves, token-exact vs a fresh oracle.
+    reqs = _prefixed_batch(rng, cfg, prefix, (9,), (4,))
+    fresh = DecodeEngine(cfg, params=eng.params, batch_size=2,
+                         cache_capacity=64, seed=7, paged=True)
+    want = {r.uid: r.tokens for r in fresh.generate(reqs)}
+    got = {r.uid: r.tokens for r in eng.generate(reqs)}
+    assert got == want
+
+
+def test_submit_reclaims_dry_pool(rng):
+    """A persistent engine whose pool is entirely tree-owned must reclaim
+    cold refcount-1 pages at submit() time — before admission ever has to
+    fall back to preemption."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    ps = cfg.twilight.page_size
+    eng = DecodeEngine(cfg, batch_size=1, cache_capacity=64, seed=7,
+                       paged=True, prefix_share=True, num_pages=8)
+    first = Request(uid=0,
+                    prompt=rng.integers(8, cfg.vocab_size, 24
+                                        ).astype(np.int32),
+                    max_new_tokens=3)
+    eng.generate([first])
+    # Absorb the remaining free pages into the tree (cold entries), so the
+    # pool is dry with every page at refcount 1 (tree-only).
+    extra = eng._alloc.alloc(eng._alloc.available)
+    toks = rng.integers(8, cfg.vocab_size, len(extra) * ps).astype(np.int32)
+    eng._tree.insert(toks, extra)
+    eng._alloc.free(extra)
+    assert eng._alloc.available == 0
+    evicted0 = eng.session_evictions
+    nxt = Request(uid=1,
+                  prompt=rng.integers(8, cfg.vocab_size, 24
+                                      ).astype(np.int32),
+                  max_new_tokens=3)
+    eng.submit([nxt])
+    assert eng.session_evictions > evicted0, \
+        "submit() on a dry pool must reclaim cold tree pages"
+    assert eng._alloc.available > 0
+    got = {}
+    while eng.busy():
+        eng.step()
+        for r in eng.drain():
+            got[r.uid] = r.tokens
+    assert set(got) == {1} and len(got[1]) == 3
+
+
+# ---------------------------------------------------------------------------
+# True recompute preemption: sampled victims resume token-exact
+# ---------------------------------------------------------------------------
+
+def test_preempted_sampled_request_token_exact(rng):
+    """A tight pool forces preemption of a *sampling* request; under true
+    recompute preemption (host-synced tokens + teacher-forced replay) its
+    continuation must match the roomy-pool engine exactly — the old
+    restart-from-prompt redrew it."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(8, cfg.vocab_size, 17
+                                        ).astype(np.int32),
+                    max_new_tokens=20, greedy=False)
+            for i in range(2)]
+    roomy = DecodeEngine(cfg, batch_size=2, cache_capacity=40, seed=7,
+                         paged=True)
+    tight = DecodeEngine(cfg, params=roomy.params, batch_size=2,
+                         cache_capacity=40, seed=7, paged=True, num_pages=9)
+    want = {r.uid: r.tokens for r in roomy.generate(reqs)}
+    got = {r.uid: r.tokens for r in tight.generate(reqs)}
+    assert tight.last_preemptions > 0, "pool sizing must force preemption"
+    assert got == want
+
+
+def test_forced_replay_matches_unpreempted(rng):
+    """White-box: a request re-admitted with a generated-token carry (as a
+    preemption victim would be) replays teacher-forced and continues
+    exactly — for every preemption point, greedy and sampled."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    for greedy in (True, False):
+        req = Request(uid=5,
+                      prompt=rng.integers(8, cfg.vocab_size, 17
+                                          ).astype(np.int32),
+                      max_new_tokens=12, greedy=greedy)
+        ref = DecodeEngine(cfg, batch_size=1, cache_capacity=40, seed=7,
+                           paged=True)
+        want = ref.generate([req])[0].tokens
+        for k in (1, 4, 11):
+            eng = DecodeEngine(cfg, params=ref.params, batch_size=1,
+                               cache_capacity=40, seed=7, paged=True)
+            eng._ensure_session([req])
+            eng._pending.append(_Pending(req=req, generated=want[:k]))
+            got = []
+            while len(got) < 1:
+                eng.step()
+                got.extend(eng.drain({5}))
+            assert got[0].tokens == want, (greedy, k)
+
+
+def test_step_drain_require_paged():
+    cfg = get_smoke_config("qwen2-1.5b")
+    eng = DecodeEngine(cfg, batch_size=1, cache_capacity=64)
+    with pytest.raises(ValueError, match="paged"):
+        eng.submit([Request(uid=0, prompt=np.arange(8, dtype=np.int32))])
+    with pytest.raises(ValueError, match="paged"):
+        eng.step()
+
+
+def test_generate_skips_stale_buffered_result_for_reused_uid():
+    """Streaming/wrapper mix with a reused uid: a finished-but-undrained
+    result must not satisfy (or be returned by) a later generate() call
+    under the same uid — it stays buffered for a later drain()."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    eng = DecodeEngine(cfg, batch_size=1, cache_capacity=64, seed=7,
+                       paged=True)
+    p1 = np.arange(8, 20, dtype=np.int32)
+    p2 = np.arange(30, 47, dtype=np.int32)
+    eng.submit([Request(uid=7, prompt=p1, max_new_tokens=3)])
+    while eng.busy():
+        eng.step()  # uid 7 finishes, result left undrained
+    res = eng.generate([Request(uid=7, prompt=p2, max_new_tokens=4)])
+    assert len(res) == 1
+    assert res[0].prompt_len == len(p2) and len(res[0].tokens) == 4
+    stale = eng.drain()
+    assert len(stale) == 1
+    assert stale[0].prompt_len == len(p1) and len(stale[0].tokens) == 3
+
+
+def test_generate_rejects_duplicate_uids():
+    """Completion tracking is per-uid; two requests sharing a uid in one
+    call would be indistinguishable — rejected up front."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    eng = DecodeEngine(cfg, batch_size=1, cache_capacity=64, paged=True)
+    reqs = [Request(uid=3, prompt=np.arange(8, 16, dtype=np.int32),
+                    max_new_tokens=2)
+            for _ in range(2)]
+    with pytest.raises(ValueError, match="duplicate uids"):
+        eng.generate(reqs)

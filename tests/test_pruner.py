@@ -1,6 +1,5 @@
 """Twilight Pruner + error-bound validation (Eq. 2 of the paper)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

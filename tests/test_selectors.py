@@ -1,6 +1,5 @@
 """Token Selector semantics (Quest, DS, Streaming, H2O, GQA union)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

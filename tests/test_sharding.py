@@ -93,6 +93,36 @@ def test_paged_decode_state_specs_divisible(arch):
         assert k_specs and all(s[1] == "model" for s in k_specs)
 
 
+def test_paged_h2o_mass_shards_with_pool():
+    """The H2O mass accumulator is physical-page keyed: it must shard its
+    page dim with the pool (same remap as Quest metadata), never over the
+    batch axes — in both the pooled and contiguous layouts."""
+    import dataclasses
+    cfg = get_config("qwen2-1.5b")
+    cfg = cfg.replace(twilight=dataclasses.replace(cfg.twilight,
+                                                   selector="h2o"))
+    shape = INPUT_SHAPES["decode_paged_32k"]
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    struct = paged_decode_state_struct(cfg, shape)
+    num_pages = paged_pool_pages(cfg, shape)
+    specs = paged_decode_state_specs(struct, cfg, mesh,
+                                     batch=shape.global_batch,
+                                     num_pages=num_pages)
+    _check_tree(struct, specs, mesh.shape)
+    flat = jax.tree_util.tree_leaves_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    mass = [s for path, s in flat if "h2o_mass" in str(path[-1])]
+    assert mass and all(s[1] == "model" for s in mass)
+    # Contiguous layout: (b, n_pages, hkv) — batch over fsdp, pages with
+    # the kv-seq axis when divisible.
+    cshape = INPUT_SHAPES["decode_32k"]
+    cstruct = decode_state_struct(cfg, cshape)
+    cspecs = decode_state_specs(cstruct, cfg, mesh,
+                                batch=cshape.global_batch,
+                                capacity=cshape.seq_len)
+    _check_tree(cstruct, cspecs, mesh.shape)
+
+
 def test_multipod_param_specs_divisible():
     mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
     for arch in ("jamba-1.5-large-398b", "qwen2-1.5b", "internvl2-1b"):
