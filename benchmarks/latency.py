@@ -39,14 +39,14 @@ def fig7_attention_speedup():
     buffer toward B1)."""
     import dataclasses
 
-    from repro.analysis.costs import twilight_stage_bytes
-    from repro.core import TwilightConfig
+    from repro.analysis.costs import (
+        serving_pipeline_config,
+        twilight_stage_bytes,
+    )
 
     hkv, d = 8, 128
     hq = 4 * hkv  # LLaMA-class GQA group of 4
-    tw_compact = TwilightConfig(candidate_frac=0.25,
-                                candidate_budget_cap=1 << 30,
-                                compact=True, pruned_cap_frac=0.25)
+    tw_compact = serving_pipeline_config()
     tw_dense = dataclasses.replace(tw_compact, compact=False,
                                    pruned_cap_frac=None)
     for n in (8192, 32768, 65536, 131072):
@@ -99,11 +99,15 @@ def fig10_time_breakdown():
 
     Matches the paper's theoretical model in §4.3: Quest at B0=8192 (1/4),
     Twilight prunes to B1=256.  Also reports the same breakdown for the
-    dense-mask vs compact-index pipeline from ``analysis.costs``."""
+    dense-mask vs compact-index pipeline from ``analysis.costs``, and the
+    staged-three-launch vs fused-single-launch pipeline model."""
     import dataclasses
 
-    from repro.analysis.costs import twilight_stage_bytes
-    from repro.core import TwilightConfig
+    from repro.analysis.costs import (
+        serving_pipeline_config,
+        twilight_pipeline_traffic,
+        twilight_stage_bytes,
+    )
 
     n, hkv, d, page = 32768, 8, 128, 64
     hq = 4 * hkv
@@ -112,13 +116,15 @@ def fig10_time_breakdown():
     t_prune = bytes_to_us(b0 * hkv * (d // 2 + 8) + 4 * b0 * hkv)
     t_attn_quest = bytes_to_us(2 * b0 * hkv * d * 2)
     t_attn_twi = bytes_to_us(2 * b1 * hkv * d * 2)
-    tw_compact = TwilightConfig(candidate_frac=0.25,
-                                candidate_budget_cap=1 << 30,
-                                compact=True, pruned_cap_frac=0.25)
+    tw_compact = serving_pipeline_config()
     tw_dense = dataclasses.replace(tw_compact, compact=False,
                                    pruned_cap_frac=None)
     st_dense = twilight_stage_bytes(tw_dense, n, hq, hkv, d)
     st_compact = twilight_stage_bytes(tw_compact, n, hq, hkv, d)
+    pipe_staged = twilight_pipeline_traffic(tw_compact, n, hq, hkv, d,
+                                            fused=False)
+    pipe_fused = twilight_pipeline_traffic(tw_compact, n, hq, hkv, d,
+                                           fused=True)
     for batch in (16, 64, 128):
         quest_total = batch * (t_sel + t_attn_quest)
         twi_total = batch * (t_sel + t_prune + t_attn_twi)
@@ -138,6 +144,14 @@ def fig10_time_breakdown():
                 f"attn={bytes_to_us(st['attend'], batch):.1f};"
                 f"compact_vs_dense="
                 f"{st_dense['total'] / st['total']:.2f}")
+        # Launch-structure model: the staged three-launch pipeline (inter-
+        # stage rows round-trip HBM) vs the single fused launch.
+        csv_row(f"fig10_twi_fused_b{batch}",
+                bytes_to_us(pipe_fused["total"], batch),
+                f"staged_us={bytes_to_us(pipe_staged['total'], batch):.1f};"
+                f"fused_vs_staged="
+                f"{pipe_staged['total'] / pipe_fused['total']:.2f};"
+                f"launches=3_vs_1")
     # The paper's §4.3 closed form for reference.
     theory = (n / 16 + b0) / (n / 16 + b0 / 4 + b1)
     csv_row("fig10_theory_speedup", 0.0, f"speedup={theory:.2f}")
@@ -205,7 +219,8 @@ def serve_shared_prefix_workload(batch: int = 8, n_requests: int = 64,
                                  prefix_len: int = 8192,
                                  suffix_len: int = 512, max_new: int = 128,
                                  seed: int = 0,
-                                 json_path: str | None = None):
+                                 json_path: str | None = None,
+                                 fused: bool = True):
     """Prefix sharing (COW pages + chunked prefill) vs full re-prefill —
     modeled.
 
@@ -220,7 +235,12 @@ def serve_shared_prefix_workload(batch: int = 8, n_requests: int = 64,
     prefill chunks and decode steps share one serial device queue.
 
     Reports per-mode mean TTFT and end-to-end tok/s; optionally dumps the
-    rows as JSON (the CI perf artifact).
+    rows as JSON (the CI perf artifact).  With ``fused`` (default), the
+    share-on run is additionally priced under the launch-structure pipeline
+    model from ``analysis.costs`` — staged three-launch vs fused
+    single-launch (``kernels/fused_decode``) — as extra ``_fused`` /
+    ``_pipeline_staged`` rows, so the CI perf-trajectory gate tracks the
+    fused speedup alongside the sharing one (legacy rows are untouched).
     """
     rng = np.random.default_rng(seed)
     n_layers, hkv, d = 32, 8, 128
@@ -247,7 +267,7 @@ def serve_shared_prefix_workload(batch: int = 8, n_requests: int = 64,
             s = e
         return us
 
-    def run(share: bool) -> tuple[float, float]:
+    def run(share: bool, attn_fn=attn_us) -> tuple[float, float]:
         """Serial engine queue: admissions prefill (suffix or full prompt),
         then every live slot decodes.  Returns (mean TTFT us, total us)."""
         ttft, total_us = [], 0.0
@@ -265,7 +285,7 @@ def serve_shared_prefix_workload(batch: int = 8, n_requests: int = 64,
                     total_us += p_us  # chunks stall the shared queue
                     ttft.append(total_us)
                     slots[j] = [s_total, int(new_tokens[i])]
-            total_us += w_us + sum(attn_us(s[0]) for s in slots
+            total_us += w_us + sum(attn_fn(s[0]) for s in slots
                                    if s is not None)
             for j in range(batch):
                 if slots[j] is not None:
@@ -289,6 +309,10 @@ def serve_shared_prefix_workload(batch: int = 8, n_requests: int = 64,
             f"ttft={ttft_speed:.2f};tok_s={speed:.2f}")
     rows.append({"name": f"shared_prefix_speedup_b{batch}",
                  "ttft_speedup": ttft_speed, "tok_s_speedup": speed})
+    if fused:
+        rows.extend(_fused_axis_rows(lambda fn: run(True, fn),
+                                     "shared_prefix", batch, total_new,
+                                     n_layers, hkv, d))
     if json_path:
         import json
         with open(json_path, "w") as f:
@@ -298,11 +322,54 @@ def serve_shared_prefix_workload(batch: int = 8, n_requests: int = 64,
     return rows
 
 
+def _fused_axis_rows(runner, prefix: str, batch: int, total_new: int,
+                     n_layers: int, hkv: int, d: int) -> list[dict]:
+    """Re-price one scheduler run under the launch-structure pipeline model.
+
+    ``runner(attn_fn) -> (mean TTFT us, total us)`` replays the workload's
+    scheduler with a per-step attention cost function.  Two variants are
+    priced from ``analysis.costs.twilight_pipeline_traffic``: the staged
+    three-launch compact pipeline (inter-stage rows round-trip HBM, final
+    gather over the capped buffer) and the fused single-launch kernel
+    (``kernels/fused_decode`` — survivor-only K/V reads).  Emits
+    ``{prefix}_pipeline_staged`` / ``{prefix}_fused`` rows plus the
+    speedup row the CI perf-trajectory gate tracks.
+    """
+    from repro.analysis.costs import (
+        serving_pipeline_config,
+        twilight_pipeline_traffic,
+    )
+
+    tw = serving_pipeline_config()
+    hq = 4 * hkv
+    out, totals = [], {}
+    for tag, fl in (("pipeline_staged", False), ("fused", True)):
+        def attn_fn(ctx: int, fl=fl) -> float:
+            tr = twilight_pipeline_traffic(tw, ctx, hq, hkv, d, fused=fl)
+            return n_layers * bytes_to_us(tr["total"])
+
+        ttft_us, total = runner(attn_fn)
+        totals[tag] = (ttft_us, total)
+        tok_s = total_new / (total * 1e-6)
+        out.append({"name": f"{prefix}_{tag}_b{batch}", "ttft_us": ttft_us,
+                    "total_us": total, "tok_s": tok_s})
+        csv_row(f"{prefix}_{tag}_b{batch}", total,
+                f"ttft_us={ttft_us:.1f};tok_s={tok_s:.1f}")
+    speed = totals["pipeline_staged"][1] / totals["fused"][1]
+    ttft_speed = totals["pipeline_staged"][0] / totals["fused"][0]
+    csv_row(f"{prefix}_fused_speedup_b{batch}", 0.0,
+            f"ttft={ttft_speed:.2f};tok_s={speed:.2f}")
+    out.append({"name": f"{prefix}_fused_speedup_b{batch}",
+                "ttft_speedup": ttft_speed, "tok_s_speedup": speed})
+    return out
+
+
 def serve_persistent_workload(batch: int = 8, n_batches: int = 4,
                               requests_per_batch: int = 8,
                               prefix_len: int = 8192, suffix_len: int = 512,
                               max_new: int = 128, seed: int = 0,
-                              json_path: str | None = None):
+                              json_path: str | None = None,
+                              fused: bool = True):
     """Persistent session vs fresh-engine-per-call — modeled.
 
     ``n_batches`` successive ``submit()`` batches (each: shared system
@@ -314,7 +381,10 @@ def serve_persistent_workload(batch: int = 8, n_batches: int = 4,
     cost model as the shared-prefix workload.
 
     Reports per-mode radix-tree hit rate, mean TTFT, and end-to-end tok/s;
-    optionally dumps the rows as JSON (the CI perf artifact).
+    optionally dumps the rows as JSON (the CI perf artifact).  With
+    ``fused`` (default), the persistent-mode run is additionally priced
+    under the staged-vs-fused launch-structure pipeline model (extra
+    ``_fused`` / ``_pipeline_staged`` rows; legacy rows untouched).
     """
     if n_batches < 1 or requests_per_batch < 1:
         raise ValueError(f"need >= 1 batch of >= 1 request, got "
@@ -342,7 +412,7 @@ def serve_persistent_workload(batch: int = 8, n_batches: int = 4,
             s = e
         return us
 
-    def run(persistent: bool) -> tuple[float, float, float]:
+    def run(persistent: bool, attn_fn=attn_us) -> tuple[float, float, float]:
         """Serve the batches serially.  Returns (hit rate, mean TTFT us,
         total us)."""
         ttft, total_us, hits = [], 0.0, 0
@@ -370,7 +440,7 @@ def serve_persistent_workload(batch: int = 8, n_batches: int = 4,
                         # shared-prefix workload (the gate compares both).
                         ttft.append(total_us)
                         slots[j] = [s_total, int(new_tokens[i])]
-                total_us += w_us + sum(attn_us(s[0]) for s in slots
+                total_us += w_us + sum(attn_fn(s[0]) for s in slots
                                        if s is not None)
                 for j in range(batch):
                     if slots[j] is not None:
@@ -396,6 +466,10 @@ def serve_persistent_workload(batch: int = 8, n_batches: int = 4,
             f"ttft={ttft_speed:.2f};tok_s={speed:.2f}")
     rows.append({"name": f"persistent_speedup_b{batch}",
                  "ttft_speedup": ttft_speed, "tok_s_speedup": speed})
+    if fused:
+        rows.extend(_fused_axis_rows(lambda fn: run(True, fn)[1:],
+                                     "persistent", batch, total_new,
+                                     n_layers, hkv, d))
     if json_path:
         import json
         with open(json_path, "w") as f:
@@ -565,6 +639,13 @@ if __name__ == "__main__":
     ap.add_argument("--batches", type=int, default=4,
                     help="successive submit() batches (persistent workload)")
     ap.add_argument("--prefix-len", type=int, default=8192)
+    ap.add_argument("--fused", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="also price the serving workloads under the "
+                         "staged-vs-fused launch-structure pipeline model "
+                         "(extra _pipeline_staged/_fused rows tracked by "
+                         "the CI perf gate); --no-fused restores the "
+                         "legacy row set")
     ap.add_argument("--json", default=None,
                     help="also dump the workload rows as JSON (CI artifact)")
     ap.add_argument("--compare", default=None, metavar="BASELINE.json",
@@ -587,14 +668,15 @@ if __name__ == "__main__":
                                             n_requests=args.requests,
                                             prefix_len=args.prefix_len,
                                             seed=args.seed,
-                                            json_path=args.json)
+                                            json_path=args.json,
+                                            fused=args.fused)
     elif args.workload == "persistent":
         rows = serve_persistent_workload(
             batch=args.batch, n_batches=max(1, args.batches),
             requests_per_batch=max(1, args.requests
                                    // max(1, args.batches)),
             prefix_len=args.prefix_len, seed=args.seed,
-            json_path=args.json)
+            json_path=args.json, fused=args.fused)
     else:
         for fn in (fig7_attention_speedup, fig8_e2e_tpot,
                    fig10_time_breakdown, tabE_offload, alg1_topp_microbench):

@@ -12,13 +12,19 @@ Collective bytes come from the optimized-HLO parse, scaled by the known
 loop trip factors (layer-scan repeats × grad-accum microsteps).
 
 Usage: PYTHONPATH=src python -m benchmarks.roofline [results/dryrun_baseline.jsonl]
+
+``--fused`` instead prints the fused-vs-staged decode-pipeline table: per
+step per attention layer, the modeled HBM bytes and Pallas launch count of
+the staged compact pipeline (spgemv estimate → top-p → gathered attention,
+inter-stage buffers round-tripping HBM) against the single-launch fused
+kernel (``kernels/fused_decode``), at the serving config
+(``candidate_frac=0.25``, ``pruned_cap_frac=0.25``).
 """
 
 from __future__ import annotations
 
 import json
 import os
-import sys
 
 from repro.analysis.costs import (
     active_param_count,
@@ -31,6 +37,7 @@ from repro.analysis.costs import (
     prefill_hbm_bytes,
     train_hbm_bytes,
     train_step_flops,
+    twilight_pipeline_traffic,
 )
 from repro.configs import get_config, list_archs
 from repro.launch.specs import INPUT_SHAPES
@@ -153,8 +160,67 @@ def print_table(rows: list[dict]) -> None:
               f"{r['temp_gib']:9.2f}")
 
 
+def fused_table(contexts=(8192, 32768, 65536, 131072), *, hq=32, hkv=8,
+                d=128) -> list[dict]:
+    """Fused-vs-staged decode traffic per step per attention layer.
+
+    LLaMA-class GQA shape, serving Twilight config.  ``bytes_x`` /
+    ``launches_x`` are the staged/fused reduction factors the fused kernel
+    buys; ``tail_x`` excludes the (identical) selector page scan.
+    """
+    from repro.analysis.costs import serving_pipeline_config
+
+    tw = serving_pipeline_config()
+    rows = []
+    for n in contexts:
+        st = twilight_pipeline_traffic(tw, n, hq, hkv, d, fused=False)
+        fu = twilight_pipeline_traffic(tw, n, hq, hkv, d, fused=True)
+        rows.append({
+            "n": n,
+            "staged_bytes": st["total"], "fused_bytes": fu["total"],
+            "staged_tail": st["tail"], "fused_tail": fu["tail"],
+            "staged_launches": st["launches"],
+            "fused_launches": fu["launches"],
+            "bytes_x": st["total"] / fu["total"],
+            "tail_x": st["tail"] / fu["tail"],
+            "launches_x": st["launches"] / fu["launches"],
+        })
+    return rows
+
+
+def print_fused_table(rows: list[dict]) -> None:
+    hdr = (f"{'context':>9s} {'staged MB':>10s} {'fused MB':>9s} "
+           f"{'bytes_x':>8s} {'tail_x':>7s} {'launches':>9s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['n']:9d} {r['staged_bytes'] / 1e6:10.2f} "
+              f"{r['fused_bytes'] / 1e6:9.2f} {r['bytes_x']:8.2f} "
+              f"{r['tail_x']:7.2f} "
+              f"{r['staged_launches']:.0f} -> {r['fused_launches']:.0f}")
+
+
 def main() -> None:
-    path = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_JSONL
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("jsonl", nargs="?", default=DEFAULT_JSONL,
+                    help="dry-run HLO JSONL for per-iteration cross-checks")
+    ap.add_argument("--fused", action="store_true",
+                    help="print the fused-vs-staged decode-pipeline bytes/"
+                         "launch table instead of the arch roofline")
+    args = ap.parse_args()
+    if args.fused:
+        rows = fused_table()
+        print_fused_table(rows)
+        out = os.path.join(os.path.dirname(args.jsonl) or ".",
+                           "roofline_fused.json")
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"\nwrote {out}")
+        return
+    path = args.jsonl
     rows = full_table(path)
     print_table(rows)
     out = os.path.join(os.path.dirname(path) or ".", "roofline.json")

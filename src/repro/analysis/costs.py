@@ -213,6 +213,89 @@ def twilight_stage_bytes(tw: TwilightConfig, n: int, hq: int, hkv: int,
             "attend": float(attn), "total": float(sel + est + topp + attn)}
 
 
+def serving_pipeline_config() -> TwilightConfig:
+    """The serving-shaped Twilight config the traffic benchmarks price.
+
+    One definition so the benchmarks cannot drift from each other: B0 =
+    n/4 with the absolute cap lifted (the benchmarks sweep contexts past
+    the default cap), compact pipeline, and the staged path's B1
+    re-compaction at the engine's serving default ``pruned_cap_frac=0.25``
+    (``DecodeEngine`` applies the same default).  Callers wanting the
+    dense or uncapped variants ``dataclasses.replace`` from here.
+    """
+    return TwilightConfig(candidate_frac=0.25, candidate_budget_cap=1 << 30,
+                          compact=True, pruned_cap_frac=0.25)
+
+
+def twilight_pipeline_traffic(tw: TwilightConfig, n: int, hq: int, hkv: int,
+                              d: int, *, fused: bool,
+                              bytes_kv: int = BYTES_BF16,
+                              b1: int | None = None) -> dict[str, float]:
+    """Per-step HBM bytes **and Pallas launches** of the compact decode
+    attention operator — staged pipeline vs the fused single-launch kernel.
+
+    Unlike :func:`twilight_stage_bytes` (which prices each stage's
+    *algorithmic* reads), this models the pipeline's real launch structure:
+
+    * staged — three launches (spgemv estimate, top-p search, gathered
+      sparse attention).  Every inter-stage buffer round-trips HBM: the
+      B0-length f32 score row (estimate → top-p), the normalized weight
+      row (top-p → mask/re-compaction), the kept bitmap, the group-max
+      slot weights (H2O + B1 ranking), the re-compacted B1 index buffer,
+      and the final K/V gather over the ``pruned_capacity`` buffer.
+    * fused — one launch (``kernels/fused_decode``).  Scores, weights,
+      thresholds, and index buffers never leave VMEM; the only O(B0)
+      traffic is the packed INT4 candidate codes in and the mandated
+      ``slot_weights``/kept outputs (the serving engine's H2O mass feed);
+      final-attention K/V reads cover only the ``b1`` *surviving* rows
+      (per-row DMA behind the kept bit).
+
+    ``b1`` defaults to the paper's measured post-top-p budget scale (~2 %
+    of the context, Tables 2/5), floored at ``tw.min_candidate``.  Keys:
+    ``select`` (identical both ways — outside the fusion boundary),
+    ``estimate``, ``interstage``, ``attend``, ``outputs``, ``tail`` (the
+    fused region: everything but select), ``total``, ``launches``.
+    """
+    if not (tw.enabled and tw.compact and tw.prune_enabled):
+        st = twilight_stage_bytes(tw, n, hq, hkv, d, bytes_kv=bytes_kv)
+        return {**st, "interstage": 0.0, "outputs": 0.0,
+                "tail": st["total"] - st["select"], "launches": 1.0}
+    b0 = tw.candidate_budget(n)
+    m = min(n, b0)
+    if b1 is None:
+        b1 = max(tw.min_candidate, int(0.02 * n))
+    b1 = min(b1, m)
+    sel = 2 * (n // tw.page_size) * hkv * d * bytes_kv
+    codes = m * hkv * (d // 2 + 8)  # packed nibbles + f32 scale/zero
+    score_row = hq * m * BYTES_F32
+    out_bytes = hq * d * bytes_kv
+    if fused:
+        est = float(codes)
+        interstage = 0.0
+        attend = 2 * b1 * hkv * d * bytes_kv
+        outputs = hkv * m * (1 + BYTES_F32) + out_bytes  # kept + slot_weights
+        launches = 1.0
+    else:
+        est = float(codes + score_row)  # codes in, score row out
+        attn_len = tw.pruned_capacity(m)
+        # score row back in; weight row out + back in (mask, slot_weights
+        # ranking); kept bitmap and slot weights round-trip; the B1 index
+        # buffer round-trips when the cap re-compacts.
+        interstage = (score_row + 2 * score_row
+                      + 2 * hkv * m
+                      + 2 * hkv * m * BYTES_F32)
+        if attn_len < m:
+            interstage += 2 * attn_len * hkv * 4
+        attend = 2 * attn_len * hkv * d * bytes_kv
+        outputs = float(out_bytes)
+        launches = 3.0
+    tail = est + interstage + attend + outputs
+    return {"select": float(sel), "estimate": est,
+            "interstage": float(interstage), "attend": float(attend),
+            "outputs": float(outputs), "tail": float(tail),
+            "total": float(sel + tail), "launches": launches}
+
+
 def decode_flops(cfg: ModelConfig, batch: int, ctx: int) -> float:
     """One decode step: forward over `batch` tokens with full context `ctx`,
     including the Twilight estimate (q·K̃ over the candidate set) and the

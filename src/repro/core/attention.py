@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant as quant_lib
 from repro.core.topp import masked_softmax
 
 __all__ = [
@@ -19,6 +20,7 @@ __all__ = [
     "masked_sparse_decode_attention",
     "compact_decode_attention",
     "gather_kv_heads",
+    "gather_quantized_kv_heads",
     "gathered_sparse_decode_attention",
     "mha_attention",
     "attention_error",
@@ -129,6 +131,29 @@ def gather_kv_heads(x: jax.Array, indices: jax.Array) -> jax.Array:
         )(indices)
     return jnp.take_along_axis(
         jnp.moveaxis(x, 2, 1), indices[..., None], axis=2)
+
+
+def gather_quantized_kv_heads(
+    indices: jax.Array,  # (b, hkv, m) i32 cache rows
+    keys: jax.Array | None = None,  # fp cache, any gather_kv_heads layout
+    qkeys: quant_lib.QuantizedTensor | None = None,  # INT4 shadow, same
+) -> quant_lib.QuantizedTensor:
+    """Stage the INT4 codes of a candidate buffer: (b, hkv, m, d//2)-packed.
+
+    With a shadow cache, its packed/scale/zero rows are gathered; without
+    one, the fp K rows are gathered and quantized on the fly.  The two are
+    bit-identical because quantization is per-(token, head) row — the
+    invariant both the staged estimate and the fused decode kernel rely
+    on, kept in this one place.
+    """
+    if qkeys is not None:
+        return quant_lib.QuantizedTensor(
+            packed=gather_kv_heads(qkeys.packed, indices),
+            scale=gather_kv_heads(qkeys.scale, indices),
+            zero=gather_kv_heads(qkeys.zero, indices))
+    if keys is None:
+        raise ValueError("need keys or qkeys")
+    return quant_lib.quantize_int4(gather_kv_heads(keys, indices))
 
 
 def gathered_sparse_decode_attention(

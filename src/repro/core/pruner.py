@@ -5,14 +5,19 @@ GQA semantics (Appendix B.2): weights and top-p masks are computed per *query*
 head; the pruned set actually loaded for a KV head is the union over its
 group, so budgets are group-wise under GQA and head-wise under MHA.
 
-Two entry points:
+Three entry points:
 
 * :meth:`TwilightPruner.prune` — dense/debug path over (b, hkv, n) masks;
   estimates q·K̃ against the *whole* cache.  The test oracle.
-* :meth:`TwilightPruner.prune_at` — compact production path over a selector
+* :meth:`TwilightPruner.prune_at` — compact staged path over a selector
   index buffer (b, hkv, m): gathers the INT4 shadow codes at the candidate
   indices and runs estimate + top-p on m-length rows, so per-step cost
   scales with the candidate budget B0, not the context length n.
+* :meth:`TwilightPruner.prune_attend_at` — the fused production path: the
+  whole estimate → top-p → sparse-attention tail as ONE Pallas launch
+  (``kernels/fused_decode``); the estimate always runs from the packed
+  INT4 codes (``estimate_bits <= 4`` configs only — the config resolver
+  routes others to the staged path).
 """
 
 from __future__ import annotations
@@ -25,7 +30,7 @@ import jax.numpy as jnp
 
 from repro.core import quant as quant_lib
 from repro.core import topp as topp_lib
-from repro.core.attention import gather_kv_heads
+from repro.core.attention import gather_kv_heads, gather_quantized_kv_heads
 from repro.core.selectors import group_union
 
 __all__ = ["PrunerStats", "TwilightPruner"]
@@ -106,19 +111,10 @@ class TwilightPruner:
         hq = q.shape[1]
         group = hq // hkv
         if self.estimate_bits <= 4:
-            if qkeys is None:
-                if keys is None:
-                    raise ValueError("need keys or qkeys")
-                # Quantization is per-(token, head) row, so gathering the m
-                # candidate rows first and quantizing those is bit-identical
-                # to quantizing the whole cache — and keeps this O(B0).
-                gathered = quant_lib.quantize_int4(
-                    gather_kv_heads(keys, indices))
-            else:
-                gathered = quant_lib.QuantizedTensor(
-                    packed=gather_kv_heads(qkeys.packed, indices),
-                    scale=gather_kv_heads(qkeys.scale, indices),
-                    zero=gather_kv_heads(qkeys.zero, indices))
+            # Gather-then-quantize is bit-identical to gathering a
+            # quantized cache (per-row quantization) — and keeps this O(B0).
+            gathered = gather_quantized_kv_heads(indices, keys=keys,
+                                                 qkeys=qkeys)
             if self.use_spgemv:
                 from repro.kernels.spgemv.ops import estimate_scores_gathered
                 return estimate_scores_gathered(q, gathered)
@@ -174,6 +170,44 @@ class TwilightPruner:
             weights=None,
         )
         return kept, stats, weights.max(axis=2)
+
+    def prune_attend_at(
+        self,
+        q: jax.Array,  # (b, hq, d)
+        indices: jax.Array,  # (b, hkv, m) i32 from select_indices
+        valid: jax.Array,  # (b, hkv, m) bool — live candidate slots
+        *,
+        keys: jax.Array,  # (b, n, hkv, d) cache or (P, hkv, d) pool
+        values: jax.Array,  # same layout as keys
+        qkeys: quant_lib.QuantizedTensor | None = None,
+        p: jax.Array | float | None = None,
+    ) -> tuple[jax.Array, jax.Array, PrunerStats, jax.Array]:
+        """Fused prune **and** attend: one Pallas launch for the whole
+        estimate → top-p → sparse-attention tail of the pipeline
+        (``kernels/fused_decode``).
+
+        Returns ``(out (b, hq, d), kept (b, hkv, m), stats, slot_weights)``
+        — the same pieces :meth:`prune_at` plus the final gather + attention
+        produce, but with no HBM materialization of scores, thresholds, or
+        a re-compacted index buffer, and with only *surviving* K/V rows read
+        from the cache.  Every kept slot is attended (equivalent to the
+        staged path with ``pruned_cap_frac=None``).  As in :meth:`prune_at`,
+        ``indices`` are final cache coordinates (physical pool rows for a
+        paged cache).
+        """
+        from repro.kernels.fused_decode.ops import fused_prune_attend
+
+        p_val = self.p if p is None else p
+        out, kept, slot_weights, thresh = fused_prune_attend(
+            q, indices, valid, keys, values, qkeys, p=p_val,
+            iters=self.iters)
+        stats = PrunerStats(
+            candidate_budget=valid.sum(-1).astype(jnp.int32),
+            pruned_budget=kept.sum(-1).astype(jnp.int32),
+            threshold=thresh,
+            weights=None,
+        )
+        return out, kept, stats, slot_weights
 
     def prune(
         self,

@@ -101,6 +101,21 @@ class TwilightConfig:
     # candidate row of HBM traffic); "jnp" gathers + dequantizes + einsums
     # (the reference and test oracle); "auto" picks pallas on a real TPU.
     estimate_backend: str = "auto"
+    # Fully-fused decode backend: "fused" runs estimate → top-p → attend as
+    # ONE Pallas launch (``kernels/fused_decode``) — scores, thresholds, and
+    # index buffers never round-trip HBM, and only *surviving* K/V rows are
+    # read; "staged" keeps the three-launch compact pipeline above; "auto"
+    # fuses on a real TPU and stays staged elsewhere.  The staged pipeline
+    # remains the equivalence oracle.  Fused silently falls back to staged
+    # when there is nothing to fuse or the kernel cannot express the config:
+    # pruning disabled, estimate_bits > 4 (the kernel consumes packed INT4
+    # codes), reuse_int4_for_attention (final attention reads the fp cache),
+    # or a candidate buffer beyond the kernel's VMEM budget
+    # (``fused_decode.ops.fused_fits``).  ``pruned_cap_frac`` is moot on the
+    # fused path: the kernel attends every kept slot (exact — equivalent to
+    # the staged path with ``pruned_cap_frac=None``), since there is no
+    # second K/V gather left to shrink.
+    fused_backend: str = "auto"
 
     def candidate_budget(self, n: int) -> int:
         if self.fixed_budget:
@@ -134,11 +149,23 @@ class TwilightConfig:
                 and self._resolve_backend(self.estimate_backend,
                                           "estimate_backend"))
 
+    def use_fused_decode(self) -> bool:
+        """Whether the compact pipeline should try the single-launch fused
+        kernel.  The final static gate (candidate buffer vs VMEM budget)
+        lives at the call site where the buffer capacity is known."""
+        if not (self.enabled and self.compact and self.prune_enabled
+                and self.estimate_bits <= 4
+                and not self.reuse_int4_for_attention):
+            return False
+        return self._resolve_backend(self.fused_backend, "fused_backend",
+                                     on="fused", off="staged")
+
     @staticmethod
-    def _resolve_backend(value: str, what: str) -> bool:
-        if value == "pallas":
+    def _resolve_backend(value: str, what: str, *, on: str = "pallas",
+                         off: str = "jnp") -> bool:
+        if value == on:
             return True
-        if value == "jnp":
+        if value == off:
             return False
         if value != "auto":
             raise ValueError(f"unknown {what} {value!r}")
@@ -197,6 +224,23 @@ def _compact_pipeline(
         gather_idx = physical_token_indices(
             ctx.page_table, indices, ctx.page_meta.page_size)
         gather_idx = jnp.where(valid, gather_idx, 0)
+
+    # Fused fast path: estimate → top-p → attend in ONE Pallas launch
+    # (kernels/fused_decode).  Scores, thresholds, and index buffers stay in
+    # VMEM; only surviving K/V rows are read from HBM.  The staged pipeline
+    # below is the equivalence oracle (and the fallback for configs the
+    # kernel cannot express — see ``TwilightConfig.fused_backend``).
+    if cfg.prune_enabled and cfg.use_fused_decode():
+        from repro.kernels.fused_decode.ops import fused_fits
+        group = hq // indices.shape[1]
+        if fused_fits(m, q.shape[-1], group, keys.dtype.itemsize):
+            out, kept, stats, slot_weights = cfg.make_pruner().prune_attend_at(
+                q, gather_idx, valid, keys=keys, values=values, qkeys=qkeys)
+            return TwilightOutput(out=out, candidate_mask=None,
+                                  pruned_mask=None, stats=stats,
+                                  indices=indices, candidate_valid=valid,
+                                  pruned_valid=kept,
+                                  slot_weights=slot_weights)
 
     slot_weights = None
     if not cfg.prune_enabled:

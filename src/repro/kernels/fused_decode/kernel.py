@@ -1,0 +1,252 @@
+"""Pallas kernel: the whole Twilight prune-and-attend, fused into ONE launch.
+
+The staged compact decode path runs three Pallas launches per attention
+layer per decode step — spgemv INT4 estimate, top-p threshold search,
+gathered sparse attention — and round-trips the B0-length score rows,
+weight rows, kept masks, and the optional B1 re-compaction index buffer
+through HBM between every stage.  This kernel is the paper's central
+systems contribution (§4.2: run the hierarchical prune *inside* the
+attention kernel): per (slot, kv-head) grid step it
+
+1. stages the candidate rows' packed INT4 codes into VMEM and computes the
+   estimated scores with the dequantization folded into the matmul
+   epilogue (exactly the spgemv kernel's math — two nibble matmuls on the
+   MXU plus a rank-1 VPU epilogue),
+2. normalizes them with a masked softmax — the weight row never leaves
+   VMEM,
+3. runs the fixed-trip top-p binary search (Algorithm 1) on the resident
+   row, per query head, and unions the kept sets over the GQA group,
+4. immediately performs the pruned sparse attention: surviving candidate
+   rows are DMA'd from the fp16 K/V cache (contiguous or shared page pool)
+   one at a time behind a ``lax.cond`` on the kept bit — **pruned rows are
+   never read from HBM** — and folded into an online-softmax accumulator.
+
+No scores, thresholds, or B1 index buffers are ever materialized in HBM;
+the only O(m) outputs are the kept bitmap and the group-max slot weights,
+which the serving engine is required to see (H2O page-mass maintenance).
+
+Attention semantics match the staged pipeline with ``pruned_cap_frac=None``
+exactly: every kept slot is attended (no weight-ranked B1 truncation — the
+fused kernel has no second gather to shrink, so the cap is moot).
+
+Layout contract (see ``src/repro/kernels/README.md``):
+
+* grid = (B,) with B = batch * kv_heads; per grid step everything is
+  m-resident, so VMEM holds the codes block (m × (d/2 + 8 + 1) bytes), the
+  f32 score/weight rows (group × m × 4 bytes ×~3 live values), and two
+  (1, 1, d) row-DMA scratch buffers.  ``ops.fused_vmem_bytes`` sizes this;
+  the pipeline falls back to the staged path when the estimate exceeds
+  ``ops.FUSED_VMEM_BUDGET`` on a real TPU.
+* ``rows`` are *final* cache coordinates: physical pool rows for a paged
+  cache (translated through the page table before the call, exactly as the
+  staged gathers do), plain cache positions otherwise.  Dead slots carry
+  row 0 (the null page) and ``valid=False``.
+* queries arrive both whole (final attention) and nibble-de-interleaved
+  (estimate), matching the spgemv packing — no in-kernel lane shuffles.
+* the per-row survivor DMA is the traffic-exact formulation (reads exactly
+  the B1 surviving rows); production blocking would batch page-aligned
+  survivor runs behind double buffering — a pure perf refinement that
+  cannot change results.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import NEG_INF, resolve_interpret
+
+
+def _fused_decode_kernel(
+    qf_ref,  # (1, group, d) — whole queries, final attention
+    qe_ref,  # (1, group, d2) — even channels (low nibbles)
+    qo_ref,  # (1, group, d2) — odd channels (high nibbles)
+    packed_ref,  # (1, m, d2) uint8 — gathered candidate INT4 codes
+    scale_ref,  # (1, m) f32
+    zero_ref,  # (1, m) f32
+    valid_ref,  # (1, m) int8 — live candidate slots
+    rows_ref,  # (1, m) i32 — cache rows (physical for paged pools)
+    p_ref,  # (1,) f32 — top-p threshold
+    k_hbm,  # ANY: (b, n, hkv, d) contiguous or (P, hkv, d) pooled
+    v_hbm,  # ANY: same layout as k_hbm
+    out_ref,  # (1, group, d)
+    kept_ref,  # (1, m) int8 — post-top-p survivors (GQA group union)
+    w_ref,  # (1, m) f32 — group-max normalized weights (H2O mass key)
+    thresh_ref,  # (1, group) f32 — applied threshold per query head
+    k_scr,  # VMEM (1, 1, d) cache-dtype row scratch
+    v_scr,  # VMEM (1, 1, d)
+    sem_k,  # DMA semaphores
+    sem_v,
+    *,
+    sm_scale: float,
+    iters: int,
+    hkv: int,
+    pooled: bool,
+):
+    i = pl.program_id(0)
+    bi = i // hkv
+    hi = i % hkv
+
+    qe = qe_ref[0].astype(jnp.float32)  # (group, d2)
+    qo = qo_ref[0].astype(jnp.float32)
+    codes = packed_ref[0]  # (m, d2) uint8
+    low = (codes & 0x0F).astype(jnp.float32)
+    high = (codes >> 4).astype(jnp.float32)
+    scale = scale_ref[0].astype(jnp.float32)  # (m,)
+    zero = zero_ref[0].astype(jnp.float32)
+    valid = valid_ref[0] != 0  # (m,)
+    p = p_ref[0]
+    group, d = qf_ref.shape[1], qf_ref.shape[2]
+    m = codes.shape[0]
+
+    # --- Stage 1: INT4 score estimate (spgemv math, dequant in epilogue) ---
+    dot = jnp.dot(qe, low.T, preferred_element_type=jnp.float32)
+    dot += jnp.dot(qo, high.T, preferred_element_type=jnp.float32)
+    qsum = jnp.sum(qe + qo, axis=-1, keepdims=True)  # (group, 1)
+    est = (dot * scale[None, :] + qsum * zero[None, :]) * sm_scale
+
+    # --- Stage 2: masked softmax — the weight row stays in VMEM ----------
+    neg = jnp.finfo(jnp.float32).min
+    est = jnp.where(valid[None, :], est, neg)
+    mx = jnp.max(est, axis=-1, keepdims=True)
+    unnorm = jnp.where(valid[None, :], jnp.exp(est - mx), 0.0)
+    denom = jnp.sum(unnorm, axis=-1, keepdims=True)
+    w = unnorm / jnp.maximum(denom, jnp.finfo(jnp.float32).tiny)  # (group, m)
+
+    # --- Stage 3: fixed-trip top-p binary search (Algorithm 1) -----------
+    lo = jnp.zeros((group,), jnp.float32)
+    hi_w = jnp.max(w, axis=-1)
+
+    def search(_, carry):
+        lo, hi_w = carry
+        mid = 0.5 * (lo + hi_w)
+        mass = jnp.sum(jnp.where(w >= mid[:, None], w, 0.0), axis=-1)
+        ok = mass >= p
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi_w, mid)
+
+    lo, hi_w = jax.lax.fori_loop(0, iters, search, (lo, hi_w))
+    kept_q = (w >= lo[:, None]) & valid[None, :]  # (group, m) per query head
+    kept = kept_q.any(axis=0)  # (m,) GQA group union — the loaded set
+
+    # --- Stage 4: pruned sparse attention over the survivors -------------
+    # Surviving rows are DMA'd from the fp cache one at a time behind the
+    # kept bit: pruned rows cost no HBM traffic at all (the B1-scaled read
+    # the staged path needs a weight-ranked re-compaction to approximate).
+    qf = qf_ref[0].astype(jnp.float32)  # (group, d)
+    rows = rows_ref[0]  # (m,) i32
+
+    def attend(t, carry):
+        def load_and_update(carry):
+            m_run, l_run, acc = carry
+            row = rows[t]
+            if pooled:
+                src_k = k_hbm.at[pl.ds(row, 1), pl.ds(hi, 1)]
+                src_v = v_hbm.at[pl.ds(row, 1), pl.ds(hi, 1)]
+            else:
+                src_k = k_hbm.at[bi, pl.ds(row, 1), pl.ds(hi, 1)]
+                src_v = v_hbm.at[bi, pl.ds(row, 1), pl.ds(hi, 1)]
+            ck = pltpu.make_async_copy(src_k, k_scr, sem_k)
+            cv = pltpu.make_async_copy(src_v, v_scr, sem_v)
+            ck.start()
+            cv.start()
+            ck.wait()
+            cv.wait()
+            k_row = k_scr[0, 0].astype(jnp.float32)  # (d,)
+            v_row = v_scr[0, 0].astype(jnp.float32)
+            s = jnp.sum(qf * k_row[None, :], axis=-1,
+                        keepdims=True) * sm_scale  # (group, 1)
+            m_new = jnp.maximum(m_run, s)
+            alpha = jnp.exp(m_run - m_new)
+            p_t = jnp.exp(s - m_new)
+            l_new = l_run * alpha + p_t
+            acc_new = acc * alpha + p_t * v_row[None, :]
+            return m_new, l_new, acc_new
+
+        return jax.lax.cond(kept[t], load_and_update, lambda c: c, carry)
+
+    init = (jnp.full((group, 1), NEG_INF, jnp.float32),
+            jnp.zeros((group, 1), jnp.float32),
+            jnp.zeros((group, d), jnp.float32))
+    _, l_run, acc = jax.lax.fori_loop(0, m, attend, init)
+    out = acc / jnp.maximum(l_run, 1e-30)
+    out = jnp.where(l_run > 0.0, out, 0.0)  # fully-pruned rows emit zeros
+
+    out_ref[0] = out.astype(out_ref.dtype)
+    kept_ref[0] = kept.astype(jnp.int8)
+    w_ref[0] = jnp.max(w, axis=0)  # group-max slot weight (H2O ranking key)
+    thresh_ref[0] = lo
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sm_scale", "iters", "hkv", "pooled", "interpret"),
+)
+def fused_decode_rows(
+    qf: jax.Array,  # (B, group, d) — B = batch * kv_heads
+    q_even: jax.Array,  # (B, group, d//2)
+    q_odd: jax.Array,  # (B, group, d//2)
+    packed: jax.Array,  # (B, m, d//2) uint8 — gathered candidate codes
+    scale: jax.Array,  # (B, m) f32
+    zero: jax.Array,  # (B, m) f32
+    valid: jax.Array,  # (B, m) bool/int8
+    rows: jax.Array,  # (B, m) i32 cache rows
+    p: jax.Array,  # scalar f32
+    keys: jax.Array,  # (b, n, hkv, d) or (P, hkv, d) — stays in HBM
+    values: jax.Array,  # same layout as keys
+    *,
+    sm_scale: float,
+    iters: int = 24,
+    hkv: int,
+    pooled: bool,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One launch per call: (out (B, group, d), kept (B, m) int8,
+    slot_weights (B, m) f32, threshold (B, group) f32)."""
+    interpret = resolve_interpret(interpret)
+    B, group, d = qf.shape
+    m = packed.shape[1]
+    d2 = packed.shape[2]
+    valid = valid.astype(jnp.int8)
+    p_arr = jnp.broadcast_to(jnp.asarray(p, jnp.float32), (1,))
+    return pl.pallas_call(
+        functools.partial(_fused_decode_kernel, sm_scale=sm_scale,
+                          iters=iters, hkv=hkv, pooled=pooled),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, group, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, group, d2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, group, d2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m, d2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # K cache/pool, HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),  # V cache/pool, HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((1, group, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, group), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, group, d), qf.dtype),
+            jax.ShapeDtypeStruct((B, m), jnp.int8),
+            jax.ShapeDtypeStruct((B, m), jnp.float32),
+            jax.ShapeDtypeStruct((B, group), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, 1, d), keys.dtype),
+            pltpu.VMEM((1, 1, d), values.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(qf, q_even, q_odd, packed, scale, zero, valid, rows, p_arr,
+      keys, values)

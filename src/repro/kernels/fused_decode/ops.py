@@ -1,0 +1,98 @@
+"""Public wrapper: fused estimate→top-p→attend over a candidate buffer.
+
+Adapts the model/cache layout — q (b, hq, d), candidate indices
+(b, hkv, m), K/V as either the per-slot contiguous cache (b, n, hkv, d) or
+the shared page pool (P, hkv, d) — to the kernel's (B = b*hkv, ...) layout.
+The INT4 codes are gathered at the candidate indices first (same XLA
+gather the staged estimate performs — every candidate's code is read by
+definition); the fp16 K/V stay in HBM and only *surviving* rows are DMA'd
+inside the kernel.
+
+``fused_vmem_bytes``/``fused_fits`` size the per-grid-step VMEM working
+set; the pipeline falls back to the staged path when a candidate buffer
+would not fit (only enforced on real TPUs — interpret mode has no VMEM).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor
+from repro.kernels.common import resolve_interpret
+from repro.kernels.fused_decode.kernel import fused_decode_rows
+
+# Per-core VMEM is ~16 MB; leave headroom for the compiler's own buffers.
+FUSED_VMEM_BUDGET = 12 << 20
+
+
+def fused_vmem_bytes(m: int, d: int, group: int, kv_bytes: int = 2) -> int:
+    """Analytic VMEM working set of one (slot, kv-head) grid step.
+
+    Codes block (m × (d/2 + 8 + 1 + 4 + 1)): packed nibbles, f32
+    scale/zero, valid bitmap, i32 rows; ~3 live (group, m) f32 score/weight
+    rows; queries and the two (1, 1, d) DMA scratch rows.
+    """
+    codes = m * (d // 2 + 8 + 1 + 4 + 1)
+    score_rows = 3 * group * m * 4
+    small = 3 * group * d * 4 + 2 * d * kv_bytes
+    return codes + score_rows + small
+
+
+def fused_fits(m: int, d: int, group: int, kv_bytes: int = 2) -> bool:
+    """Static go/no-go for the fused kernel at this candidate capacity."""
+    if resolve_interpret(None):
+        return True  # interpret mode has no VMEM ceiling
+    return fused_vmem_bytes(m, d, group, kv_bytes) <= FUSED_VMEM_BUDGET
+
+
+def fused_prune_attend(
+    q: jax.Array,  # (b, hq, d)
+    indices: jax.Array,  # (b, hkv, m) i32 — cache rows (physical if paged)
+    valid: jax.Array,  # (b, hkv, m) bool — live candidate slots
+    keys: jax.Array,  # (b, n, hkv, d) cache or (P, hkv, d) pool
+    values: jax.Array,  # same layout as keys
+    qkeys: QuantizedTensor | None = None,  # INT4 shadow, same layout
+    *,
+    p: jax.Array | float,
+    iters: int = 24,
+    sm_scale: float | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Single-launch prune + attend.
+
+    Returns ``(out (b, hq, d), kept (b, hkv, m) bool, slot_weights
+    (b, hkv, m) f32, threshold (b, hq) f32)`` — exactly the pieces the
+    compact pipeline otherwise assembles from three kernel launches.
+    ``kept`` is the GQA group union; every kept slot is attended (the
+    staged path with ``pruned_cap_frac=None``).
+    """
+    from repro.core.attention import gather_quantized_kv_heads
+
+    b, hq, d = q.shape
+    hkv, m = indices.shape[1], indices.shape[2]
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+
+    # Same staging (and same gather-vs-quantize bit-identity) as the
+    # staged estimate — one definition in repro.core.attention.
+    gathered = gather_quantized_kv_heads(indices, keys=keys, qkeys=qkeys)
+
+    qg = q.reshape(b, hkv, group, d).reshape(b * hkv, group, d)
+    out, kept, slot_w, thresh = fused_decode_rows(
+        qg, qg[..., 0::2], qg[..., 1::2],
+        gathered.packed.reshape(b * hkv, m, d // 2),
+        gathered.scale[..., 0].reshape(b * hkv, m).astype(jnp.float32),
+        gathered.zero[..., 0].reshape(b * hkv, m).astype(jnp.float32),
+        valid.reshape(b * hkv, m),
+        indices.reshape(b * hkv, m),
+        jnp.asarray(p, jnp.float32),
+        keys, values,
+        sm_scale=float(sm_scale), iters=iters, hkv=hkv,
+        pooled=keys.ndim == 3, interpret=interpret,
+    )
+    return (out.reshape(b, hq, d),
+            kept.reshape(b, hkv, m) != 0,
+            slot_w.reshape(b, hkv, m),
+            thresh.reshape(b, hq))

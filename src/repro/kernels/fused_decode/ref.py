@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the fused decode kernel.
+
+Composes the staged stages in code space — INT4 estimate from the packed
+codes (the spgemv math, f32 throughout, no bf16 dequant round-trip),
+masked softmax, Algorithm-1 binary search, exact attention over every kept
+slot — so the fused kernel's outputs can be checked stage-for-stage.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topp as topp_lib
+from repro.core.attention import compact_decode_attention, gather_kv_heads
+from repro.core.quant import QuantizedTensor
+
+
+def fused_prune_attend_ref(
+    q: jax.Array,  # (b, hq, d)
+    indices: jax.Array,  # (b, hkv, m) i32
+    valid: jax.Array,  # (b, hkv, m) bool
+    keys: jax.Array,  # (b, n, hkv, d) or (P, hkv, d)
+    values: jax.Array,
+    qkeys: QuantizedTensor,  # INT4 shadow, same layout as keys
+    *,
+    p: jax.Array | float,
+    iters: int = 24,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    b, hq, d = q.shape
+    hkv, m = indices.shape[1], indices.shape[2]
+    group = hq // hkv
+    sm_scale = 1.0 / (d ** 0.5)
+
+    packed = gather_kv_heads(qkeys.packed, indices)  # (b, hkv, m, d2)
+    scale = gather_kv_heads(qkeys.scale, indices)[..., 0].astype(jnp.float32)
+    zero = gather_kv_heads(qkeys.zero, indices)[..., 0].astype(jnp.float32)
+    low = (packed & 0x0F).astype(jnp.float32)
+    high = (packed >> 4).astype(jnp.float32)
+
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32)
+    qe, qo = qg[..., 0::2], qg[..., 1::2]
+    dot = jnp.einsum("bhgc,bhmc->bhgm", qe, low)
+    dot += jnp.einsum("bhgc,bhmc->bhgm", qo, high)
+    qsum = jnp.sum(qg, axis=-1)[..., None]  # (b, hkv, g, 1)
+    est = (dot * scale[:, :, None, :] + qsum * zero[:, :, None, :]) * sm_scale
+
+    valid_g = jnp.broadcast_to(valid[:, :, None, :], est.shape)
+    w = topp_lib.masked_softmax(est, valid_g)
+    res = topp_lib.topp_mask(w, p, iters=iters)
+    kept = (res.mask & valid_g).any(axis=2)  # (b, hkv, m) group union
+
+    kg = gather_kv_heads(keys, indices)
+    vg = gather_kv_heads(values, indices)
+    out = compact_decode_attention(q, kg, vg, kept)
+    return out, kept, w.max(axis=2), res.threshold.reshape(b, hq)

@@ -14,7 +14,10 @@ workload into N successive ``generate()`` calls against ONE engine: the
 paged engine is a persistent session, so calls 2..N hit the radix tree
 populated by call 1 (per-call hit telemetry is printed).  ``--selector``
 overrides the Twilight selector — ``h2o`` now runs paged, backed by the
-pool's per-physical-page accumulated attention mass.  ``--compare`` runs
+pool's per-physical-page accumulated attention mass.  ``--fused``
+overrides ``TwilightConfig.fused_backend`` — ``fused`` runs the whole
+estimate/top-p/attend tail as one Pallas launch per layer per decode
+step.  ``--compare`` runs
 both schedulers on the same workload and reports both tok/s figures (with
 ``--prefix-share``: share-on vs share-off paged engines).
 """
@@ -133,6 +136,13 @@ def main() -> None:
     ap.add_argument("--selector", default=None,
                     help="override the Twilight selector (e.g. h2o — now "
                          "paged-capable via per-page accumulated mass)")
+    ap.add_argument("--fused", default=None,
+                    choices=["auto", "fused", "staged"],
+                    help="decode-attention backend: 'fused' runs estimate/"
+                         "top-p/attend as one Pallas launch per layer "
+                         "(kernels/fused_decode), 'staged' keeps the "
+                         "three-launch compact pipeline, 'auto' (default) "
+                         "fuses on TPU only")
     ap.add_argument("--compare", action="store_true",
                     help="run both schedulers on the same workload "
                          "(with --prefix-share: share-on vs share-off)")
@@ -140,10 +150,14 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.selector:
+    if args.selector or args.fused:
         import dataclasses
-        cfg = cfg.replace(twilight=dataclasses.replace(
-            cfg.twilight, selector=args.selector))
+        tw = cfg.twilight
+        if args.selector:
+            tw = dataclasses.replace(tw, selector=args.selector)
+        if args.fused:
+            tw = dataclasses.replace(tw, fused_backend=args.fused)
+        cfg = cfg.replace(twilight=tw)
     rng = np.random.default_rng(args.seed)
     reqs = _build_requests(cfg, args, rng)
 

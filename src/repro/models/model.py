@@ -16,7 +16,15 @@ layers run Select-then-Prune (``repro.core.twilight``) every step.  With
 the default ``TwilightConfig.compact=True`` the whole jitted decode step
 operates on candidate *index buffers*: the score estimate, top-p search
 and final attention are O(B0), and no n-length f32 weights buffer is ever
-materialized (``PrunerStats.weights`` is None on this path).
+materialized (``PrunerStats.weights`` is None on this path).  With
+``TwilightConfig.fused_backend`` resolving to fused (the TPU default),
+the estimate/top-p/attend tail further collapses into ONE Pallas launch
+per attention layer per decode step (``kernels/fused_decode``) — both
+:func:`decode_step` and :func:`decode_step_paged` pick this up through
+``twilight_decode_attention`` with no change to their contracts (paged
+mode still translates logical indices through the page table before any
+gather, and ``TwilightOutput.slot_weights`` still feeds the H2O page-mass
+scatter-add below).
 """
 
 from __future__ import annotations

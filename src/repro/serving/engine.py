@@ -187,6 +187,13 @@ class DecodeEngine:
             # Serving default: B1-scaled final gather (ROADMAP follow-up).
             # The attended buffer is re-compacted to 1/4 of the candidate
             # buffer, far above the paper's measured ~2 %-of-n budgets.
+            # Only the *staged* backend needs this cap — when
+            # ``tw.fused_backend`` resolves to the fused kernel (the TPU
+            # default), the whole estimate/top-p/attend tail is one Pallas
+            # launch that reads only surviving K/V rows, the cap is ignored
+            # (every kept slot is attended, exactly), and
+            # ``TwilightOutput.slot_weights`` still arrives for the H2O
+            # page-mass scatter-add below.
             cfg = cfg.replace(
                 twilight=dataclasses.replace(tw, pruned_cap_frac=0.25))
         self.cfg = cfg

@@ -1,0 +1,307 @@
+"""Fused single-launch decode kernel vs the staged compact pipeline.
+
+The fused kernel (``kernels/fused_decode``) runs estimate → top-p → sparse
+attention as ONE Pallas launch.  The staged compact pipeline is the
+equivalence oracle; for apples-to-apples numerics the staged estimate is
+pinned to the spgemv backend (``estimate_backend="pallas"``) so both sides
+compute scores in f32 code space, and ``pruned_cap_frac=1.0`` so the
+staged path attends the full kept set exactly as the fused kernel does.
+
+Levels, mirroring how the feature is layered:
+
+* op — ``fused_prune_attend`` vs the pure-jnp ``fused_prune_attend_ref``;
+* core — ``twilight_decode_attention`` fused vs staged for every selector,
+  contiguous and paged (shuffled pool + page tables), ragged lengths;
+* engine — paged continuous batching emits token-identical results fused
+  vs staged, greedy AND sampled, including H2O (whose page-mass feed is
+  the fused kernel's ``slot_weights`` output — asserted bit-equal on the
+  pool accumulator).
+
+Plus the top-p edge cases for both kernels: p→0 (budget collapses to the
+argmax slot per query head), p=1.0 (keeps every valid candidate),
+fully-masked rows, and a candidate budget smaller than one page.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    SelectionContext,
+    TwilightConfig,
+    build_page_meta,
+    calibrate_ds_channels,
+    quantize_int4,
+    twilight_decode_attention,
+)
+from repro.kernels.fused_decode.ops import fused_prune_attend
+from repro.kernels.fused_decode.ref import fused_prune_attend_ref
+from repro.serving import DecodeEngine, Request
+from tests.test_paged_cache import _paged_fixture
+
+SELECTORS = ("full", "quest", "double_sparsity", "streaming", "h2o")
+
+
+def _cfg(selector="quest", fused="staged", **kw):
+    """Staged/fused config pair base: identical numerics on both paths."""
+    kw.setdefault("p", 0.9)
+    kw.setdefault("candidate_frac", 0.5)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("min_candidate", 64)
+    return TwilightConfig(selector=selector, estimate_backend="pallas",
+                          pruned_cap_frac=1.0, fused_backend=fused, **kw)
+
+
+def _setup(rng, b=2, hq=8, hkv=2, n=512, d=64):
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    return q, K, V
+
+
+def _ctx(rng, K, length=None, page=16):
+    b, n, hkv, _ = K.shape
+    return SelectionContext(
+        keys=K,
+        page_meta=build_page_meta(K, page),
+        accum_scores=jnp.asarray(rng.random((b, hkv, n)), jnp.float32),
+        length=length,
+        ds_channels=calibrate_ds_channels(K, 8),
+    )
+
+
+def _assert_fused_matches_staged(fused, staged, *, out_tol=1e-4):
+    np.testing.assert_array_equal(np.asarray(fused.pruned_valid),
+                                  np.asarray(staged.pruned_valid))
+    np.testing.assert_array_equal(np.asarray(fused.candidate_valid),
+                                  np.asarray(staged.candidate_valid))
+    np.testing.assert_array_equal(np.asarray(fused.stats.candidate_budget),
+                                  np.asarray(staged.stats.candidate_budget))
+    np.testing.assert_array_equal(np.asarray(fused.stats.pruned_budget),
+                                  np.asarray(staged.stats.pruned_budget))
+    np.testing.assert_allclose(np.asarray(fused.slot_weights),
+                               np.asarray(staged.slot_weights),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(fused.stats.threshold),
+                               np.asarray(staged.stats.threshold),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(fused.out), np.asarray(staged.out),
+                               rtol=out_tol, atol=out_tol)
+
+
+# ---------------------------------------------------------------------------
+# Op level: kernel vs the pure-jnp reference
+# ---------------------------------------------------------------------------
+
+def test_fused_op_matches_ref(rng):
+    q, K, V = _setup(rng, n=256)
+    b, n, hkv, d = K.shape
+    m = 128
+    qkeys = quantize_int4(K)
+    idx = jnp.asarray(np.sort(rng.choice(n, size=(b, hkv, m)), -1), jnp.int32)
+    valid = jnp.asarray(rng.random((b, hkv, m)) < 0.9)
+    idx = jnp.where(valid, idx, 0)
+    out, kept, w, th = fused_prune_attend(q, idx, valid, K, V, qkeys, p=0.9)
+    ro, rk, rw, rt = fused_prune_attend_ref(q, idx, valid, K, V, qkeys, p=0.9)
+    np.testing.assert_array_equal(np.asarray(kept), np.asarray(rk))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(rw),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(th), np.asarray(rt),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ro),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fused_op_all_masked_row_emits_zeros(rng):
+    """A fully-invalid candidate row (dead engine slot) keeps nothing and
+    outputs exact zeros — in the kernel AND the staged pruner."""
+    q, K, V = _setup(rng, n=256)
+    b, n, hkv, d = K.shape
+    m, group = 128, q.shape[1] // hkv
+    qkeys = quantize_int4(K)
+    idx = jnp.asarray(np.sort(rng.choice(n, size=(b, hkv, m)), -1), jnp.int32)
+    valid = jnp.asarray(rng.random((b, hkv, m)) < 0.9).at[0, 0].set(False)
+    idx = jnp.where(valid, idx, 0)
+    out, kept, w, th = fused_prune_attend(q, idx, valid, K, V, qkeys, p=0.9)
+    assert not np.asarray(kept)[0, 0].any()
+    assert (np.asarray(w)[0, 0] == 0).all()
+    np.testing.assert_array_equal(np.asarray(out)[0, :group], 0.0)
+    # Staged: same dead row through prune_at.
+    pruner = _cfg().make_pruner()
+    kept_s, _, w_s = pruner.prune_at(q, idx, valid, keys=K, qkeys=qkeys)
+    assert not np.asarray(kept_s)[0, 0].any()
+    assert (np.asarray(w_s)[0, 0] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Core: fused pipeline vs staged pipeline, contiguous and paged
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("selector", SELECTORS)
+@pytest.mark.parametrize("ragged", [False, True])
+def test_fused_pipeline_matches_staged(rng, selector, ragged):
+    q, K, V = _setup(rng)
+    length = jnp.asarray([512, 300]) if ragged else None
+    ctx = _ctx(rng, K, length=length)
+    staged = twilight_decode_attention(
+        q, K, V, _cfg(selector, "staged"), ctx=ctx, length=length)
+    fused = twilight_decode_attention(
+        q, K, V, _cfg(selector, "fused"), ctx=ctx, length=length)
+    _assert_fused_matches_staged(fused, staged)
+
+
+@pytest.mark.parametrize("selector", SELECTORS)
+def test_fused_pipeline_matches_staged_paged(rng, selector):
+    """Shuffled physical pool + page tables: the fused kernel DMAs from the
+    pool at pre-translated physical rows, exactly like the staged gathers."""
+    fx = _paged_fixture(rng)
+    length = jnp.asarray([256, 180])
+    kw = dict(candidate_frac=0.5, min_candidate=64)
+    staged = twilight_decode_attention(
+        fx["q"], fx["k_pool"], fx["v_pool"], _cfg(selector, "staged", **kw),
+        ctx=fx["ctx_paged"](length), qkeys=fx["qkeys_pool"], length=length)
+    fused = twilight_decode_attention(
+        fx["q"], fx["k_pool"], fx["v_pool"], _cfg(selector, "fused", **kw),
+        ctx=fx["ctx_paged"](length), qkeys=fx["qkeys_pool"], length=length)
+    _assert_fused_matches_staged(fused, staged)
+
+
+def test_fused_budget_below_one_page(rng):
+    """B0 smaller than one page: the page-granular selector still emits one
+    whole page and both paths agree (incl. the dense oracle)."""
+    q, K, V = _setup(rng, n=256)
+    ctx = _ctx(rng, K)
+    kw = dict(fixed_budget=8, candidate_frac=0.25, min_candidate=1)
+    staged = twilight_decode_attention(q, K, V, _cfg("quest", "staged", **kw),
+                                       ctx=ctx)
+    fused = twilight_decode_attention(q, K, V, _cfg("quest", "fused", **kw),
+                                      ctx=ctx)
+    assert int(np.asarray(staged.stats.candidate_budget).max()) <= 16
+    _assert_fused_matches_staged(fused, staged)
+    dense = twilight_decode_attention(
+        q, K, V, dataclasses.replace(_cfg("quest", "staged", **kw),
+                                     compact=False), ctx=ctx)
+    np.testing.assert_allclose(np.asarray(fused.out), np.asarray(dense.out),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Top-p edge cases, fused and staged
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["staged", "fused"])
+def test_p_to_zero_collapses_to_argmax(rng, backend):
+    """p→0: the binary search converges to max(w), so each query head keeps
+    exactly its argmax slot; the loaded set is the group union of argmaxes."""
+    q, K, V = _setup(rng)
+    ctx = _ctx(rng, K)
+    out = twilight_decode_attention(
+        q, K, V, _cfg("quest", backend, p=1e-9), ctx=ctx)
+    b, hkv, _ = out.pruned_valid.shape
+    group = q.shape[1] // hkv
+    budgets = np.asarray(out.stats.pruned_budget)
+    assert (budgets >= 1).all() and (budgets <= group).all()
+
+
+def test_p_to_zero_fused_matches_staged(rng):
+    q, K, V = _setup(rng)
+    ctx = _ctx(rng, K)
+    staged = twilight_decode_attention(q, K, V, _cfg("quest", "staged",
+                                                     p=1e-9), ctx=ctx)
+    fused = twilight_decode_attention(q, K, V, _cfg("quest", "fused",
+                                                    p=1e-9), ctx=ctx)
+    _assert_fused_matches_staged(fused, staged)
+
+
+@pytest.mark.parametrize("backend", ["staged", "fused"])
+def test_p_one_keeps_all_valid(rng, backend):
+    """p=1.0: no threshold below the full mass exists, so every valid
+    candidate survives (thresholds may differ in the last ulp between
+    backends — the *set* semantics are what is pinned here)."""
+    q, K, V = _setup(rng)
+    length = jnp.asarray([512, 300])
+    ctx = _ctx(rng, K, length=length)
+    out = twilight_decode_attention(
+        q, K, V, _cfg("quest", backend, p=1.0), ctx=ctx, length=length)
+    np.testing.assert_array_equal(np.asarray(out.pruned_valid),
+                                  np.asarray(out.candidate_valid))
+
+
+# ---------------------------------------------------------------------------
+# Engine: fused serving is token-exact vs staged, greedy and sampled
+# ---------------------------------------------------------------------------
+
+def _serving_cfg(selector="quest", fused="staged"):
+    cfg = get_smoke_config("qwen2-1.5b")
+    return cfg.replace(twilight=dataclasses.replace(
+        cfg.twilight, selector=selector, estimate_backend="pallas",
+        pruned_cap_frac=1.0, fused_backend=fused))
+
+
+def test_engine_fused_matches_staged_greedy_and_sampled(rng):
+    reqs = []
+    cfg_s = _serving_cfg("quest", "staged")
+    for uid, (L, mn, greedy) in enumerate([(24, 5, True), (17, 4, False),
+                                           (9, 3, True), (13, 4, False)]):
+        reqs.append(Request(
+            uid=uid, prompt=rng.integers(8, cfg_s.vocab_size, L
+                                         ).astype(np.int32),
+            max_new_tokens=mn, greedy=greedy))
+    staged = DecodeEngine(cfg_s, batch_size=2, cache_capacity=64, seed=7,
+                          paged=True)
+    fused = DecodeEngine(_serving_cfg("quest", "fused"), params=staged.params,
+                         batch_size=2, cache_capacity=64, seed=7, paged=True)
+    want = {r.uid: r.tokens for r in staged.generate(reqs)}
+    got = {r.uid: r.tokens for r in fused.generate(reqs)}
+    assert got == want
+
+
+def test_engine_fused_h2o_token_exact_with_mass_parity(rng):
+    """Paged H2O fed by the fused kernel's ``slot_weights``: tokens AND the
+    per-physical-page mass accumulator must match the staged engine."""
+    cfg_s = _serving_cfg("h2o", "staged")
+    reqs = [Request(uid=uid,
+                    prompt=rng.integers(8, cfg_s.vocab_size, L
+                                        ).astype(np.int32),
+                    max_new_tokens=mn)
+            for uid, (L, mn) in enumerate([(24, 5), (17, 3), (9, 4)])]
+    staged = DecodeEngine(cfg_s, batch_size=2, cache_capacity=64, seed=7,
+                          paged=True)
+    fused = DecodeEngine(_serving_cfg("h2o", "fused"), params=staged.params,
+                         batch_size=2, cache_capacity=64, seed=7, paged=True)
+    want = {r.uid: r.tokens for r in staged.generate(reqs)}
+    got = {r.uid: r.tokens for r in fused.generate(reqs)}
+    assert got == want
+    flat_s = jax.tree_util.tree_leaves_with_path(staged._state)
+    flat_f = dict(jax.tree_util.tree_leaves_with_path(fused._state))
+    mass = [(p, s) for p, s in flat_s if "h2o_mass" in str(p)]
+    assert mass, "paged H2O pools must carry per-page mass"
+    for path, s in mass:
+        np.testing.assert_allclose(np.asarray(flat_f[path]), np.asarray(s),
+                                   rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Config resolution
+# ---------------------------------------------------------------------------
+
+def test_fused_backend_resolution():
+    assert not TwilightConfig(fused_backend="staged").use_fused_decode()
+    assert TwilightConfig(fused_backend="fused").use_fused_decode()
+    # "auto" fuses on TPU only; this container is CPU.
+    assert TwilightConfig(fused_backend="auto").use_fused_decode() == (
+        jax.default_backend() == "tpu")
+    # Nothing to fuse / kernel cannot express the config -> staged.
+    assert not TwilightConfig(fused_backend="fused",
+                              prune_enabled=False).use_fused_decode()
+    assert not TwilightConfig(fused_backend="fused",
+                              estimate_bits=16).use_fused_decode()
+    assert not TwilightConfig(
+        fused_backend="fused",
+        reuse_int4_for_attention=True).use_fused_decode()
+    with pytest.raises(ValueError, match="fused_backend"):
+        TwilightConfig(fused_backend="bogus").use_fused_decode()

@@ -92,6 +92,46 @@ else:
         _monotone_in_p(seed)
 
 
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_p_extremes(rng, impl):
+    """p→0 collapses to the argmax token; p=1.0 keeps every token with
+    positive weight — in the reference and the Pallas row-kernel alike."""
+    if impl == "pallas":
+        from repro.kernels.topp.ops import topp_mask as mask_fn
+    else:
+        mask_fn = topp_mask
+    # Scale fractionally below 1 so the row's fp sum is strictly < p=1.0:
+    # whether the mass reaches exactly 1.0 is an ulp-level accident of the
+    # summation order; "p unreachable -> keep everything" is the pinned
+    # semantic (the pipeline's masked_softmax rows behave the same way).
+    w = jnp.asarray(make_weights(rng, 8, 256, 3.0) * (1 - 1e-6))[None]
+    lo = mask_fn(w, 1e-9)
+    mask = np.asarray(lo.mask)[0]
+    wn = np.asarray(w)[0]
+    assert mask[np.arange(8), wn.argmax(-1)].all()
+    assert (np.asarray(lo.budget) >= 1).all()
+    # Ties at the max are measure-zero for random weights: argmax only.
+    assert (np.asarray(lo.budget) == 1).all()
+    hi = mask_fn(w, 1.0)
+    assert np.asarray(hi.mask)[0].all(), "p=1.0 keeps the whole row"
+
+
+def test_pallas_topp_matches_jnp_on_masked_rows(rng):
+    """Rows with zero weights (masked-out candidates) agree between the
+    Pallas kernel and the reference, including an all-zero row."""
+    from repro.kernels.topp.ops import topp_mask as pallas_mask
+    w = make_weights(rng, 8, 128, 3.0)
+    w[:, 64:] = 0.0  # half the row masked out
+    w[3] = 0.0  # a fully-masked row
+    wj = jnp.asarray(w)[None]
+    ref = topp_mask(wj, 0.9)
+    pal = pallas_mask(wj, 0.9)
+    np.testing.assert_array_equal(np.asarray(ref.mask), np.asarray(pal.mask))
+    np.testing.assert_allclose(np.asarray(ref.threshold),
+                               np.asarray(pal.threshold), rtol=1e-6,
+                               atol=1e-9)
+
+
 def test_adaptive_budget_focused_vs_diffuse(rng):
     """The paper's core claim: focused attention needs far fewer tokens."""
     focused = make_weights(rng, 8, 1024, 8.0)

@@ -1,0 +1,78 @@
+#!/usr/bin/env python3
+"""Docs link/reference checker — fails CI on rot.
+
+Scans every tracked markdown file for
+
+* relative markdown links ``[text](path)`` — the target must exist on
+  disk (``#fragment`` suffixes and ``http(s)://``/``mailto:`` links are
+  ignored);
+* repo-file references inside code spans/blocks — any token shaped like
+  ``src/…/file.py``, ``benchmarks/…``, ``examples/…``, ``docs/…``,
+  ``tests/…``, ``tools/…``, or ``.github/…`` must exist, so command lines
+  and layout listings in README/docs can't silently rot.
+
+Usage: python tools/check_docs.py [file.md …]   (no args: all tracked .md)
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# Repo paths mentioned in prose/code blocks: a known top-level dir followed
+# by a concrete file with an extension (directories get a trailing /).
+PATH_RE = re.compile(
+    r"(?<![\w/.-])((?:src|benchmarks|examples|docs|tests|tools|\.github)"
+    r"/[\w./-]*[\w-]\.[\w]+|(?:src|benchmarks|examples|docs|tests|tools)"
+    r"/[\w./-]*/)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def tracked_markdown() -> list[str]:
+    out = subprocess.run(["git", "ls-files", "*.md", "**/*.md"],
+                         cwd=ROOT, capture_output=True, text=True,
+                         check=True).stdout
+    return sorted(set(out.split()))
+
+
+def check_file(relpath: str) -> list[str]:
+    errors = []
+    path = os.path.join(ROOT, relpath)
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    base = os.path.dirname(path)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_SCHEMES):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(base, target))):
+            errors.append(f"{relpath}: broken link -> {m.group(1)}")
+    for m in PATH_RE.finditer(text):
+        target = m.group(1)
+        if not os.path.exists(os.path.join(ROOT, target)):
+            errors.append(f"{relpath}: missing repo path -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = sys.argv[1:] or tracked_markdown()
+    errors: list[str] = []
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"checked {len(files)} markdown files: "
+          f"{'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
