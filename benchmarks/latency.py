@@ -361,6 +361,63 @@ def _fused_axis_rows(runner, prefix: str, batch: int, total_new: int,
             f"ttft={ttft_speed:.2f};tok_s={speed:.2f}")
     out.append({"name": f"{prefix}_fused_speedup_b{batch}",
                 "ttft_speedup": ttft_speed, "tok_s_speedup": speed})
+
+    # Survivor-DMA granularity axis: the fused run re-priced at per-row vs
+    # run-coalesced transaction granularity — ``total_eff`` = payload +
+    # per-copy descriptor overhead, the bytes a bandwidth model should
+    # price.  Run telemetry (transactions and effective bytes at the 32k
+    # reference context) rides along in the JSON rows.
+    ref_n = 32768
+    for tag, dma in (("fused_dma_row", "row"), ("fused_dma_run", "run")):
+        def attn_fn(ctx: int, dma=dma) -> float:
+            tr = twilight_pipeline_traffic(tw, ctx, hq, hkv, d, fused=True,
+                                           dma=dma)
+            return n_layers * bytes_to_us(tr["total_eff"])
+
+        ttft_us, total = runner(attn_fn)
+        totals[tag] = (ttft_us, total)
+        tok_s = total_new / (total * 1e-6)
+        ref = twilight_pipeline_traffic(tw, ref_n, hq, hkv, d, fused=True,
+                                        dma=dma)
+        out.append({"name": f"{prefix}_{tag}_b{batch}", "ttft_us": ttft_us,
+                    "total_us": total, "tok_s": tok_s,
+                    "attend_txns_32k": ref["attend_txns"],
+                    "eff_bytes_32k": ref["total_eff"]})
+        csv_row(f"{prefix}_{tag}_b{batch}", total,
+                f"ttft_us={ttft_us:.1f};tok_s={tok_s:.1f};"
+                f"txns_32k={ref['attend_txns']:.0f}")
+    dma_speed = totals["fused_dma_row"][1] / totals["fused_dma_run"][1]
+    csv_row(f"{prefix}_fused_dma_speedup_b{batch}", 0.0,
+            f"tok_s={dma_speed:.2f}")
+    out.append({"name": f"{prefix}_fused_dma_speedup_b{batch}",
+                "tok_s_speedup": dma_speed})
+
+    # Multi-token window axis: one fused launch decodes k queued tokens
+    # (preemption replay / speculative verify) against the union of their
+    # survivor sets — priced per token, run-coalesced DMA.
+    for k in (1, 4):
+        def attn_fn(ctx: int, k=k) -> float:
+            tr = twilight_pipeline_traffic(tw, ctx, hq, hkv, d, fused=True,
+                                           dma="run", k=k)
+            return n_layers * bytes_to_us(tr["per_token"])
+
+        ttft_us, total = runner(attn_fn)
+        totals[f"multitok_k{k}"] = (ttft_us, total)
+        tok_s = total_new / (total * 1e-6)
+        ref = twilight_pipeline_traffic(tw, ref_n, hq, hkv, d, fused=True,
+                                        dma="run", k=k)
+        out.append({"name": f"{prefix}_fused_multitok_k{k}_b{batch}",
+                    "ttft_us": ttft_us, "total_us": total, "tok_s": tok_s,
+                    "launches_per_token": ref["launches_per_token"],
+                    "per_token_bytes_32k": ref["per_token"]})
+        csv_row(f"{prefix}_fused_multitok_k{k}_b{batch}", total,
+                f"ttft_us={ttft_us:.1f};tok_s={tok_s:.1f};"
+                f"launches_per_tok={ref['launches_per_token']:.2f}")
+    mt_speed = totals["multitok_k1"][1] / totals["multitok_k4"][1]
+    csv_row(f"{prefix}_fused_multitok_speedup_b{batch}", 0.0,
+            f"tok_s={mt_speed:.2f};launch_x=4.00")
+    out.append({"name": f"{prefix}_fused_multitok_speedup_b{batch}",
+                "tok_s_speedup": mt_speed, "launch_x": 4.0})
     return out
 
 

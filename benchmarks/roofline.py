@@ -167,6 +167,10 @@ def fused_table(contexts=(8192, 32768, 65536, 131072), *, hq=32, hkv=8,
     LLaMA-class GQA shape, serving Twilight config.  ``bytes_x`` /
     ``launches_x`` are the staged/fused reduction factors the fused kernel
     buys; ``tail_x`` excludes the (identical) selector page scan.
+    ``row_eff`` / ``run_eff`` price the fused kernel's survivor DMA at
+    per-row vs run-coalesced transaction granularity (payload + per-copy
+    overhead — the *effective* bytes a bandwidth model sees); ``dma_x`` is
+    the effective-bandwidth improvement run coalescing buys.
     """
     from repro.analysis.costs import serving_pipeline_config
 
@@ -175,6 +179,10 @@ def fused_table(contexts=(8192, 32768, 65536, 131072), *, hq=32, hkv=8,
     for n in contexts:
         st = twilight_pipeline_traffic(tw, n, hq, hkv, d, fused=False)
         fu = twilight_pipeline_traffic(tw, n, hq, hkv, d, fused=True)
+        row = twilight_pipeline_traffic(tw, n, hq, hkv, d, fused=True,
+                                        dma="row")
+        run = twilight_pipeline_traffic(tw, n, hq, hkv, d, fused=True,
+                                        dma="run")
         rows.append({
             "n": n,
             "staged_bytes": st["total"], "fused_bytes": fu["total"],
@@ -184,20 +192,68 @@ def fused_table(contexts=(8192, 32768, 65536, 131072), *, hq=32, hkv=8,
             "bytes_x": st["total"] / fu["total"],
             "tail_x": st["tail"] / fu["tail"],
             "launches_x": st["launches"] / fu["launches"],
+            "row_eff": row["total_eff"], "run_eff": run["total_eff"],
+            "row_txns": row["attend_txns"], "run_txns": run["attend_txns"],
+            "dma_x": row["total_eff"] / run["total_eff"],
         })
     return rows
 
 
 def print_fused_table(rows: list[dict]) -> None:
     hdr = (f"{'context':>9s} {'staged MB':>10s} {'fused MB':>9s} "
-           f"{'bytes_x':>8s} {'tail_x':>7s} {'launches':>9s}")
+           f"{'bytes_x':>8s} {'tail_x':>7s} {'launches':>9s} "
+           f"{'rowDMA MB':>10s} {'runDMA MB':>10s} {'dma_x':>6s}")
     print(hdr)
     print("-" * len(hdr))
     for r in rows:
         print(f"{r['n']:9d} {r['staged_bytes'] / 1e6:10.2f} "
               f"{r['fused_bytes'] / 1e6:9.2f} {r['bytes_x']:8.2f} "
               f"{r['tail_x']:7.2f} "
-              f"{r['staged_launches']:.0f} -> {r['fused_launches']:.0f}")
+              f"{r['staged_launches']:.0f} -> {r['fused_launches']:.0f}    "
+              f"{r['row_eff'] / 1e6:10.2f} {r['run_eff'] / 1e6:10.2f} "
+              f"{r['dma_x']:6.2f}")
+
+
+def multitok_table(contexts=(8192, 32768, 65536, 131072), ks=(1, 2, 4, 8),
+                   *, hq=32, hkv=8, d=128) -> list[dict]:
+    """Multi-token fused decode: per-token effective bytes and launches.
+
+    One fused launch decodes ``k`` queued tokens (preemption replay,
+    speculative verify) against the union of their survivor sets — K/V
+    runs stream once for all ``k`` online-softmax accumulators.
+    ``per_tok_x``/``launch_x`` are the k=1 / k improvement factors.
+    """
+    from repro.analysis.costs import serving_pipeline_config
+
+    tw = serving_pipeline_config()
+    rows = []
+    for n in contexts:
+        base = twilight_pipeline_traffic(tw, n, hq, hkv, d, fused=True,
+                                         dma="run", k=1)
+        for k in ks:
+            r = twilight_pipeline_traffic(tw, n, hq, hkv, d, fused=True,
+                                          dma="run", k=k)
+            rows.append({
+                "n": n, "k": k,
+                "total_eff": r["total_eff"],
+                "per_token": r["per_token"],
+                "launches_per_token": r["launches_per_token"],
+                "per_tok_x": base["per_token"] / r["per_token"],
+                "launch_x": (base["launches_per_token"]
+                             / r["launches_per_token"]),
+            })
+    return rows
+
+
+def print_multitok_table(rows: list[dict]) -> None:
+    hdr = (f"{'context':>9s} {'k':>3s} {'eff MB':>8s} {'per-tok MB':>11s} "
+           f"{'launch/tok':>11s} {'per_tok_x':>10s} {'launch_x':>9s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['n']:9d} {r['k']:3d} {r['total_eff'] / 1e6:8.2f} "
+              f"{r['per_token'] / 1e6:11.3f} {r['launches_per_token']:11.3f} "
+              f"{r['per_tok_x']:10.2f} {r['launch_x']:9.2f}")
 
 
 def main() -> None:
@@ -209,16 +265,29 @@ def main() -> None:
     ap.add_argument("--fused", action="store_true",
                     help="print the fused-vs-staged decode-pipeline bytes/"
                          "launch table instead of the arch roofline")
+    ap.add_argument("--multitok", action="store_true",
+                    help="also print the multi-token fused decode table "
+                         "(per-token effective bytes and launches vs k)")
     args = ap.parse_args()
-    if args.fused:
-        rows = fused_table()
-        print_fused_table(rows)
-        out = os.path.join(os.path.dirname(args.jsonl) or ".",
-                           "roofline_fused.json")
-        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
-        with open(out, "w") as f:
-            json.dump(rows, f, indent=1)
-        print(f"\nwrote {out}")
+    if args.fused or args.multitok:
+        outdir = os.path.dirname(args.jsonl) or "."
+        os.makedirs(outdir, exist_ok=True)
+        if args.fused:
+            rows = fused_table()
+            print_fused_table(rows)
+            out = os.path.join(outdir, "roofline_fused.json")
+            with open(out, "w") as f:
+                json.dump(rows, f, indent=1)
+            print(f"\nwrote {out}")
+        if args.multitok:
+            if args.fused:
+                print()
+            mrows = multitok_table()
+            print_multitok_table(mrows)
+            mout = os.path.join(outdir, "roofline_multitok.json")
+            with open(mout, "w") as f:
+                json.dump(mrows, f, indent=1)
+            print(f"\nwrote {mout}")
         return
     path = args.jsonl
     rows = full_table(path)

@@ -14,7 +14,10 @@ bwd); attention for causal training uses the n/2 average context.
 
 from __future__ import annotations
 
+import math
+
 from repro.core.twilight import TwilightConfig
+from repro.kernels.fused_decode.kernel import DMA_OVERHEAD_BYTES
 from repro.models.common import ModelConfig
 from repro.models.model import layer_schedule
 
@@ -230,7 +233,11 @@ def serving_pipeline_config() -> TwilightConfig:
 def twilight_pipeline_traffic(tw: TwilightConfig, n: int, hq: int, hkv: int,
                               d: int, *, fused: bool,
                               bytes_kv: int = BYTES_BF16,
-                              b1: int | None = None) -> dict[str, float]:
+                              b1: int | None = None,
+                              dma: str | None = None, k: int = 1,
+                              mean_run: float = 16.0,
+                              union_growth: float = 0.1
+                              ) -> dict[str, float]:
     """Per-step HBM bytes **and Pallas launches** of the compact decode
     attention operator — staged pipeline vs the fused single-launch kernel.
 
@@ -255,11 +262,38 @@ def twilight_pipeline_traffic(tw: TwilightConfig, n: int, hq: int, hkv: int,
     ``select`` (identical both ways — outside the fusion boundary),
     ``estimate``, ``interstage``, ``attend``, ``outputs``, ``tail`` (the
     fused region: everything but select), ``total``, ``launches``.
+
+    **DMA granularity** (``dma``): ``None`` models payload bytes only (the
+    legacy output, bit-identical).  ``"row"`` / ``"run"`` additionally
+    model the *transaction* structure of the fused kernel's survivor
+    streaming: each async copy pays ``DMA_OVERHEAD_BYTES`` of descriptor /
+    latency cost on top of its payload.  Per-row DMA issues one K and one
+    V copy per surviving row; run-coalesced DMA (the block-RLE kernel)
+    issues one per contiguous run of ``mean_run`` expected rows.  The
+    extra keys are ``attend_txns`` (copies issued for the final K/V
+    stream), ``total_eff`` (total + txns·overhead — the effective bytes a
+    bandwidth model should price), ``launches_per_token`` and
+    ``per_token`` (``total_eff``/token).
+
+    **Multi-token decode** (``k``): one fused launch decodes ``k`` queued
+    tokens against the union of their survivor sets (the union grows by
+    ``union_growth`` per extra position).  K/V stream once for all ``k``
+    accumulators; per-position kept/slot-weight outputs scale with ``k``.
+    The staged pipeline has no window path — ``k`` just repeats it.
     """
+    def _finish(row: dict[str, float], txns: float, launches: float,
+                kk: int) -> dict[str, float]:
+        total_eff = row["total"] + txns * DMA_OVERHEAD_BYTES
+        return {**row, "launches": launches, "attend_txns": float(txns),
+                "total_eff": float(total_eff),
+                "launches_per_token": launches / kk,
+                "per_token": total_eff / kk}
+
     if not (tw.enabled and tw.compact and tw.prune_enabled):
         st = twilight_stage_bytes(tw, n, hq, hkv, d, bytes_kv=bytes_kv)
-        return {**st, "interstage": 0.0, "outputs": 0.0,
-                "tail": st["total"] - st["select"], "launches": 1.0}
+        st = {kk: v * k for kk, v in st.items()}
+        return _finish({**st, "interstage": 0.0, "outputs": 0.0,
+                        "tail": st["total"] - st["select"]}, 0.0, 1.0 * k, k)
     b0 = tw.candidate_budget(n)
     m = min(n, b0)
     if b1 is None:
@@ -270,30 +304,45 @@ def twilight_pipeline_traffic(tw: TwilightConfig, n: int, hq: int, hkv: int,
     score_row = hq * m * BYTES_F32
     out_bytes = hq * d * bytes_kv
     if fused:
+        # GQA-group union over the k window positions: K/V stream once.
+        b1_k = min(m, int(math.ceil(b1 * (1.0 + union_growth * (k - 1)))))
         est = float(codes)
         interstage = 0.0
-        attend = 2 * b1 * hkv * d * bytes_kv
-        outputs = hkv * m * (1 + BYTES_F32) + out_bytes  # kept + slot_weights
+        attend = 2 * b1_k * hkv * d * bytes_kv
+        # kept + slot_weights per position (the H2O mass feed).
+        outputs = k * (hkv * m * (1 + BYTES_F32) + out_bytes)
         launches = 1.0
+        txns = 0.0
+        if dma == "row":
+            txns = 2.0 * hkv * b1_k
+        elif dma == "run":
+            txns = 2.0 * hkv * math.ceil(b1_k / mean_run)
+        elif dma is not None:
+            raise ValueError(f"dma must be None, 'row' or 'run': {dma!r}")
     else:
-        est = float(codes + score_row)  # codes in, score row out
+        est = float(codes + score_row) * k  # codes in, score row out
         attn_len = tw.pruned_capacity(m)
         # score row back in; weight row out + back in (mask, slot_weights
         # ranking); kept bitmap and slot weights round-trip; the B1 index
         # buffer round-trips when the cap re-compacts.
         interstage = (score_row + 2 * score_row
                       + 2 * hkv * m
-                      + 2 * hkv * m * BYTES_F32)
+                      + 2 * hkv * m * BYTES_F32) * k
         if attn_len < m:
-            interstage += 2 * attn_len * hkv * 4
-        attend = 2 * attn_len * hkv * d * bytes_kv
-        outputs = float(out_bytes)
-        launches = 3.0
+            interstage += 2 * attn_len * hkv * 4 * k
+        attend = 2 * attn_len * hkv * d * bytes_kv * k
+        outputs = float(out_bytes) * k
+        launches = 3.0 * k
+        sel = sel * k
+        # The staged gather materializes a compacted K/V buffer — its
+        # copies are row-granular no matter what the fused kernel does.
+        txns = 2.0 * hkv * attn_len * k if dma is not None else 0.0
     tail = est + interstage + attend + outputs
-    return {"select": float(sel), "estimate": est,
-            "interstage": float(interstage), "attend": float(attend),
-            "outputs": float(outputs), "tail": float(tail),
-            "total": float(sel + tail), "launches": launches}
+    return _finish(
+        {"select": float(sel), "estimate": est,
+         "interstage": float(interstage), "attend": float(attend),
+         "outputs": float(outputs), "tail": float(tail),
+         "total": float(sel + tail)}, txns, launches, k)
 
 
 def decode_flops(cfg: ModelConfig, batch: int, ctx: int) -> float:

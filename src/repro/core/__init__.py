@@ -46,7 +46,9 @@ from repro.core.topp import (
 from repro.core.twilight import (
     TwilightConfig,
     TwilightOutput,
+    TwilightWindowOutput,
     twilight_decode_attention,
+    twilight_decode_window_attention,
 )
 
 __all__ = [
@@ -87,5 +89,7 @@ __all__ = [
     "topp_threshold",
     "TwilightConfig",
     "TwilightOutput",
+    "TwilightWindowOutput",
     "twilight_decode_attention",
+    "twilight_decode_window_attention",
 ]

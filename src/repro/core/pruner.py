@@ -181,6 +181,7 @@ class TwilightPruner:
         values: jax.Array,  # same layout as keys
         qkeys: quant_lib.QuantizedTensor | None = None,
         p: jax.Array | float | None = None,
+        page_size: int = 64,
     ) -> tuple[jax.Array, jax.Array, PrunerStats, jax.Array]:
         """Fused prune **and** attend: one Pallas launch for the whole
         estimate → top-p → sparse-attention tail of the pipeline
@@ -193,14 +194,15 @@ class TwilightPruner:
         from the cache.  Every kept slot is attended (equivalent to the
         staged path with ``pruned_cap_frac=None``).  As in :meth:`prune_at`,
         ``indices`` are final cache coordinates (physical pool rows for a
-        paged cache).
+        paged cache); ``page_size`` sets the kernel's block-run coalescing
+        granularity (must match the pool's physical page size).
         """
         from repro.kernels.fused_decode.ops import fused_prune_attend
 
         p_val = self.p if p is None else p
         out, kept, slot_weights, thresh = fused_prune_attend(
             q, indices, valid, keys, values, qkeys, p=p_val,
-            iters=self.iters)
+            iters=self.iters, page_size=page_size)
         stats = PrunerStats(
             candidate_budget=valid.sum(-1).astype(jnp.int32),
             pruned_budget=kept.sum(-1).astype(jnp.int32),
@@ -208,6 +210,75 @@ class TwilightPruner:
             weights=None,
         )
         return out, kept, stats, slot_weights
+
+    def prune_attend_window_at(
+        self,
+        q: jax.Array,  # (b, kw, hq, d) — kw queued window positions
+        indices: jax.Array,  # (b, hkv, m) i32 — shared candidate buffer
+        valid: jax.Array,  # (b, kw, hkv, m) bool — per-position validity
+        *,
+        keys: jax.Array,
+        values: jax.Array,
+        qkeys: quant_lib.QuantizedTensor | None = None,
+        p: jax.Array | float | None = None,
+        page_size: int = 64,
+    ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+        """Multi-token fused prune + attend: ONE launch per layer decodes
+        all kw window positions against one shared candidate buffer
+        (selection anchored once; per-position causal validity in
+        ``valid``).  The kernel streams the window *union* of survivor
+        sets from HBM once.
+
+        Returns per-position raw pieces ``(out (b, kw, hq, d), kept
+        (b, kw, hkv, m), slot_weights (b, kw, hkv, m), threshold
+        (b, kw, hq))`` — the caller assembles :class:`PrunerStats` for its
+        anchor position (the pruner does not know which position anchors
+        the window).
+        """
+        from repro.kernels.fused_decode.ops import fused_prune_attend_window
+
+        p_val = self.p if p is None else p
+        return fused_prune_attend_window(
+            q, indices, valid, keys, values, qkeys, p=p_val,
+            iters=self.iters, page_size=page_size)
+
+    def prune_window_at(
+        self,
+        q: jax.Array,  # (b, kw, hq, d) — kw queued window positions
+        indices: jax.Array,  # (b, hkv, m) i32 — shared candidate buffer
+        valid: jax.Array,  # (b, kw, hkv, m) bool — per-position validity
+        *,
+        keys: jax.Array | None = None,
+        qkeys: quant_lib.QuantizedTensor | None = None,
+        p: jax.Array | float | None = None,
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Staged multi-token prune: ONE folded estimate over the shared
+        candidate buffer (query rows laid out kv-head-major, position ×
+        group inside each head — the same layout the fused kernel uses),
+        then an independent per-position/per-head top-p.
+
+        Returns ``(kept (b, kw, hkv, m), threshold (b, kw, hq),
+        slot_weights (b, kw, hkv, m))``.  Each position's slice is exactly
+        what :meth:`prune_at` would produce for that position alone.
+        """
+        b, kw, hq, d = q.shape
+        hkv, m = indices.shape[1], indices.shape[2]
+        group = hq // hkv
+        p_val = self.p if p is None else p
+
+        q2 = q.reshape(b, kw, hkv, group, d).transpose(0, 2, 1, 3, 4)
+        q2 = q2.reshape(b, hkv * kw * group, d)
+        scores = self.estimate_scores_at(q2, indices, keys, qkeys)
+        scores = scores.reshape(b, hkv, kw, group, m)
+        valid_g = jnp.broadcast_to(
+            valid.transpose(0, 2, 1, 3)[:, :, :, None, :], scores.shape)
+        weights = topp_lib.masked_softmax(scores, valid_g)
+        res = topp_lib.topp_mask(weights, p_val, iters=self.iters)
+        kept_q = res.mask & valid_g  # (b, hkv, kw, group, m)
+        kept = kept_q.any(axis=3).transpose(0, 2, 1, 3)  # (b, kw, hkv, m)
+        slot_w = weights.max(axis=3).transpose(0, 2, 1, 3)
+        thresh = res.threshold.transpose(0, 2, 1, 3).reshape(b, kw, hq)
+        return kept, thresh, slot_w
 
     def prune(
         self,

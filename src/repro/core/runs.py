@@ -1,0 +1,137 @@
+"""Survivor-run structure: RLE reference + jit-safe streaming telemetry.
+
+The fused decode kernel streams the top-p survivor set from HBM as
+page-aligned contiguous *runs* (``kernels/fused_decode``).  This module
+makes the run structure observable:
+
+* :func:`coalesced_runs` — the numpy reference run-length encoder the
+  property tests pin the kernel's block coalescing against.  A run is a
+  maximal stretch of kept slots whose logical indices are consecutive
+  AND stay inside one ``page_size``-aligned page — exactly the units a
+  physical-page pool can serve with one contiguous copy (the page table
+  maps whole pages, so logical runs == physical runs).
+* :func:`run_length_stats` — the jit-safe aggregate the paged decode step
+  emits per layer when ``TwilightConfig.collect_run_stats`` is on: a
+  fixed-size f32 vector (log2-bucketed run-length histogram, run count,
+  pages touched, kept rows) that scans/sums cheaply through the model and
+  the engine's session accumulators.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "RUN_HIST_BUCKETS",
+    "RUN_STATS_LEN",
+    "coalesced_runs",
+    "run_length_stats",
+    "summarize_run_stats",
+]
+
+# log2 histogram buckets: run length 1, 2-3, 4-7, ..., >= 2^(B-1).
+RUN_HIST_BUCKETS = 8
+# [hist(B) | n_runs | pages_touched | kept_rows]
+RUN_STATS_LEN = RUN_HIST_BUCKETS + 3
+
+
+def coalesced_runs(kept, indices, page_size: int) -> list[tuple[int, int]]:
+    """Reference RLE of one kept row: ``[(start_slot, length), ...]``.
+
+    ``kept`` (m,) bool over the candidate buffer, ``indices`` (m,) the
+    ascending logical token indices of each slot.  A run breaks when the
+    kept bit drops, when indices jump (non-consecutive tokens), or when a
+    ``page_size`` boundary is crossed (``index % page_size == 0`` opens a
+    new physical page).
+    """
+    kept = np.asarray(kept, bool)
+    indices = np.asarray(indices)
+    runs: list[tuple[int, int]] = []
+    start = None
+    for t in range(kept.shape[0]):
+        if not kept[t]:
+            start = None
+            continue
+        fresh = (start is None
+                 or indices[t] != indices[t - 1] + 1
+                 or indices[t] % page_size == 0)
+        if fresh:
+            start = t
+            runs.append((t, 1))
+        else:
+            s, ln = runs[-1]
+            runs[-1] = (s, ln + 1)
+    return runs
+
+
+def run_length_stats(kept: jax.Array, indices: jax.Array, page_size: int,
+                     n_pages: int) -> jax.Array:
+    """Aggregate run structure of a batch of kept rows, jit-safe.
+
+    ``kept``/``indices`` are (..., m) — typically (b, hkv, m) from one
+    attention layer's pipeline output (``pruned_valid``/``indices``).
+    Returns the (RUN_STATS_LEN,) f32 vector
+    ``[hist_0..hist_{B-1}, n_runs, pages_touched, kept_rows]`` summed over
+    every leading dim; vectors from different layers/steps add.
+    ``n_pages`` bounds ``indices // page_size`` (logical pages per slot).
+    """
+    kept = kept.astype(bool)
+    m = kept.shape[-1]
+    # Run starts: kept, and not a contiguous same-page continuation.
+    prev_kept = jnp.pad(kept[..., :-1], [(0, 0)] * (kept.ndim - 1) + [(1, 0)])
+    prev_idx = jnp.pad(indices[..., :-1],
+                       [(0, 0)] * (kept.ndim - 1) + [(1, 0)],
+                       constant_values=-2)
+    cont = (prev_kept & (indices == prev_idx + 1)
+            & (indices % page_size != 0))
+    starts = kept & ~cont
+    nxt_kept = jnp.pad(kept[..., 1:], [(0, 0)] * (kept.ndim - 1) + [(0, 1)])
+    nxt_idx = jnp.pad(indices[..., 1:],
+                      [(0, 0)] * (kept.ndim - 1) + [(0, 1)],
+                      constant_values=-2)
+    ends = kept & ~(nxt_kept & (nxt_idx == indices + 1)
+                    & (nxt_idx % page_size != 0))
+
+    t = jnp.arange(m, dtype=jnp.int32)
+    start_pos = jax.lax.cummax(jnp.where(starts, t, -1), axis=kept.ndim - 1)
+    lengths = jnp.where(ends, t - start_pos + 1, 0)  # length at run end
+
+    bucket = jnp.clip(
+        jnp.floor(jnp.log2(jnp.maximum(lengths, 1).astype(jnp.float32))),
+        0, RUN_HIST_BUCKETS - 1).astype(jnp.int32)
+    hist = jnp.sum(
+        jax.nn.one_hot(bucket, RUN_HIST_BUCKETS, dtype=jnp.float32)
+        * ends[..., None].astype(jnp.float32),
+        axis=tuple(range(ends.ndim)))
+
+    pages = jnp.clip(indices // page_size, 0, n_pages - 1)
+    flat_pages = pages.reshape(-1, m)
+    flat_kept = kept.reshape(-1, m)
+    touched = jnp.zeros((flat_pages.shape[0], n_pages), jnp.float32)
+    touched = touched.at[
+        jnp.arange(flat_pages.shape[0])[:, None], flat_pages].max(
+        flat_kept.astype(jnp.float32))
+    return jnp.concatenate([
+        hist,
+        jnp.sum(starts).astype(jnp.float32)[None],
+        jnp.sum(touched)[None],
+        jnp.sum(kept).astype(jnp.float32)[None],
+    ])
+
+
+def summarize_run_stats(total: np.ndarray, steps: int) -> dict:
+    """Human-readable summary of summed :func:`run_length_stats` vectors."""
+    total = np.asarray(total, np.float64)
+    hist = total[:RUN_HIST_BUCKETS]
+    n_runs, pages, kept = total[RUN_HIST_BUCKETS:]
+    steps = max(steps, 1)
+    return {
+        "steps": int(steps),
+        "run_hist": [int(x) for x in hist],
+        "runs_per_step": n_runs / steps,
+        "pages_per_step": pages / steps,
+        "kept_per_step": kept / steps,
+        "mean_run_len": kept / max(n_runs, 1.0),
+    }

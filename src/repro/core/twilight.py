@@ -45,7 +45,13 @@ from repro.core.selectors import (
     selector_from_name,
 )
 
-__all__ = ["TwilightConfig", "TwilightOutput", "twilight_decode_attention"]
+__all__ = [
+    "TwilightConfig",
+    "TwilightOutput",
+    "TwilightWindowOutput",
+    "twilight_decode_attention",
+    "twilight_decode_window_attention",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +122,13 @@ class TwilightConfig:
     # the staged path with ``pruned_cap_frac=None``), since there is no
     # second K/V gather left to shrink.
     fused_backend: str = "auto"
+    # Survivor-run telemetry: when True the paged decode step additionally
+    # returns a fixed-size run-structure vector (histogram of contiguous
+    # survivor run lengths, pages touched, kept rows — see
+    # ``repro.core.runs``) accumulated over layers.  Off by default: the
+    # stats cost a few O(B0) scans per layer and exist to make the fused
+    # kernel's run-coalescing wins observable, not to steer it.
+    collect_run_stats: bool = False
 
     def candidate_budget(self, n: int) -> int:
         if self.fixed_budget:
@@ -233,9 +246,11 @@ def _compact_pipeline(
     if cfg.prune_enabled and cfg.use_fused_decode():
         from repro.kernels.fused_decode.ops import fused_fits
         group = hq // indices.shape[1]
-        if fused_fits(m, q.shape[-1], group, keys.dtype.itemsize):
+        if fused_fits(m, q.shape[-1], group, keys.dtype.itemsize,
+                      page_size=cfg.page_size):
             out, kept, stats, slot_weights = cfg.make_pruner().prune_attend_at(
-                q, gather_idx, valid, keys=keys, values=values, qkeys=qkeys)
+                q, gather_idx, valid, keys=keys, values=values, qkeys=qkeys,
+                page_size=cfg.page_size)
             return TwilightOutput(out=out, candidate_mask=None,
                                   pruned_mask=None, stats=stats,
                                   indices=indices, candidate_valid=valid,
@@ -366,3 +381,168 @@ def twilight_decode_attention(
     out = masked_sparse_decode_attention(q, attn_keys, values, pruned_mask)
     return TwilightOutput(out=out, candidate_mask=candidate_mask,
                           pruned_mask=pruned_mask, stats=stats)
+
+
+class TwilightWindowOutput(NamedTuple):
+    """Output of one multi-token window decode (kw queued positions).
+
+    Selection is anchored once at the last live position (``n_tok - 1``);
+    every per-position array carries a leading kw axis.  ``stats`` reports
+    the anchor position (what a single-token step at that position would
+    report).  Positions >= n_tok are dead: their validity/kept masks are
+    all-False and their outputs are zeros.
+    """
+
+    out: jax.Array  # (b, kw, hq, d)
+    stats: PrunerStats  # anchor position (n_tok - 1)
+    indices: jax.Array  # (b, hkv, m) i32 — shared candidate buffer
+    candidate_valid: jax.Array  # (b, kw, hkv, m) — causal per-position
+    pruned_valid: jax.Array  # (b, kw, hkv, m)
+    slot_weights: jax.Array | None  # (b, kw, hkv, m)
+
+
+def twilight_decode_window_attention(
+    q: jax.Array,  # (b, kw, hq, d) — kw queued window positions per slot
+    keys: jax.Array,
+    values: jax.Array,
+    cfg: TwilightConfig,
+    *,
+    ctx: SelectionContext,
+    qkeys: quant_lib.QuantizedTensor | None = None,
+    lengths: jax.Array,  # (b,) i32 — window start (tokens already cached)
+    n_tok: jax.Array,  # (b,) i32 in [1, kw] — live positions this window
+) -> TwilightWindowOutput:
+    """Multi-token decode: kw queued positions against ONE candidate set.
+
+    The Token Selector runs once per window, anchored at the last live
+    position (Tactic: survivor sets are temporally stable across adjacent
+    decode positions, so the anchor's candidates cover the whole window);
+    each position then prunes and attends its own causal restriction of
+    that buffer (position j sees logical indices <= lengths + j).  On the
+    fused backend this is ONE kernel launch per layer for all kw positions
+    — the window union of survivor sets is streamed from HBM once.
+
+    Anchored selection is exact (identical to kw single-token steps) for
+    the "full" selector and for windows with n_tok = 1; query-dependent
+    selectors (quest/ds/streaming/h2o) may select slightly different
+    candidates than a per-position step would — the serving engine
+    therefore makes window decode opt-in.
+
+    ``ctx.length`` must already be the *post-window* length
+    (lengths + n_tok), matching the single-token convention where
+    ``length`` includes the position being decoded.
+    """
+    b, kw, hq, d = q.shape
+    if kw == 1:
+        single = twilight_decode_attention(
+            q[:, 0], keys, values, cfg, ctx=ctx, qkeys=qkeys,
+            length=ctx.length)
+        sw = single.slot_weights
+        return TwilightWindowOutput(
+            out=single.out[:, None], stats=single.stats,
+            indices=single.indices,
+            candidate_valid=single.candidate_valid[:, None],
+            pruned_valid=single.pruned_valid[:, None],
+            slot_weights=None if sw is None else sw[:, None])
+
+    if not (cfg.enabled and cfg.compact):
+        raise ValueError(
+            "window decode requires the compact Twilight pipeline "
+            "(cfg.enabled=True, cfg.compact=True)")
+    paged = ctx.page_table is not None
+    n = (ctx.page_table.shape[1] * ctx.page_meta.page_size if paged
+         else keys.shape[1])
+    hkv = keys.shape[-2]
+    group = hq // hkv
+    selector = cfg.make_selector()
+    b0 = cfg.candidate_budget(n)
+
+    anchor = (n_tok - 1).astype(jnp.int32)
+    q_anchor = jnp.take_along_axis(
+        q, anchor[:, None, None, None], axis=1)[:, 0]
+    indices, valid = selector.select_indices(q_anchor, ctx, b0)
+    m = indices.shape[-1]
+
+    # Causal window restriction: position j may attend logical indices
+    # <= lengths + j (its own row included); dead positions see nothing,
+    # so they contribute neither survivors nor DMA traffic.
+    win_pos = lengths[:, None] + jnp.arange(kw)[None, :]  # (b, kw)
+    live_pos = (jnp.arange(kw)[None, :] < n_tok[:, None])  # (b, kw)
+    valid_k = (valid[:, None]
+               & (indices[:, None] <= win_pos[:, :, None, None])
+               & live_pos[:, :, None, None])  # (b, kw, hkv, m)
+
+    gather_idx = indices
+    if paged:
+        gather_idx = physical_token_indices(
+            ctx.page_table, indices, ctx.page_meta.page_size)
+        gather_idx = jnp.where(valid, gather_idx, 0)
+
+    def anchor_row(x):  # (b, kw, ...) -> (b, ...) at the anchor position
+        idx = anchor.reshape((b,) + (1,) * (x.ndim - 1))
+        return jnp.take_along_axis(x, idx, axis=1)[:, 0]
+
+    if cfg.prune_enabled and cfg.use_fused_decode():
+        from repro.kernels.fused_decode.ops import fused_fits
+        if fused_fits(m, d, group, keys.dtype.itemsize, k=kw,
+                      page_size=cfg.page_size):
+            out, kept, slot_w, thresh = (
+                cfg.make_pruner().prune_attend_window_at(
+                    q, gather_idx, valid_k, keys=keys, values=values,
+                    qkeys=qkeys, page_size=cfg.page_size))
+            stats = PrunerStats(
+                candidate_budget=anchor_row(
+                    valid_k.sum(-1)).astype(jnp.int32),
+                pruned_budget=anchor_row(kept.sum(-1)).astype(jnp.int32),
+                threshold=anchor_row(thresh),
+                weights=None)
+            return TwilightWindowOutput(
+                out=out, stats=stats, indices=indices,
+                candidate_valid=valid_k, pruned_valid=kept,
+                slot_weights=slot_w)
+
+    # Staged window fallback: one folded estimate, then per-position top-p
+    # and (optionally capped) attend — position j's slice is exactly the
+    # single-token staged pipeline at that position.
+    slot_w = None
+    if not cfg.prune_enabled:
+        kept = valid_k
+        thresh = jnp.zeros((b, kw, hq), jnp.float32)
+    else:
+        kept, thresh, slot_w = cfg.make_pruner().prune_window_at(
+            q, gather_idx, valid_k, keys=keys, qkeys=qkeys)
+
+    b1_cap = cfg.pruned_capacity(m)
+    outs = []
+    for j in range(kw):
+        attn_indices, attn_valid = gather_idx, kept[:, j]
+        if slot_w is not None and b1_cap < m:
+            rank = jnp.where(kept[:, j], slot_w[:, j], -1.0)
+            _, slot_idx = jax.lax.top_k(rank, b1_cap)
+            attn_valid = jnp.take_along_axis(kept[:, j], slot_idx, axis=-1)
+            attn_indices = jnp.where(
+                attn_valid,
+                jnp.take_along_axis(gather_idx, slot_idx, axis=-1), 0)
+        if cfg.reuse_int4_for_attention and qkeys is not None:
+            gathered_q = quant_lib.QuantizedTensor(
+                packed=gather_kv_heads(qkeys.packed, attn_indices),
+                scale=gather_kv_heads(qkeys.scale, attn_indices),
+                zero=gather_kv_heads(qkeys.zero, attn_indices))
+            kg = quant_lib.dequantize_int4(gathered_q, dtype=keys.dtype)
+        else:
+            kg = gather_kv_heads(keys, attn_indices)
+        vg = gather_kv_heads(values, attn_indices)
+        if cfg.use_pallas_attention():
+            from repro.kernels.sparse_attn.ops import compact_attention
+            outs.append(compact_attention(q[:, j], kg, vg, attn_valid))
+        else:
+            outs.append(compact_decode_attention(q[:, j], kg, vg, attn_valid))
+    out = jnp.stack(outs, axis=1)
+    stats = PrunerStats(
+        candidate_budget=anchor_row(valid_k.sum(-1)).astype(jnp.int32),
+        pruned_budget=anchor_row(kept.sum(-1)).astype(jnp.int32),
+        threshold=anchor_row(thresh),
+        weights=None)
+    return TwilightWindowOutput(out=out, stats=stats, indices=indices,
+                                candidate_valid=valid_k, pruned_valid=kept,
+                                slot_weights=slot_w)

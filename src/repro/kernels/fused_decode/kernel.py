@@ -12,18 +12,26 @@ attention kernel): per (slot, kv-head) grid step it
    estimated scores with the dequantization folded into the matmul
    epilogue (exactly the spgemv kernel's math — two nibble matmuls on the
    MXU plus a rank-1 VPU epilogue),
-2. normalizes them with a masked softmax — the weight row never leaves
+2. normalizes them with a masked softmax — the weight rows never leave
    VMEM,
 3. runs the fixed-trip top-p binary search (Algorithm 1) on the resident
-   row, per query head, and unions the kept sets over the GQA group,
-4. immediately performs the pruned sparse attention: surviving candidate
-   rows are DMA'd from the fp16 K/V cache (contiguous or shared page pool)
-   one at a time behind a ``lax.cond`` on the kept bit — **pruned rows are
-   never read from HBM** — and folded into an online-softmax accumulator.
+   rows, per query head *and per window position*, and unions the kept
+   sets over the GQA group (per position) and over the window (the DMA
+   set),
+4. immediately performs the pruned sparse attention: the union kept
+   bitmap is compacted into page-aligned *block runs* and the surviving
+   blocks are streamed from the fp16 K/V cache (contiguous or shared page
+   pool) through two ping-ponged VMEM staging buffers — the async copy of
+   block run i+1 overlaps the flash-style online-softmax update of block
+   run i.  **Pruned blocks are never read from HBM**; within a surviving
+   block the kernel picks per block between one coalesced blk-row copy
+   and per-row copies of just the kept rows, whichever moves fewer
+   byte-equivalents (see ``DMA_OVERHEAD_BYTES``).
 
 No scores, thresholds, or B1 index buffers are ever materialized in HBM;
-the only O(m) outputs are the kept bitmap and the group-max slot weights,
-which the serving engine is required to see (H2O page-mass maintenance).
+the only O(m) outputs are the per-position kept bitmaps and group-max
+slot weights, which the serving engine is required to see (H2O page-mass
+maintenance).
 
 Attention semantics match the staged pipeline with ``pruned_cap_frac=None``
 exactly: every kept slot is attended (no weight-ranked B1 truncation — the
@@ -31,27 +39,35 @@ fused kernel has no second gather to shrink, so the cap is moot).
 
 Layout contract (see ``src/repro/kernels/README.md``):
 
-* grid = (B,) with B = batch * kv_heads; per grid step everything is
-  m-resident, so VMEM holds the codes block (m × (d/2 + 8 + 1) bytes), the
-  f32 score/weight rows (group × m × 4 bytes ×~3 live values), and two
-  (1, 1, d) row-DMA scratch buffers.  ``ops.fused_vmem_bytes`` sizes this;
-  the pipeline falls back to the staged path when the estimate exceeds
-  ``ops.FUSED_VMEM_BUDGET`` on a real TPU.
+* grid = (B,) with B = batch * kv_heads; one launch decodes ``kw`` window
+  positions per slot (kw = 1 is the classic single-token step).  Query
+  rows are laid out position-major inside the kv-head block: row
+  r = j * group + g is window position j, group member g.
+* per grid step everything is m-resident, so VMEM holds the codes block,
+  the f32 score/weight rows (kw·group × m), and two (blk, 1, d) block
+  staging buffers per stream (K and V).  ``ops.fused_vmem_bytes`` sizes
+  this; the pipeline falls back to the staged path when the estimate
+  exceeds ``ops.FUSED_VMEM_BUDGET`` on a real TPU.
 * ``rows`` are *final* cache coordinates: physical pool rows for a paged
   cache (translated through the page table before the call, exactly as the
   staged gathers do), plain cache positions otherwise.  Dead slots carry
   row 0 (the null page) and ``valid=False``.
-* queries arrive both whole (final attention) and nibble-de-interleaved
-  (estimate), matching the spgemv packing — no in-kernel lane shuffles.
-* the per-row survivor DMA is the traffic-exact formulation (reads exactly
-  the B1 surviving rows); production blocking would batch page-aligned
-  survivor runs behind double buffering — a pure perf refinement that
-  cannot change results.
+* block runs have static length ``blk = coalesce_block(m, page_size)``
+  (a divisor of both, so a coalesced copy can never cross a physical page
+  boundary); coalescing is chosen per block when the kept count reaches
+  ``coalesce_min_rows`` — below that, per-row copies of only the kept
+  rows move fewer byte-equivalents.
+* the double-buffer protocol: buffer slot = run index mod 2; the copy for
+  run j+1 is started right after the wait for run j and before run j's
+  flash update, so compute and DMA overlap.  Start and wait use the same
+  predicate expressions (pure functions of the run index), so semaphore
+  counts always match.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -60,65 +76,111 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import NEG_INF, resolve_interpret
 
+# Modeled fixed cost of one async copy, in byte-equivalents at HBM
+# bandwidth (descriptor issue + DRAM row activation ≈ 2 KiB of streaming).
+# Shared with ``analysis/costs.py`` so the kernel's coalescing decision and
+# the roofline's DMA model agree by construction.
+DMA_OVERHEAD_BYTES = 2048
+
+# Widest block run the kernel will stage (rows); wider runs amortize the
+# per-copy overhead no further but inflate the VMEM staging buffers.
+MAX_BLOCK_ROWS = 64
+
+
+def coalesce_block(m: int, page_size: int) -> int:
+    """Static block-run length: a common divisor of ``m`` and ``page_size``.
+
+    Dividing ``page_size`` guarantees an aligned block never straddles a
+    physical page boundary in the pool; dividing ``m`` lets the kept
+    bitmap be reshaped to (m // blk, blk) with no remainder.
+    """
+    blk = math.gcd(m, page_size)
+    while blk > MAX_BLOCK_ROWS and blk % 2 == 0:
+        blk //= 2
+    return blk
+
+
+def coalesce_min_rows(blk: int, d: int, kv_bytes: int = 2) -> int:
+    """Kept-rows threshold above which ONE blk-row copy beats per-row DMA.
+
+    Per-row cost for c kept rows is c·(OVH + d·kv_bytes) byte-equivalents
+    per stream; the coalesced block costs OVH + blk·d·kv_bytes.  Solve for
+    the break-even c (identical for K and V, so the factor two cancels).
+    """
+    row = d * kv_bytes
+    return max(1, min(blk, -(-(DMA_OVERHEAD_BYTES + blk * row)
+                             // (DMA_OVERHEAD_BYTES + row))))
+
 
 def _fused_decode_kernel(
-    qf_ref,  # (1, group, d) — whole queries, final attention
-    qe_ref,  # (1, group, d2) — even channels (low nibbles)
-    qo_ref,  # (1, group, d2) — odd channels (high nibbles)
+    qf_ref,  # (1, kw*group, d) — whole queries, final attention
+    qe_ref,  # (1, kw*group, d2) — even channels (low nibbles)
+    qo_ref,  # (1, kw*group, d2) — odd channels (high nibbles)
     packed_ref,  # (1, m, d2) uint8 — gathered candidate INT4 codes
     scale_ref,  # (1, m) f32
     zero_ref,  # (1, m) f32
-    valid_ref,  # (1, m) int8 — live candidate slots
+    valid_ref,  # (1, kw, m) int8 — per-position live candidate slots
     rows_ref,  # (1, m) i32 — cache rows (physical for paged pools)
     p_ref,  # (1,) f32 — top-p threshold
     k_hbm,  # ANY: (b, n, hkv, d) contiguous or (P, hkv, d) pooled
     v_hbm,  # ANY: same layout as k_hbm
-    out_ref,  # (1, group, d)
-    kept_ref,  # (1, m) int8 — post-top-p survivors (GQA group union)
-    w_ref,  # (1, m) f32 — group-max normalized weights (H2O mass key)
-    thresh_ref,  # (1, group) f32 — applied threshold per query head
-    k_scr,  # VMEM (1, 1, d) cache-dtype row scratch
-    v_scr,  # VMEM (1, 1, d)
-    sem_k,  # DMA semaphores
+    out_ref,  # (1, kw*group, d)
+    kept_ref,  # (1, kw, m) int8 — per-position survivors (GQA group union)
+    w_ref,  # (1, kw, m) f32 — group-max normalized weights (H2O mass key)
+    thresh_ref,  # (1, kw*group) f32 — applied threshold per query row
+    k_scr,  # VMEM (2, blk, 1, d) cache-dtype double-buffered block scratch
+    v_scr,  # VMEM (2, blk, 1, d)
+    sem_k,  # DMA semaphores, one per buffer slot
     sem_v,
     *,
     sm_scale: float,
     iters: int,
     hkv: int,
     pooled: bool,
+    kw: int,
+    blk: int,
+    page_size: int,
+    coal_min: int,
 ):
     i = pl.program_id(0)
     bi = i // hkv
     hi = i % hkv
 
-    qe = qe_ref[0].astype(jnp.float32)  # (group, d2)
+    qe = qe_ref[0].astype(jnp.float32)  # (kg, d2)
     qo = qo_ref[0].astype(jnp.float32)
     codes = packed_ref[0]  # (m, d2) uint8
     low = (codes & 0x0F).astype(jnp.float32)
     high = (codes >> 4).astype(jnp.float32)
     scale = scale_ref[0].astype(jnp.float32)  # (m,)
     zero = zero_ref[0].astype(jnp.float32)
-    valid = valid_ref[0] != 0  # (m,)
+    valid_k = valid_ref[0] != 0  # (kw, m) — causal window mask pre-folded
     p = p_ref[0]
-    group, d = qf_ref.shape[1], qf_ref.shape[2]
+    kg, d = qf_ref.shape[1], qf_ref.shape[2]
+    group = kg // kw
     m = codes.shape[0]
 
     # --- Stage 1: INT4 score estimate (spgemv math, dequant in epilogue) ---
+    # One codes read serves all kw positions — the estimate is amortized
+    # across the window (Tactic: survivor sets are temporally stable).
     dot = jnp.dot(qe, low.T, preferred_element_type=jnp.float32)
     dot += jnp.dot(qo, high.T, preferred_element_type=jnp.float32)
-    qsum = jnp.sum(qe + qo, axis=-1, keepdims=True)  # (group, 1)
+    qsum = jnp.sum(qe + qo, axis=-1, keepdims=True)  # (kg, 1)
     est = (dot * scale[None, :] + qsum * zero[None, :]) * sm_scale
 
-    # --- Stage 2: masked softmax — the weight row stays in VMEM ----------
+    # Query row r = j * group + g sees position j's candidate validity.
+    valid_q = jnp.broadcast_to(
+        valid_k[:, None, :], (kw, group, m)).reshape(kg, m)
+
+    # --- Stage 2: masked softmax — the weight rows stay in VMEM ----------
     neg = jnp.finfo(jnp.float32).min
-    est = jnp.where(valid[None, :], est, neg)
+    est = jnp.where(valid_q, est, neg)
     mx = jnp.max(est, axis=-1, keepdims=True)
-    unnorm = jnp.where(valid[None, :], jnp.exp(est - mx), 0.0)
+    unnorm = jnp.where(valid_q, jnp.exp(est - mx), 0.0)
     denom = jnp.sum(unnorm, axis=-1, keepdims=True)
-    w = unnorm / jnp.maximum(denom, jnp.finfo(jnp.float32).tiny)  # (group, m)
+    w = unnorm / jnp.maximum(denom, jnp.finfo(jnp.float32).tiny)  # (kg, m)
 
     # --- Stage 3: fixed-trip top-p binary search (Algorithm 1) -----------
-    lo = jnp.zeros((group,), jnp.float32)
+    lo = jnp.zeros((kg,), jnp.float32)
     hi_w = jnp.max(w, axis=-1)
 
     def search(_, carry):
@@ -129,70 +191,137 @@ def _fused_decode_kernel(
         return jnp.where(ok, mid, lo), jnp.where(ok, hi_w, mid)
 
     lo, hi_w = jax.lax.fori_loop(0, iters, search, (lo, hi_w))
-    kept_q = (w >= lo[:, None]) & valid[None, :]  # (group, m) per query head
-    kept = kept_q.any(axis=0)  # (m,) GQA group union — the loaded set
+    kept_rows = (w >= lo[:, None]) & valid_q  # (kg, m) per query row
+    # GQA group union per window position, then window union = the DMA set.
+    kept_pos = kept_rows.reshape(kw, group, m).any(axis=1)  # (kw, m)
+    kept = kept_pos.any(axis=0)  # (m,) — rows streamed from HBM
+    # Each query row attends its own position's group-union kept set.
+    amask = jnp.broadcast_to(
+        kept_pos[:, None, :], (kw, group, m)).reshape(kg, m)
 
-    # --- Stage 4: pruned sparse attention over the survivors -------------
-    # Surviving rows are DMA'd from the fp cache one at a time behind the
-    # kept bit: pruned rows cost no HBM traffic at all (the B1-scaled read
-    # the staged path needs a weight-ranked re-compaction to approximate).
-    qf = qf_ref[0].astype(jnp.float32)  # (group, d)
+    # --- Stage 4: block-run coalesced, double-buffered streaming attend ---
+    # The union kept bitmap is viewed as nb = m / blk aligned block runs.
+    # Dead blocks (no survivor) cost nothing; surviving blocks are staged
+    # through two ping-ponged VMEM buffers, coalesced into one blk-row
+    # copy when dense enough (>= coal_min kept rows, page-run contiguous),
+    # per-row otherwise.  DMA of run j+1 overlaps run j's flash update.
+    qf = qf_ref[0].astype(jnp.float32)  # (kg, d)
     rows = rows_ref[0]  # (m,) i32
+    nb = m // blk
+    rows2 = rows.reshape(nb, blk)
+    kept2 = kept.reshape(nb, blk)
+    blk_any = kept2.any(axis=1)  # (nb,)
+    blk_cnt = kept2.sum(axis=1)  # (nb,)
+    base = rows2[:, 0]
+    span = jax.lax.broadcasted_iota(jnp.int32, (nb, blk), 1)
+    contig = jnp.all(rows2 == base[:, None] + span, axis=1)
+    same_page = (base // page_size) == ((base + blk - 1) // page_size)
+    blk_coal = contig & same_page & (blk_cnt >= coal_min)
 
-    def attend(t, carry):
-        def load_and_update(carry):
-            m_run, l_run, acc = carry
-            row = rows[t]
-            if pooled:
-                src_k = k_hbm.at[pl.ds(row, 1), pl.ds(hi, 1)]
-                src_v = v_hbm.at[pl.ds(row, 1), pl.ds(hi, 1)]
+    def src_rows(start, length):
+        if pooled:
+            return (k_hbm.at[pl.ds(start, length), pl.ds(hi, 1)],
+                    v_hbm.at[pl.ds(start, length), pl.ds(hi, 1)])
+        return (k_hbm.at[bi, pl.ds(start, length), pl.ds(hi, 1)],
+                v_hbm.at[bi, pl.ds(start, length), pl.ds(hi, 1)])
+
+    def dma_block(j, ok, start):
+        # Start and wait share these predicate expressions (pure functions
+        # of j), so every started copy is waited exactly once.
+        slot = j % 2
+        pred_c = ok & blk_any[j] & blk_coal[j]
+        pred_r = ok & blk_any[j] & jnp.logical_not(blk_coal[j])
+
+        @pl.when(pred_c)
+        def _():
+            # One coalesced blk-row copy per stream; never crosses a page
+            # boundary (blk divides page_size and the run is aligned).
+            ks, vs = src_rows(rows2[j, 0], blk)
+            ck = pltpu.make_async_copy(ks, k_scr.at[slot], sem_k.at[slot])
+            cv = pltpu.make_async_copy(vs, v_scr.at[slot], sem_v.at[slot])
+            if start:
+                ck.start()
+                cv.start()
             else:
-                src_k = k_hbm.at[bi, pl.ds(row, 1), pl.ds(hi, 1)]
-                src_v = v_hbm.at[bi, pl.ds(row, 1), pl.ds(hi, 1)]
-            ck = pltpu.make_async_copy(src_k, k_scr, sem_k)
-            cv = pltpu.make_async_copy(src_v, v_scr, sem_v)
-            ck.start()
-            cv.start()
-            ck.wait()
-            cv.wait()
-            k_row = k_scr[0, 0].astype(jnp.float32)  # (d,)
-            v_row = v_scr[0, 0].astype(jnp.float32)
-            s = jnp.sum(qf * k_row[None, :], axis=-1,
-                        keepdims=True) * sm_scale  # (group, 1)
-            m_new = jnp.maximum(m_run, s)
-            alpha = jnp.exp(m_run - m_new)
-            p_t = jnp.exp(s - m_new)
-            l_new = l_run * alpha + p_t
-            acc_new = acc * alpha + p_t * v_row[None, :]
-            return m_new, l_new, acc_new
+                ck.wait()
+                cv.wait()
 
-        return jax.lax.cond(kept[t], load_and_update, lambda c: c, carry)
+        for t in range(blk):
+            @pl.when(pred_r & kept2[j, t])
+            def _(t=t):
+                # Sparse block: fetch only the kept rows (traffic-exact).
+                ks, vs = src_rows(rows2[j, t], 1)
+                ck = pltpu.make_async_copy(
+                    ks, k_scr.at[slot, pl.ds(t, 1)], sem_k.at[slot])
+                cv = pltpu.make_async_copy(
+                    vs, v_scr.at[slot, pl.ds(t, 1)], sem_v.at[slot])
+                if start:
+                    ck.start()
+                    cv.start()
+                else:
+                    ck.wait()
+                    cv.wait()
 
-    init = (jnp.full((group, 1), NEG_INF, jnp.float32),
-            jnp.zeros((group, 1), jnp.float32),
-            jnp.zeros((group, d), jnp.float32))
-    _, l_run, acc = jax.lax.fori_loop(0, m, attend, init)
+    def attend_block(j, carry):
+        slot = j % 2
+        dma_block(j, True, start=False)  # block j landed in buffer slot
+        # Prefetch block j+1 into the other buffer before touching j's
+        # data — the copy runs during this block's flash update.
+        dma_block(jnp.minimum(j + 1, nb - 1), j + 1 < nb, start=True)
+
+        kb = k_scr[slot, :, 0].astype(jnp.float32)  # (blk, d)
+        vb = v_scr[slot, :, 0].astype(jnp.float32)
+        # Rows never copied this block (pruned, or a dead block skipped
+        # entirely) hold stale buffer data — zero them so garbage can
+        # never reach the accumulator through a 0·NaN product.
+        keep_col = jax.lax.dynamic_slice(kept, (j * blk,), (blk,))
+        kb = jnp.where(keep_col[:, None], kb, 0.0)
+        vb = jnp.where(keep_col[:, None], vb, 0.0)
+
+        s = jnp.dot(qf, kb.T, preferred_element_type=jnp.float32) * sm_scale
+        am = jax.lax.dynamic_slice(amask, (0, j * blk), (kg, blk))
+        s = jnp.where(am, s, NEG_INF)  # finite mask — no inf-inf NaNs
+
+        m_run, l_run, acc = carry
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_run - m_new)
+        p_t = jnp.where(am, jnp.exp(s - m_new), 0.0)
+        l_new = l_run * alpha + jnp.sum(p_t, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.dot(p_t, vb,
+                                        preferred_element_type=jnp.float32)
+        new = (m_new, l_new, acc_new)
+        # Dead blocks are a no-op (alpha = 1, p_t = 0) but skip the select
+        # anyway so a fully-masked block can never perturb the carry.
+        return jax.tree_util.tree_map(
+            lambda n, c: jnp.where(blk_any[j], n, c), new, carry)
+
+    init = (jnp.full((kg, 1), NEG_INF, jnp.float32),
+            jnp.zeros((kg, 1), jnp.float32),
+            jnp.zeros((kg, d), jnp.float32))
+    dma_block(0, True, start=True)  # warm the first buffer
+    _, l_run, acc = jax.lax.fori_loop(0, nb, attend_block, init)
     out = acc / jnp.maximum(l_run, 1e-30)
     out = jnp.where(l_run > 0.0, out, 0.0)  # fully-pruned rows emit zeros
 
     out_ref[0] = out.astype(out_ref.dtype)
-    kept_ref[0] = kept.astype(jnp.int8)
-    w_ref[0] = jnp.max(w, axis=0)  # group-max slot weight (H2O ranking key)
+    kept_ref[0] = kept_pos.astype(jnp.int8)
+    w_ref[0] = w.reshape(kw, group, m).max(axis=1)  # group-max (H2O key)
     thresh_ref[0] = lo
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("sm_scale", "iters", "hkv", "pooled", "interpret"),
+    static_argnames=("sm_scale", "iters", "hkv", "pooled", "page_size",
+                     "interpret"),
 )
 def fused_decode_rows(
-    qf: jax.Array,  # (B, group, d) — B = batch * kv_heads
-    q_even: jax.Array,  # (B, group, d//2)
-    q_odd: jax.Array,  # (B, group, d//2)
+    qf: jax.Array,  # (B, kw*group, d) — B = batch * kv_heads
+    q_even: jax.Array,  # (B, kw*group, d//2)
+    q_odd: jax.Array,  # (B, kw*group, d//2)
     packed: jax.Array,  # (B, m, d//2) uint8 — gathered candidate codes
     scale: jax.Array,  # (B, m) f32
     zero: jax.Array,  # (B, m) f32
-    valid: jax.Array,  # (B, m) bool/int8
+    valid: jax.Array,  # (B, kw, m) bool/int8 — per-position validity
     rows: jax.Array,  # (B, m) i32 cache rows
     p: jax.Array,  # scalar f32
     keys: jax.Array,  # (b, n, hkv, d) or (P, hkv, d) — stays in HBM
@@ -202,50 +331,55 @@ def fused_decode_rows(
     iters: int = 24,
     hkv: int,
     pooled: bool,
+    page_size: int = 64,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """One launch per call: (out (B, group, d), kept (B, m) int8,
-    slot_weights (B, m) f32, threshold (B, group) f32)."""
+    """One launch per call: (out (B, kw*group, d), kept (B, kw, m) int8,
+    slot_weights (B, kw, m) f32, threshold (B, kw*group) f32)."""
     interpret = resolve_interpret(interpret)
-    B, group, d = qf.shape
+    B, kg, d = qf.shape
+    kw = valid.shape[1]
     m = packed.shape[1]
     d2 = packed.shape[2]
+    blk = coalesce_block(m, page_size)
+    coal_min = coalesce_min_rows(blk, d, keys.dtype.itemsize)
     valid = valid.astype(jnp.int8)
     p_arr = jnp.broadcast_to(jnp.asarray(p, jnp.float32), (1,))
     return pl.pallas_call(
         functools.partial(_fused_decode_kernel, sm_scale=sm_scale,
-                          iters=iters, hkv=hkv, pooled=pooled),
+                          iters=iters, hkv=hkv, pooled=pooled, kw=kw,
+                          blk=blk, page_size=page_size, coal_min=coal_min),
         grid=(B,),
         in_specs=[
-            pl.BlockSpec((1, group, d), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, group, d2), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, group, d2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, kg, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, kg, d2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, kg, d2), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, m, d2), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, m), lambda i: (i, 0)),
             pl.BlockSpec((1, m), lambda i: (i, 0)),
-            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, kw, m), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, m), lambda i: (i, 0)),
             pl.BlockSpec((1,), lambda i: (0,)),
             pl.BlockSpec(memory_space=pltpu.ANY),  # K cache/pool, HBM
             pl.BlockSpec(memory_space=pltpu.ANY),  # V cache/pool, HBM
         ],
         out_specs=[
-            pl.BlockSpec((1, group, d), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, m), lambda i: (i, 0)),
-            pl.BlockSpec((1, m), lambda i: (i, 0)),
-            pl.BlockSpec((1, group), lambda i: (i, 0)),
+            pl.BlockSpec((1, kg, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, kw, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, kw, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, kg), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, group, d), qf.dtype),
-            jax.ShapeDtypeStruct((B, m), jnp.int8),
-            jax.ShapeDtypeStruct((B, m), jnp.float32),
-            jax.ShapeDtypeStruct((B, group), jnp.float32),
+            jax.ShapeDtypeStruct((B, kg, d), qf.dtype),
+            jax.ShapeDtypeStruct((B, kw, m), jnp.int8),
+            jax.ShapeDtypeStruct((B, kw, m), jnp.float32),
+            jax.ShapeDtypeStruct((B, kg), jnp.float32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((1, 1, d), keys.dtype),
-            pltpu.VMEM((1, 1, d), values.dtype),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((2, blk, 1, d), keys.dtype),
+            pltpu.VMEM((2, blk, 1, d), values.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
         interpret=interpret,
     )(qf, q_even, q_odd, packed, scale, zero, valid, rows, p_arr,

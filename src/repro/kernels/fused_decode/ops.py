@@ -1,16 +1,24 @@
 """Public wrapper: fused estimate→top-p→attend over a candidate buffer.
 
-Adapts the model/cache layout — q (b, hq, d), candidate indices
+Adapts the model/cache layout — q (b, [kw,] hq, d), candidate indices
 (b, hkv, m), K/V as either the per-slot contiguous cache (b, n, hkv, d) or
 the shared page pool (P, hkv, d) — to the kernel's (B = b*hkv, ...) layout.
 The INT4 codes are gathered at the candidate indices first (same XLA
 gather the staged estimate performs — every candidate's code is read by
-definition); the fp16 K/V stay in HBM and only *surviving* rows are DMA'd
-inside the kernel.
+definition); the fp16 K/V stay in HBM and only *surviving* rows are
+streamed, block-run by block-run, inside the kernel.
+
+``fused_prune_attend_window`` is the primary entry: one launch prunes and
+attends ``kw`` window positions per slot against one shared candidate
+buffer (selection anchored once, per-position causal validity in
+``valid``).  ``fused_prune_attend`` is the kw = 1 special case and keeps
+its original signature.
 
 ``fused_vmem_bytes``/``fused_fits`` size the per-grid-step VMEM working
-set; the pipeline falls back to the staged path when a candidate buffer
-would not fit (only enforced on real TPUs — interpret mode has no VMEM).
+set — including the doubled K/V staging buffers and the k-token
+score/accumulator rows — so the "auto" backend falls back to the staged
+path *before* a real VMEM overflow (only enforced on real TPUs —
+interpret mode has no VMEM ceiling unless ``interpret=False`` is forced).
 """
 
 from __future__ import annotations
@@ -20,30 +28,112 @@ import jax.numpy as jnp
 
 from repro.core.quant import QuantizedTensor
 from repro.kernels.common import resolve_interpret
-from repro.kernels.fused_decode.kernel import fused_decode_rows
+from repro.kernels.fused_decode.kernel import (
+    coalesce_block,
+    fused_decode_rows,
+)
 
 # Per-core VMEM is ~16 MB; leave headroom for the compiler's own buffers.
 FUSED_VMEM_BUDGET = 12 << 20
 
 
-def fused_vmem_bytes(m: int, d: int, group: int, kv_bytes: int = 2) -> int:
+def fused_vmem_bytes(m: int, d: int, group: int, kv_bytes: int = 2, *,
+                     k: int = 1, page_size: int = 64) -> int:
     """Analytic VMEM working set of one (slot, kv-head) grid step.
 
-    Codes block (m × (d/2 + 8 + 1 + 4 + 1)): packed nibbles, f32
-    scale/zero, valid bitmap, i32 rows; ~3 live (group, m) f32 score/weight
-    rows; queries and the two (1, 1, d) DMA scratch rows.
+    Terms, in kernel order: the codes block (packed nibbles + f32
+    scale/zero + i32 rows); per-position valid/kept bitmaps and the f32
+    group-max weight rows (×k); ~3 live (k·group, m) f32 score/weight
+    rows; the whole + nibble-split queries; the k-token online-softmax
+    accumulator (m/l/acc per query row); and the double-buffered K and V
+    block staging scratch (2 buffers × 2 streams × blk rows).
     """
-    codes = m * (d // 2 + 8 + 1 + 4 + 1)
-    score_rows = 3 * group * m * 4
-    small = 3 * group * d * 4 + 2 * d * kv_bytes
-    return codes + score_rows + small
+    blk = coalesce_block(m, page_size)
+    kg = k * group
+    codes = m * (d // 2 + 8 + 4)
+    per_pos = k * m * (1 + 1 + 4)
+    score_rows = 3 * kg * m * 4
+    queries = 3 * kg * d * 4
+    accum = kg * (d + 2) * 4
+    staging = 2 * 2 * blk * d * kv_bytes
+    return codes + per_pos + score_rows + queries + accum + staging
 
 
-def fused_fits(m: int, d: int, group: int, kv_bytes: int = 2) -> bool:
-    """Static go/no-go for the fused kernel at this candidate capacity."""
-    if resolve_interpret(None):
-        return True  # interpret mode has no VMEM ceiling
-    return fused_vmem_bytes(m, d, group, kv_bytes) <= FUSED_VMEM_BUDGET
+def fused_fits(m: int, d: int, group: int, kv_bytes: int = 2, *,
+               k: int = 1, page_size: int = 64,
+               interpret: bool | None = None) -> bool:
+    """Static go/no-go for the fused kernel at this candidate capacity.
+
+    ``interpret=False`` forces the real budget check (interpret mode has
+    no VMEM ceiling, so the default tri-state always fits off-TPU).
+    """
+    if resolve_interpret(interpret):
+        return True
+    return fused_vmem_bytes(m, d, group, kv_bytes, k=k,
+                            page_size=page_size) <= FUSED_VMEM_BUDGET
+
+
+def fused_prune_attend_window(
+    q: jax.Array,  # (b, kw, hq, d) — kw queued window positions per slot
+    indices: jax.Array,  # (b, hkv, m) i32 — cache rows (physical if paged)
+    valid: jax.Array,  # (b, kw, hkv, m) bool — per-position live slots
+    keys: jax.Array,  # (b, n, hkv, d) cache or (P, hkv, d) pool
+    values: jax.Array,  # same layout as keys
+    qkeys: QuantizedTensor | None = None,  # INT4 shadow, same layout
+    *,
+    p: jax.Array | float,
+    iters: int = 24,
+    sm_scale: float | None = None,
+    page_size: int = 64,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Single-launch multi-token prune + attend.
+
+    All kw positions share ONE candidate buffer (selection anchored once
+    upstream); per-position causal masking arrives through ``valid``.
+    The kernel streams the *window union* of per-position survivor sets
+    from HBM once and runs kw online-softmax accumulations against it.
+
+    Returns ``(out (b, kw, hq, d), kept (b, kw, hkv, m) bool,
+    slot_weights (b, kw, hkv, m) f32, threshold (b, kw, hq) f32)``.
+    ``kept`` is the per-position GQA group union; every kept slot is
+    attended by that position (the staged path with
+    ``pruned_cap_frac=None``).
+    """
+    from repro.core.attention import gather_quantized_kv_heads
+
+    b, kw, hq, d = q.shape
+    hkv, m = indices.shape[1], indices.shape[2]
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+
+    # Same staging (and same gather-vs-quantize bit-identity) as the
+    # staged estimate — one definition in repro.core.attention.
+    gathered = gather_quantized_kv_heads(indices, keys=keys, qkeys=qkeys)
+
+    # kv-head-major query rows: row r = j * group + g inside each head.
+    qg = q.reshape(b, kw, hkv, group, d).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(b * hkv, kw * group, d)
+    vg = valid.transpose(0, 2, 1, 3).reshape(b * hkv, kw, m)
+    out, kept, slot_w, thresh = fused_decode_rows(
+        qg, qg[..., 0::2], qg[..., 1::2],
+        gathered.packed.reshape(b * hkv, m, d // 2),
+        gathered.scale[..., 0].reshape(b * hkv, m).astype(jnp.float32),
+        gathered.zero[..., 0].reshape(b * hkv, m).astype(jnp.float32),
+        vg,
+        indices.reshape(b * hkv, m),
+        jnp.asarray(p, jnp.float32),
+        keys, values,
+        sm_scale=float(sm_scale), iters=iters, hkv=hkv,
+        pooled=keys.ndim == 3, page_size=page_size, interpret=interpret,
+    )
+    out = out.reshape(b, hkv, kw, group, d).transpose(0, 2, 1, 3, 4)
+    thresh = thresh.reshape(b, hkv, kw, group).transpose(0, 2, 1, 3)
+    return (out.reshape(b, kw, hq, d),
+            kept.reshape(b, hkv, kw, m).transpose(0, 2, 1, 3) != 0,
+            slot_w.reshape(b, hkv, kw, m).transpose(0, 2, 1, 3),
+            thresh.reshape(b, kw, hq))
 
 
 def fused_prune_attend(
@@ -57,42 +147,17 @@ def fused_prune_attend(
     p: jax.Array | float,
     iters: int = 24,
     sm_scale: float | None = None,
+    page_size: int = 64,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Single-launch prune + attend.
+    """Single-launch prune + attend (the kw = 1 window special case).
 
     Returns ``(out (b, hq, d), kept (b, hkv, m) bool, slot_weights
     (b, hkv, m) f32, threshold (b, hq) f32)`` — exactly the pieces the
     compact pipeline otherwise assembles from three kernel launches.
-    ``kept`` is the GQA group union; every kept slot is attended (the
-    staged path with ``pruned_cap_frac=None``).
     """
-    from repro.core.attention import gather_quantized_kv_heads
-
-    b, hq, d = q.shape
-    hkv, m = indices.shape[1], indices.shape[2]
-    group = hq // hkv
-    if sm_scale is None:
-        sm_scale = 1.0 / (d ** 0.5)
-
-    # Same staging (and same gather-vs-quantize bit-identity) as the
-    # staged estimate — one definition in repro.core.attention.
-    gathered = gather_quantized_kv_heads(indices, keys=keys, qkeys=qkeys)
-
-    qg = q.reshape(b, hkv, group, d).reshape(b * hkv, group, d)
-    out, kept, slot_w, thresh = fused_decode_rows(
-        qg, qg[..., 0::2], qg[..., 1::2],
-        gathered.packed.reshape(b * hkv, m, d // 2),
-        gathered.scale[..., 0].reshape(b * hkv, m).astype(jnp.float32),
-        gathered.zero[..., 0].reshape(b * hkv, m).astype(jnp.float32),
-        valid.reshape(b * hkv, m),
-        indices.reshape(b * hkv, m),
-        jnp.asarray(p, jnp.float32),
-        keys, values,
-        sm_scale=float(sm_scale), iters=iters, hkv=hkv,
-        pooled=keys.ndim == 3, interpret=interpret,
-    )
-    return (out.reshape(b, hq, d),
-            kept.reshape(b, hkv, m) != 0,
-            slot_w.reshape(b, hkv, m),
-            thresh.reshape(b, hq))
+    out, kept, slot_w, thresh = fused_prune_attend_window(
+        q[:, None], indices, valid[:, None], keys, values, qkeys,
+        p=p, iters=iters, sm_scale=sm_scale, page_size=page_size,
+        interpret=interpret)
+    return out[:, 0], kept[:, 0], slot_w[:, 0], thresh[:, 0]

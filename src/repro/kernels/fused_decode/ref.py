@@ -54,3 +54,30 @@ def fused_prune_attend_ref(
     vg = gather_kv_heads(values, indices)
     out = compact_decode_attention(q, kg, vg, kept)
     return out, kept, w.max(axis=2), res.threshold.reshape(b, hq)
+
+
+def fused_prune_attend_window_ref(
+    q: jax.Array,  # (b, kw, hq, d)
+    indices: jax.Array,  # (b, hkv, m) i32 — shared candidate buffer
+    valid: jax.Array,  # (b, kw, hkv, m) bool — per-position validity
+    keys: jax.Array,
+    values: jax.Array,
+    qkeys: QuantizedTensor,
+    *,
+    p: jax.Array | float,
+    iters: int = 24,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Window oracle: kw independent single-token prune-attends that share
+    one candidate buffer — exactly the semantic contract of the multi-token
+    kernel (selection anchored once, prune/attend per position)."""
+    outs, kepts, ws, ths = [], [], [], []
+    for j in range(q.shape[1]):
+        o, k, w, t = fused_prune_attend_ref(
+            q[:, j], indices, valid[:, j], keys, values, qkeys,
+            p=p, iters=iters)
+        outs.append(o)
+        kepts.append(k)
+        ws.append(w)
+        ths.append(t)
+    return (jnp.stack(outs, axis=1), jnp.stack(kepts, axis=1),
+            jnp.stack(ws, axis=1), jnp.stack(ths, axis=1))

@@ -17,7 +17,11 @@ overrides the Twilight selector — ``h2o`` now runs paged, backed by the
 pool's per-physical-page accumulated attention mass.  ``--fused``
 overrides ``TwilightConfig.fused_backend`` — ``fused`` runs the whole
 estimate/top-p/attend tail as one Pallas launch per layer per decode
-step.  ``--compare`` runs
+step.  ``--run-stats`` collects survivor-run telemetry (contiguous-run
+histogram, pages touched per step) and prints the session summary;
+``--decode-window K`` lets the paged engine decode up to K queued
+tokens per slot in one fused launch (speeds preemption replay).
+``--compare`` runs
 both schedulers on the same workload and reports both tok/s figures (with
 ``--prefix-share``: share-on vs share-off paged engines).
 """
@@ -70,7 +74,8 @@ def _run(cfg, args, reqs, *, paged: bool, prefix_share: bool = False,
     engine = DecodeEngine(cfg, params=params, batch_size=args.batch,
                           cache_capacity=args.capacity, seed=args.seed,
                           paged=paged, num_pages=args.pages,
-                          prefix_share=prefix_share)
+                          prefix_share=prefix_share,
+                          decode_window=(args.decode_window if paged else 1))
     n_calls = max(1, args.calls) if paged else 1
     per_call = -(-len(reqs) // n_calls)
     t0 = time.time()
@@ -107,6 +112,15 @@ def _run(cfg, args, reqs, *, paged: bool, prefix_share: bool = False,
         print(f"[serve] session: {engine.session_submitted} submitted, "
               f"{engine.session_completed} completed, "
               f"{engine.session_preemptions} preemptions")
+        rs = engine.session_run_stats()
+        if rs is not None:
+            print(f"[serve] survivor runs: {rs['runs_per_step']:.1f} runs/"
+                  f"step (mean len {rs['mean_run_len']:.1f}), "
+                  f"{rs['pages_per_step']:.1f} pages/step, "
+                  f"{rs['kept_per_step']:.1f} kept rows/step over "
+                  f"{rs['steps']} steps")
+            print(f"[serve] run-length histogram (log2 buckets 1,2-3,4-7,"
+                  f"...): {rs['run_hist']}")
     return total_tokens / wall
 
 
@@ -146,17 +160,27 @@ def main() -> None:
     ap.add_argument("--compare", action="store_true",
                     help="run both schedulers on the same workload "
                          "(with --prefix-share: share-on vs share-off)")
+    ap.add_argument("--run-stats", action="store_true",
+                    help="collect survivor-run telemetry per decode step "
+                         "(contiguous-run histogram, pages touched) and "
+                         "print the session summary (paged only)")
+    ap.add_argument("--decode-window", type=int, default=1,
+                    help="decode up to K queued tokens per slot per fused "
+                         "launch (paged, attention-only stacks; >1 "
+                         "accelerates preemption replay)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.selector or args.fused:
+    if args.selector or args.fused or args.run_stats:
         import dataclasses
         tw = cfg.twilight
         if args.selector:
             tw = dataclasses.replace(tw, selector=args.selector)
         if args.fused:
             tw = dataclasses.replace(tw, fused_backend=args.fused)
+        if args.run_stats:
+            tw = dataclasses.replace(tw, collect_run_stats=True)
         cfg = cfg.replace(twilight=tw)
     rng = np.random.default_rng(args.seed)
     reqs = _build_requests(cfg, args, rng)

@@ -25,6 +25,7 @@ from repro.models.model import (
     count_params,
     decode_step,
     decode_step_paged,
+    decode_window_paged,
     forward,
     init_decode_state,
     init_paged_decode_state,
@@ -46,6 +47,7 @@ __all__ = [
     "count_params",
     "decode_step",
     "decode_step_paged",
+    "decode_window_paged",
     "forward",
     "init_decode_state",
     "init_paged_decode_state",

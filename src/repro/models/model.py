@@ -35,9 +35,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant as quant_lib
+from repro.core import runs as runs_lib
 from repro.core.attention import full_decode_attention, mha_attention
 from repro.core.selectors import PageMeta, SelectionContext
-from repro.core.twilight import twilight_decode_attention
+from repro.core.twilight import (twilight_decode_attention,
+                                 twilight_decode_window_attention)
 from repro.models import layers as ly
 from repro.models import ssm as ssm_lib
 from repro.models import xlstm as xlstm_lib
@@ -384,6 +386,43 @@ def _h2o_mass_update(mass: jax.Array, tw_out, page_size: int,
     phys = jnp.take_along_axis(pt, page, axis=2)  # (b, hkv, m) physical
     h_idx = jnp.arange(hkv)[None, :, None]
     return mass.at[phys, h_idx].add(w)
+
+
+def _h2o_mass_window_update(mass: jax.Array, tw_out, page_size: int,
+                            page_table: jax.Array,
+                            live: jax.Array) -> jax.Array:
+    """Window variant of :func:`_h2o_mass_update`: every live position's
+    kept weights accumulate (dead positions carry all-False masks, so they
+    contribute nothing).  Positions share one candidate buffer, so the
+    per-position contributions sum before a single scatter-add."""
+    if tw_out.slot_weights is None:
+        return mass
+    w = jnp.where(tw_out.pruned_valid, tw_out.slot_weights, 0.0).sum(axis=1)
+    w = jnp.where(live[:, None, None], w, 0.0)
+    page = tw_out.indices // page_size  # (b, hkv, m) logical pages
+    b, hkv, m = page.shape
+    pt = jnp.broadcast_to(page_table[:, None, :],
+                          (b, hkv, page_table.shape[1]))
+    phys = jnp.take_along_axis(pt, page, axis=2)
+    h_idx = jnp.arange(hkv)[None, :, None]
+    return mass.at[phys, h_idx].add(w)
+
+
+def _run_stats_vec(tw, tw_out, page_table: jax.Array) -> jax.Array:
+    """Survivor-run telemetry for one attention layer (zeros when off).
+
+    Runs are measured on *logical* indices: the page table maps whole
+    pages, so within-page contiguity and page boundaries — the only two
+    things the run structure is made of — are preserved by translation.
+    For a window step the union over positions is measured (that is the
+    set the fused kernel streams once)."""
+    if not tw.collect_run_stats or tw_out.indices is None:
+        return jnp.zeros((runs_lib.RUN_STATS_LEN,), jnp.float32)
+    kept = tw_out.pruned_valid
+    if kept.ndim == 4:
+        kept = kept.any(axis=1)
+    return runs_lib.run_length_stats(kept, tw_out.indices, tw.page_size,
+                                     page_table.shape[1])
 
 
 def _attn_decode(bp: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
@@ -1014,19 +1053,22 @@ def _attn_decode_paged(bp: Params, cfg: ModelConfig, x: jax.Array,
             cache["h2o_mass"], tw_out, ps, page_table=page_table, live=live)
     out = tw_out.out.reshape(b, 1, cfg.n_heads * cfg.d_head) @ bp["wo"]
     budget = tw_out.stats.pruned_budget.astype(jnp.float32).mean(axis=-1)
-    return out.astype(x.dtype), cache, budget
+    rs = _run_stats_vec(tw, tw_out, page_table)
+    return out.astype(x.dtype), cache, budget, rs
 
 
 def _block_apply_decode_paged(bp: Params, cfg: ModelConfig, spec: LayerSpec,
                               x: jax.Array, st: Params,
                               page_table: jax.Array, lengths: jax.Array,
                               live: jax.Array
-                              ) -> tuple[jax.Array, Params, jax.Array]:
+                              ) -> tuple[jax.Array, Params, jax.Array,
+                                         jax.Array]:
     b = x.shape[0]
     budget = jnp.zeros((b,), jnp.float32)
+    rs = jnp.zeros((runs_lib.RUN_STATS_LEN,), jnp.float32)
     h = ly.rms_norm(x, bp["norm1"], cfg.norm_eps)
     if spec.kind == "attn":
-        mix, st, budget = _attn_decode_paged(
+        mix, st, budget, rs = _attn_decode_paged(
             bp["mixer"], cfg, h, st, page_table, lengths, live)
     else:
         mix, mixer_st = _recurrent_mixer_decode(bp["mixer"], cfg, spec.kind,
@@ -1054,7 +1096,7 @@ def _block_apply_decode_paged(bp: Params, cfg: ModelConfig, spec: LayerSpec,
         else:
             y = ly.mlp_apply(bp["ffn"], h2)
         x = x + y
-    return x, st, budget
+    return x, st, budget, rs
 
 
 def decode_step_paged(params: Params, cfg: ModelConfig, state: Params,
@@ -1066,33 +1108,179 @@ def decode_step_paged(params: Params, cfg: ModelConfig, state: Params,
     token: (b,) i32; page_table: (b, max_pages) i32 physical page ids;
     lengths: (b,) i32 current per-slot sequence lengths (the position this
     token is written at); live: (b,) bool slot occupancy.  Returns
-    (logits (b, vocab), state, stats) with per-slot ``pruned_budget`` (b,).
+    (logits (b, vocab), state, stats) with per-slot ``pruned_budget`` (b,)
+    and, when ``cfg.twilight.collect_run_stats``, a summed ``run_stats``
+    telemetry vector (:data:`repro.core.runs.RUN_STATS_LEN`,).
     """
     specs, repeats = layer_schedule(cfg)
     b = token.shape[0]
     x = jnp.take(params["embed"], token, axis=0)[:, None, :]  # (b, 1, d)
 
     def period_body(carry, xs_slice):
-        x, budget_sum, n_attn = carry
+        x, budget_sum, n_attn, rs_sum = carry
         bp_slice, st_slice = xs_slice
         new_states = []
         for p_idx, spec in enumerate(specs):
-            x, st, budget = _block_apply_decode_paged(
+            x, st, budget, rs = _block_apply_decode_paged(
                 bp_slice[p_idx], cfg, spec, x, st_slice[p_idx],
                 page_table, lengths, live)
             new_states.append(st)
             if spec.kind == "attn":
                 budget_sum = budget_sum + budget
                 n_attn = n_attn + 1.0
-        return (x, budget_sum, n_attn), new_states
+                rs_sum = rs_sum + rs
+        return (x, budget_sum, n_attn, rs_sum), new_states
 
-    (x, budget_sum, n_attn), new_blocks = jax.lax.scan(
+    (x, budget_sum, n_attn, rs_sum), new_blocks = jax.lax.scan(
         period_body,
-        (x, jnp.zeros((b,), jnp.float32), jnp.zeros((), jnp.float32)),
+        (x, jnp.zeros((b,), jnp.float32), jnp.zeros((), jnp.float32),
+         jnp.zeros((runs_lib.RUN_STATS_LEN,), jnp.float32)),
         (params["blocks"], state["blocks"]), length=repeats)
 
     x = ly.rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = (x @ head)[:, 0]
     stats = {"pruned_budget": budget_sum / jnp.maximum(n_attn, 1.0)}
+    if cfg.twilight.collect_run_stats:
+        stats["run_stats"] = rs_sum
+    return logits, {"blocks": new_blocks}, stats
+
+
+def _attn_decode_window_paged(bp: Params, cfg: ModelConfig, x: jax.Array,
+                              cache: Params, page_table: jax.Array,
+                              lengths: jax.Array, live: jax.Array,
+                              n_tok: jax.Array
+                              ) -> tuple[jax.Array, Params, jax.Array,
+                                         jax.Array]:
+    """x: (b, kw, d_model) -> (out (b, kw, d_model), cache, budget, runs).
+
+    Multi-token paged decode: position ``j`` of slot ``i`` lands at
+    ``lengths[i] + j``.  Cache rows, page extrema and INT4 shadows are
+    appended per position in window order (later positions see earlier
+    ones' extrema, exactly as k successive single steps would); positions
+    ``j >= n_tok[i]`` and dead slots write the null page.  Attention for
+    all kw positions then runs through ONE
+    :func:`twilight_decode_window_attention` launch sharing one candidate
+    buffer.
+    """
+    b, kw = x.shape[0], x.shape[1]
+    tw = cfg.twilight
+    ps = tw.page_size
+    positions = lengths[:, None] + jnp.arange(kw)[None, :]  # (b, kw)
+    q, k, v = ly.attn_qkv(bp, cfg, x, positions)  # (b, kw, h, d)
+
+    cache = dict(cache)
+    for j in range(kw):
+        live_j = live & (j < n_tok)
+        kj, vj = k[:, j], v[:, j]  # (b, hkv, d)
+        pos_j = lengths + j
+        lpage = pos_j // ps
+        phys_page = jnp.take_along_axis(page_table, lpage[:, None],
+                                        axis=1)[:, 0]
+        phys_page = jnp.where(live_j, phys_page, _NULL_PAGE)
+        row = phys_page * ps + pos_j % ps
+        cache["k"] = cache["k"].at[row].set(kj)
+        cache["v"] = cache["v"].at[row].set(vj)
+        if tw.enabled:
+            qt = quant_lib.quantize_int4(kj.astype(jnp.float32))
+            cache["qk_packed"] = cache["qk_packed"].at[row].set(qt.packed)
+            cache["qk_scale"] = cache["qk_scale"].at[row].set(qt.scale)
+            cache["qk_zero"] = cache["qk_zero"].at[row].set(qt.zero)
+            old_max = jnp.take(cache["pmax"], phys_page, axis=0)
+            old_min = jnp.take(cache["pmin"], phys_page, axis=0)
+            fresh = ((pos_j % ps) == 0)[:, None, None]
+            new_max = jnp.where(fresh, kj, jnp.maximum(old_max, kj))
+            new_min = jnp.where(fresh, kj, jnp.minimum(old_min, kj))
+            cache["pmax"] = cache["pmax"].at[phys_page].set(new_max)
+            cache["pmin"] = cache["pmin"].at[phys_page].set(new_min)
+            if "h2o_mass" in cache:
+                old_mass = jnp.take(cache["h2o_mass"], phys_page, axis=0)
+                fresh_live = fresh[:, :, 0] & live_j[:, None]
+                cache["h2o_mass"] = cache["h2o_mass"].at[phys_page].set(
+                    jnp.where(fresh_live, 0.0, old_mass))
+
+    ctx, qkeys = _selection_ctx_paged(cfg, cache, page_table,
+                                      lengths + n_tok)
+    tw_out = twilight_decode_window_attention(
+        q, cache["k"], cache["v"], tw, ctx=ctx, qkeys=qkeys,
+        lengths=lengths, n_tok=n_tok)
+    if "h2o_mass" in cache and tw_out.indices is not None:
+        cache["h2o_mass"] = _h2o_mass_window_update(
+            cache["h2o_mass"], tw_out, ps, page_table, live)
+    out = tw_out.out.reshape(b, kw, cfg.n_heads * cfg.d_head) @ bp["wo"]
+    budget = tw_out.stats.pruned_budget.astype(jnp.float32).mean(axis=-1)
+    rs = _run_stats_vec(tw, tw_out, page_table)
+    return out.astype(x.dtype), cache, budget, rs
+
+
+def _block_apply_decode_window_paged(bp: Params, cfg: ModelConfig,
+                                     spec: LayerSpec, x: jax.Array,
+                                     st: Params, page_table: jax.Array,
+                                     lengths: jax.Array, live: jax.Array,
+                                     n_tok: jax.Array
+                                     ) -> tuple[jax.Array, Params,
+                                                jax.Array, jax.Array]:
+    if spec.kind != "attn" or "cross" in bp:
+        raise ValueError(
+            f"{cfg.name}: window decode requires an attention-only stack "
+            f"(got a {spec.kind!r} mixer"
+            + (" with cross-attention" if "cross" in bp else "") + ")")
+    h = ly.rms_norm(x, bp["norm1"], cfg.norm_eps)
+    mix, st, budget, rs = _attn_decode_window_paged(
+        bp["mixer"], cfg, h, st, page_table, lengths, live, n_tok)
+    x = x + mix
+    if "ffn" in bp:
+        h2 = ly.rms_norm(x, bp["norm2"], cfg.norm_eps)
+        if spec.is_moe:
+            y, _ = ly.moe_apply(bp["ffn"], cfg, h2)
+        else:
+            y = ly.mlp_apply(bp["ffn"], h2)
+        x = x + y
+    return x, st, budget, rs
+
+
+def decode_window_paged(params: Params, cfg: ModelConfig, state: Params,
+                        tokens: jax.Array, page_table: jax.Array,
+                        lengths: jax.Array, live: jax.Array,
+                        n_tok: jax.Array
+                        ) -> tuple[jax.Array, Params, dict[str, jax.Array]]:
+    """One continuous-batching step decoding up to kw tokens per slot.
+
+    tokens: (b, kw) i32 — position ``j`` is written at ``lengths[i] + j``;
+    n_tok: (b,) i32 in [1, kw], the number of live window positions per
+    slot (forced/replayed tokens beyond the first; columns >= n_tok are
+    ignored).  Returns (logits (b, kw, vocab), state, stats); logits row
+    ``n_tok[i] - 1`` is the sampling row for slot ``i``.  Requires an
+    attention-only stack (see ``supports_chunked_prefill``).
+    """
+    specs, repeats = layer_schedule(cfg)
+    b, kw = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)  # (b, kw, d)
+
+    def period_body(carry, xs_slice):
+        x, budget_sum, n_attn, rs_sum = carry
+        bp_slice, st_slice = xs_slice
+        new_states = []
+        for p_idx, spec in enumerate(specs):
+            x, st, budget, rs = _block_apply_decode_window_paged(
+                bp_slice[p_idx], cfg, spec, x, st_slice[p_idx],
+                page_table, lengths, live, n_tok)
+            new_states.append(st)
+            budget_sum = budget_sum + budget
+            n_attn = n_attn + 1.0
+            rs_sum = rs_sum + rs
+        return (x, budget_sum, n_attn, rs_sum), new_states
+
+    (x, budget_sum, n_attn, rs_sum), new_blocks = jax.lax.scan(
+        period_body,
+        (x, jnp.zeros((b,), jnp.float32), jnp.zeros((), jnp.float32),
+         jnp.zeros((runs_lib.RUN_STATS_LEN,), jnp.float32)),
+        (params["blocks"], state["blocks"]), length=repeats)
+
+    x = ly.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head  # (b, kw, vocab)
+    stats = {"pruned_budget": budget_sum / jnp.maximum(n_attn, 1.0)}
+    if cfg.twilight.collect_run_stats:
+        stats["run_stats"] = rs_sum
     return logits, {"blocks": new_blocks}, stats

@@ -91,10 +91,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import runs as runs_lib
 from repro.models import (
     copy_page,
     decode_step,
     decode_step_paged,
+    decode_window_paged,
     init_paged_decode_state,
     init_params,
     prefill,
@@ -181,7 +183,8 @@ class DecodeEngine:
                  batch_size: int = 8, cache_capacity: int = 512, seed: int = 0,
                  paged: bool = False, num_pages: int | None = None,
                  prefix_share: bool = False,
-                 prefill_chunk_pages: int = 4):
+                 prefill_chunk_pages: int = 4,
+                 decode_window: int = 1):
         tw = cfg.twilight
         if tw.enabled and tw.compact and tw.pruned_cap_frac is None:
             # Serving default: B1-scaled final gather (ROADMAP follow-up).
@@ -201,6 +204,16 @@ class DecodeEngine:
         self.cache_capacity = cache_capacity
         self.paged = paged
         self.prefix_share = prefix_share
+        self.decode_window = decode_window
+        if decode_window < 1:
+            raise ValueError("decode_window must be >= 1")
+        if decode_window > 1:
+            if not paged:
+                raise ValueError("decode_window > 1 requires paged=True")
+            if not supports_chunked_prefill(cfg):
+                raise ValueError(
+                    f"{cfg.name}: decode_window > 1 requires an "
+                    "attention-only stack (supports_chunked_prefill)")
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else init_params(cfg, key)
         self._sample_key = jax.random.PRNGKey(seed + 1)  # wave-mode stream
@@ -243,6 +256,8 @@ class DecodeEngine:
                     cfg, st, pst, slot, pages),
                 donate_argnums=(0,))
 
+            _rs_zero = jnp.zeros((runs_lib.RUN_STATS_LEN,), jnp.float32)
+
             def _step_fn(p, state, tok, pt, lengths, live, greedy, uids,
                          emitted, base_key):
                 logits, state, stats = decode_step_paged(
@@ -255,9 +270,36 @@ class DecodeEngine:
                     return sample_token(k, row[None], greedy=g)[0]
 
                 nxt = jax.vmap(samp)(uids, emitted, lg, greedy)
-                return nxt, state, stats["pruned_budget"]
+                return (nxt, state, stats["pruned_budget"],
+                        stats.get("run_stats", _rs_zero))
 
             self._step_jit = jax.jit(_step_fn, donate_argnums=(1,))
+
+            def _window_fn(p, state, toks, pt, lengths, live, n_tok, greedy,
+                           uids, emitted, base_key):
+                # toks (b, kw): column 0 is the pending token, columns
+                # 1..n_tok-1 are teacher-forced replay tokens.  The sampling
+                # row is position n_tok - 1; the draw index is the global
+                # emitted-token index of the NEXT token, emitted + n_tok - 1
+                # (exactly where n_tok successive single steps would land),
+                # so preemption replay stays on the per-request stream.
+                logits, state, stats = decode_window_paged(
+                    p, cfg, state, toks, pt, lengths, live, n_tok)
+                row = jnp.take_along_axis(
+                    logits, (n_tok - 1)[:, None, None], axis=1)[:, 0]
+                lg = row[:, :cfg.vocab_size]
+
+                def samp(uid, e, r, g):
+                    k = jax.random.fold_in(
+                        jax.random.fold_in(base_key, uid), e)
+                    return sample_token(k, r[None], greedy=g)[0]
+
+                nxt = jax.vmap(samp)(uids, emitted + n_tok - 1, lg, greedy)
+                return (nxt, state, stats["pruned_budget"],
+                        stats.get("run_stats", _rs_zero))
+
+            self._window_jit = (jax.jit(_window_fn, donate_argnums=(1,))
+                                if decode_window > 1 else None)
 
             if prefix_share:
                 if not supports_chunked_prefill(cfg):
@@ -480,6 +522,10 @@ class DecodeEngine:
         self._uids = np.zeros((b,), np.int32)
         self._emitted = np.zeros((b,), np.int32)
         self._cur_tok = jnp.zeros((b,), jnp.int32)
+        # Survivor-run telemetry: device-side running sum (no per-step
+        # host sync), harvested by session_run_stats().
+        self._rs_sum = jnp.zeros((runs_lib.RUN_STATS_LEN,), jnp.float32)
+        self._rs_steps = 0
 
     def busy(self) -> bool:
         """True while the session holds queued or in-flight requests."""
@@ -837,39 +883,76 @@ class DecodeEngine:
             self._advance_prefill(min(prefilling, key=lambda r: r.order))
         if not any(self._live):
             return len(self._done) + len(self._results)
-        # Boundary pages for this step's appends.
+        kw = self.decode_window
+        # Window occupancy: slot i decodes n_tok[i] tokens this step — the
+        # pending token plus up to kw-1 queued replay tokens (teacher-forced
+        # through the SAME k-token window path, so a preempted request's
+        # recompute is token-exact AND takes fewer launches).
+        n_tok = np.ones((b,), np.int32)
+        forced = np.zeros((b, kw), np.int32)
+        if kw > 1:
+            for slot in range(b):
+                run = self._slots[slot]
+                if self._live[slot] and run.replay:
+                    w = min(len(run.replay), kw)
+                    n_tok[slot] = w
+                    forced[slot, :w] = [run.replay[j] for j in range(w)]
+        # Boundary pages for this step's appends (every window position
+        # that opens a fresh page needs one).
         for slot in range(b):
-            if self._live[slot] and self._lengths[slot] % ps == 0:
+            if not self._live[slot]:
+                continue
+            for pos in range(self._lengths[slot],
+                             self._lengths[slot] + n_tok[slot]):
+                if pos % ps != 0:
+                    continue
                 if not self._ensure_pages(1, slot) or not self._live[slot]:
-                    continue  # self-preempted (last resort)
+                    break  # self-preempted (last resort)
                 page = self._alloc.alloc(1)[0]
                 self._slots[slot].pages.append(page)
-                self._pt[slot, self._lengths[slot] // ps] = page
+                self._pt[slot, pos // ps] = page
         if not any(self._live):
             return len(self._done) + len(self._results)
         # One jitted step for the whole batch; dead slots compute junk
         # into the null page.
-        self._cur_tok, self._state, budget = self._step_jit(
-            self.params, self._state, self._cur_tok, jnp.asarray(self._pt),
-            jnp.asarray(self._lengths), jnp.asarray(self._live),
-            jnp.asarray(self._greedy), jnp.asarray(self._uids),
-            jnp.asarray(self._emitted), self._base_key)
+        if kw > 1:
+            toks = jnp.concatenate(
+                [self._cur_tok[:, None], jnp.asarray(forced[:, 1:])], axis=1)
+            self._cur_tok, self._state, budget, rs = self._window_jit(
+                self.params, self._state, toks, jnp.asarray(self._pt),
+                jnp.asarray(self._lengths), jnp.asarray(self._live),
+                jnp.asarray(n_tok), jnp.asarray(self._greedy),
+                jnp.asarray(self._uids), jnp.asarray(self._emitted),
+                self._base_key)
+        else:
+            self._cur_tok, self._state, budget, rs = self._step_jit(
+                self.params, self._state, self._cur_tok,
+                jnp.asarray(self._pt), jnp.asarray(self._lengths),
+                jnp.asarray(self._live), jnp.asarray(self._greedy),
+                jnp.asarray(self._uids), jnp.asarray(self._emitted),
+                self._base_key)
         self._tok_frames.append(self._cur_tok)
         self._budget_frames.append(budget)
+        if self.cfg.twilight.collect_run_stats:
+            self._rs_sum = self._rs_sum + rs  # device-side, no sync
+            self._rs_steps += 1
         for slot in range(b):
             if not self._live[slot]:
                 continue
-            self._lengths[slot] += 1
+            w = int(n_tok[slot])
+            self._lengths[slot] += w
             run = self._slots[slot]
-            run.emitted += 1
+            run.emitted += w
             self._emitted[slot] = run.emitted
             if run.replay:
-                # Teacher-forced replay of a preempted request: the token
-                # just written came off the queue; while more remain,
-                # override the sampled token with the next forced one.
-                # (The per-request key stream makes the draw at the final
-                # forced position land exactly where the oracle's would.)
-                run.replay.popleft()
+                # Teacher-forced replay of a preempted request: the w
+                # tokens just written came off the queue; while more
+                # remain, override the sampled token with the next forced
+                # one.  (The per-request key stream makes the draw at the
+                # final forced position land exactly where the oracle's
+                # would.)
+                for _ in range(w):
+                    run.replay.popleft()
                 if run.replay:
                     self._cur_tok = self._cur_tok.at[slot].set(
                         run.replay[0])
@@ -930,6 +1013,19 @@ class DecodeEngine:
             return harvested
         self._results = [r for r in harvested if r.uid not in uids]
         return [r for r in harvested if r.uid in uids]
+
+    def session_run_stats(self) -> dict | None:
+        """Session-lifetime survivor-run telemetry (one host sync).
+
+        Returns :func:`repro.core.runs.summarize_run_stats` of the summed
+        per-step vectors — run-length histogram, runs/pages/kept per step —
+        or None when ``cfg.twilight.collect_run_stats`` is off or no decode
+        step has run.  Counts are summed over attention layers."""
+        if (not self.paged or self._alloc is None or self._rs_steps == 0
+                or not self.cfg.twilight.collect_run_stats):
+            return None
+        return runs_lib.summarize_run_stats(np.asarray(self._rs_sum),
+                                            self._rs_steps)
 
     def reset(self) -> None:
         """Tear the session down: live slots and the pending queue are

@@ -23,6 +23,7 @@ fully-masked rows, and a candidate budget smaller than one page.
 """
 
 import dataclasses
+from types import SimpleNamespace
 
 import jax
 import jax.numpy as jnp
@@ -38,8 +39,19 @@ from repro.core import (
     quantize_int4,
     twilight_decode_attention,
 )
-from repro.kernels.fused_decode.ops import fused_prune_attend
-from repro.kernels.fused_decode.ref import fused_prune_attend_ref
+from repro.core import runs as runs_lib
+from repro.kernels.fused_decode.kernel import coalesce_block
+from repro.kernels.fused_decode.ops import (
+    FUSED_VMEM_BUDGET,
+    fused_fits,
+    fused_prune_attend,
+    fused_prune_attend_window,
+    fused_vmem_bytes,
+)
+from repro.kernels.fused_decode.ref import (
+    fused_prune_attend_ref,
+    fused_prune_attend_window_ref,
+)
 from repro.serving import DecodeEngine, Request
 from tests.test_paged_cache import _paged_fixture
 
@@ -305,3 +317,367 @@ def test_fused_backend_resolution():
         reuse_int4_for_attention=True).use_fused_decode()
     with pytest.raises(ValueError, match="fused_backend"):
         TwilightConfig(fused_backend="bogus").use_fused_decode()
+
+
+# ---------------------------------------------------------------------------
+# Run coalescing: RLE reference properties + jit-safe telemetry
+# ---------------------------------------------------------------------------
+
+_PS = 16
+
+
+def _kept_patterns(rng, m=96):
+    """Adversarial survivor bitmaps over an m-slot candidate buffer."""
+    alternating = np.zeros(m, bool)
+    alternating[::2] = True
+    single = np.zeros(m, bool)
+    single[m // 3] = True
+    all_kept = np.ones(m, bool)
+    tail_empty = np.ones(m, bool)
+    tail_empty[-_PS:] = False  # last page entirely dropped
+    random = rng.random(m) < 0.4
+    return {
+        "alternating": alternating,
+        "single_survivor": single,
+        "all_kept": all_kept,
+        "empty_tail_page": tail_empty,
+        "random": random,
+    }
+
+
+@pytest.mark.parametrize("contiguous_idx", [True, False])
+def test_coalesced_runs_properties(rng, contiguous_idx):
+    """Runs partition the kept set, are index-contiguous, and never cross
+    a page boundary — for every adversarial bitmap, with both densely
+    consecutive and gappy candidate indices."""
+    m = 96
+    if contiguous_idx:
+        idx = np.arange(m, dtype=np.int32)
+    else:
+        idx = np.sort(rng.choice(4 * m, size=m, replace=False)).astype(
+            np.int32)
+    for name, kept in _kept_patterns(rng, m).items():
+        runs = runs_lib.coalesced_runs(kept, idx, _PS)
+        covered = np.zeros(m, bool)
+        for start, length in runs:
+            assert length >= 1, name
+            sl = slice(start, start + length)
+            assert not covered[sl].any(), f"{name}: overlapping runs"
+            covered[sl] = True
+            assert kept[sl].all(), f"{name}: run covers a dropped slot"
+            # index-contiguous within the run
+            np.testing.assert_array_equal(
+                idx[sl], np.arange(idx[start], idx[start] + length),
+                err_msg=f"{name}: non-consecutive indices inside a run")
+            # one physical page per run
+            assert idx[start] // _PS == idx[start + length - 1] // _PS, (
+                f"{name}: run crosses a page boundary")
+        np.testing.assert_array_equal(covered, kept,
+                                      err_msg=f"{name}: runs != kept set")
+
+
+def test_run_length_stats_matches_rle_reference(rng):
+    """The jit-safe aggregate equals the numpy RLE, bitmap by bitmap."""
+    b, hkv, m = 2, 3, 96
+    n_pages = (4 * m) // _PS + 1
+    kept = np.stack([np.stack(list(_kept_patterns(rng, m).values())[:hkv])
+                     for _ in range(b)])
+    idx = np.sort(rng.choice(4 * m, size=(b, hkv, m)), axis=-1).astype(
+        np.int32)
+    # de-dup so "consecutive" is well defined (sorted unique per row)
+    for i in range(b):
+        for h in range(hkv):
+            row = np.unique(idx[i, h])
+            idx[i, h, :len(row)] = row
+            idx[i, h, len(row):] = np.arange(4 * m, 4 * m + m - len(row))
+    got = np.asarray(runs_lib.run_length_stats(
+        jnp.asarray(kept), jnp.asarray(idx), _PS, n_pages))
+    want = np.zeros(runs_lib.RUN_STATS_LEN)
+    for i in range(b):
+        for h in range(hkv):
+            runs = runs_lib.coalesced_runs(kept[i, h], idx[i, h], _PS)
+            for _, length in runs:
+                bucket = min(int(np.floor(np.log2(length))),
+                             runs_lib.RUN_HIST_BUCKETS - 1)
+                want[bucket] += 1
+            want[runs_lib.RUN_HIST_BUCKETS] += len(runs)
+            want[runs_lib.RUN_HIST_BUCKETS + 1] += len(
+                {int(x) // _PS for x in idx[i, h][kept[i, h]]})
+            want[runs_lib.RUN_HIST_BUCKETS + 2] += int(kept[i, h].sum())
+    np.testing.assert_array_equal(got, want)
+
+
+def test_summarize_run_stats_arithmetic():
+    vec = np.zeros(runs_lib.RUN_STATS_LEN)
+    vec[:3] = [4, 2, 1]  # 7 runs in the histogram
+    vec[runs_lib.RUN_HIST_BUCKETS:] = [7, 5, 21]
+    s = runs_lib.summarize_run_stats(vec, steps=7)
+    assert s["steps"] == 7
+    assert s["run_hist"][:3] == [4, 2, 1]
+    assert s["runs_per_step"] == 1.0
+    assert s["pages_per_step"] == 5 / 7
+    assert s["kept_per_step"] == 3.0
+    assert s["mean_run_len"] == 3.0
+
+
+# ---------------------------------------------------------------------------
+# VMEM budget arithmetic: staging + k-token accumulator scaling
+# ---------------------------------------------------------------------------
+
+def test_fused_vmem_staging_term():
+    """The kv_bytes-dependent term is exactly the double-buffered two-stream
+    staging scratch: 2 buffers x 2 (K and V) x blk rows x d x kv_bytes."""
+    m, d, group, ps = 1024, 128, 8, 64
+    blk = coalesce_block(m, ps)
+    delta = (fused_vmem_bytes(m, d, group, kv_bytes=2, page_size=ps)
+             - fused_vmem_bytes(m, d, group, kv_bytes=1, page_size=ps))
+    assert delta == 2 * 2 * blk * d
+
+
+def test_fused_vmem_k_scaling():
+    """Each extra window position adds its bitmaps/weight rows plus a
+    proportional share of the score rows, queries, and accumulator — the
+    staging and codes terms are shared across the window."""
+    m, d, group, ps = 1024, 128, 8, 64
+    per_k = (m * 6                 # valid/kept bitmaps + f32 weight row
+             + 3 * group * m * 4   # live score rows
+             + 3 * group * d * 4   # whole + nibble-split queries
+             + group * (d + 2) * 4)  # online-softmax accumulator
+    b1 = fused_vmem_bytes(m, d, group, k=1, page_size=ps)
+    for k in (2, 4, 8):
+        assert fused_vmem_bytes(m, d, group, k=k,
+                                page_size=ps) == b1 + (k - 1) * per_k
+
+
+def test_fused_fits_budget_and_interpret():
+    d, group = 128, 8
+    # Interpret mode has no VMEM ceiling: the tri-state default fits.
+    assert fused_fits(1 << 17, d, group)
+    # The real budget check trips at large candidate capacity...
+    assert fused_vmem_bytes(1 << 17, d, group) > FUSED_VMEM_BUDGET
+    assert not fused_fits(1 << 17, d, group, interpret=False)
+    assert fused_fits(1 << 10, d, group, interpret=False)
+    # ...and a k=4 window trips it at a capacity where k=1 still fits.
+    m = 1 << 15
+    assert fused_fits(m, d, group, k=1, interpret=False)
+    assert not fused_fits(m, d, group, k=4, interpret=False)
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle under adversarial survivor patterns
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pattern", ["alternating", "single_survivor",
+                                     "all_kept", "empty_tail_page"])
+def test_fused_op_adversarial_valid_patterns(rng, pattern):
+    """Worst cases for run coalescing — run length 1 everywhere, a lone
+    survivor, one maximal run per page, and a fully dropped tail page —
+    must still match the oracle exactly."""
+    q, K, V = _setup(rng, n=256)
+    b, n, hkv, d = K.shape
+    m = 96
+    qkeys = quantize_int4(K)
+    idx = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32), (b, hkv, m))
+    valid = jnp.broadcast_to(
+        jnp.asarray(_kept_patterns(rng, m)[pattern]), (b, hkv, m))
+    # p=1.0 keeps every valid slot: the DMA set IS the adversarial pattern.
+    out, kept, w, th = fused_prune_attend(q, idx, valid, K, V, qkeys, p=1.0)
+    ro, rk, rw, rt = fused_prune_attend_ref(q, idx, valid, K, V, qkeys,
+                                            p=1.0)
+    np.testing.assert_array_equal(np.asarray(kept), np.asarray(rk))
+    np.testing.assert_array_equal(np.asarray(kept), np.asarray(valid))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(rw),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ro),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Multi-token window op
+# ---------------------------------------------------------------------------
+
+def _window_setup(rng, b=2, kw=3, hq=8, hkv=2, n=256, m=128, d=64):
+    q = jnp.asarray(rng.normal(size=(b, kw, hq, d)), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    qkeys = quantize_int4(K)
+    idx = jnp.asarray(np.sort(rng.choice(n, size=(b, hkv, m)), -1), jnp.int32)
+    base = jnp.asarray(rng.random((b, hkv, m)) < 0.9)
+    # Window-causal validity: each position j adds a few more live slots,
+    # mimicking "token L+j sees one more cache row than token L+j-1".
+    grow = jnp.asarray(rng.random((b, kw, hkv, m)) < 0.05)
+    valid = jnp.cumsum(grow, axis=1).astype(bool) | base[:, None]
+    idx = jnp.where(valid.any(axis=1), idx, 0)
+    return q, idx, valid, K, V, qkeys
+
+
+def test_fused_window_op_matches_ref(rng):
+    q, idx, valid, K, V, qkeys = _window_setup(rng)
+    out, kept, w, th = fused_prune_attend_window(q, idx, valid, K, V, qkeys,
+                                                 p=0.9)
+    ro, rk, rw, rt = fused_prune_attend_window_ref(q, idx, valid, K, V,
+                                                   qkeys, p=0.9)
+    np.testing.assert_array_equal(np.asarray(kept), np.asarray(rk))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(rw),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(th), np.asarray(rt),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ro),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fused_window_dead_position_emits_zeros(rng):
+    """A window position whose validity row is all-False (slot queued fewer
+    than kw tokens) keeps nothing and outputs exact zeros — junk from the
+    shared DMA stream must not leak across positions."""
+    q, idx, valid, K, V, qkeys = _window_setup(rng)
+    valid = valid.at[0, -1].set(False)  # slot 0 only queued kw-1 tokens
+    out, kept, w, th = fused_prune_attend_window(q, idx, valid, K, V, qkeys,
+                                                 p=0.9)
+    assert not np.asarray(kept)[0, -1].any()
+    assert (np.asarray(w)[0, -1] == 0).all()
+    np.testing.assert_array_equal(np.asarray(out)[0, -1], 0.0)
+    # Live positions of the same slot are untouched by the dead one.
+    ro, rk, _, _ = fused_prune_attend_window_ref(q, idx, valid, K, V, qkeys,
+                                                 p=0.9)
+    np.testing.assert_array_equal(np.asarray(kept), np.asarray(rk))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ro),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fused_window_kw1_equals_single(rng):
+    """kw = 1 window == the single-token op, bit for bit (same kernel,
+    same grid, same accumulation order)."""
+    q, K, V = _setup(rng, n=256)
+    b, n, hkv, d = K.shape
+    m = 128
+    qkeys = quantize_int4(K)
+    idx = jnp.asarray(np.sort(rng.choice(n, size=(b, hkv, m)), -1), jnp.int32)
+    valid = jnp.asarray(rng.random((b, hkv, m)) < 0.9)
+    idx = jnp.where(valid, idx, 0)
+    single = fused_prune_attend(q, idx, valid, K, V, qkeys, p=0.9)
+    window = fused_prune_attend_window(q[:, None], idx, valid[:, None],
+                                       K, V, qkeys, p=0.9)
+    for s, w in zip(single, window):
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(w[:, 0]))
+
+
+# ---------------------------------------------------------------------------
+# H2O page-mass accumulation through the window path
+# ---------------------------------------------------------------------------
+
+def test_h2o_mass_window_equals_sequential_updates(rng):
+    """One window scatter-add == kw sequential single-step updates (the
+    positions share a candidate buffer, so the scatter targets coincide
+    and only the summation order differs)."""
+    from repro.models.model import _h2o_mass_update, _h2o_mass_window_update
+
+    b, kw, hkv, m, ps = 2, 3, 2, 64, 16
+    num_pages, max_pages = 40, 8
+    idx = jnp.asarray(rng.integers(0, max_pages * ps, (b, hkv, m)), jnp.int32)
+    pt = jnp.asarray(rng.integers(1, num_pages, (b, max_pages)), jnp.int32)
+    pv = jnp.asarray(rng.random((b, kw, hkv, m)) < 0.5)
+    w = jnp.asarray(rng.random((b, kw, hkv, m)), jnp.float32)
+    live = jnp.asarray([True, False])
+    mass0 = jnp.asarray(rng.random((num_pages, hkv)), jnp.float32)
+
+    win = SimpleNamespace(pruned_valid=pv, slot_weights=w, indices=idx)
+    got = _h2o_mass_window_update(mass0, win, ps, pt, live)
+    want = mass0
+    for j in range(kw):
+        step = SimpleNamespace(pruned_valid=pv[:, j], slot_weights=w[:, j],
+                               indices=idx)
+        want = _h2o_mass_update(want, step, ps, page_table=pt, live=live)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    # The dead slot contributed nothing: zero its weights and re-run.
+    got_dead = _h2o_mass_window_update(
+        mass0, SimpleNamespace(pruned_valid=pv.at[1].set(False),
+                               slot_weights=w, indices=idx),
+        ps, pt, live)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(got_dead),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Model level: window decode == k sequential steps (full selector)
+# ---------------------------------------------------------------------------
+
+def test_model_window_decode_matches_sequential(rng):
+    """``decode_window_paged`` with kw teacher-forced tokens reproduces kw
+    single ``decode_step_paged`` calls position for position — exact for
+    the full selector (anchor-shared selection == per-step selection when
+    every candidate is in the buffer), including ragged ``n_tok``."""
+    from repro.models import (
+        decode_step_paged,
+        decode_window_paged,
+        init_paged_decode_state,
+        init_params,
+        prefill,
+        write_prefill_slot,
+    )
+    from repro.serving.paged_cache import PageAllocator, pages_for
+
+    cfg = get_smoke_config("qwen2-1.5b")
+    cfg = cfg.replace(twilight=dataclasses.replace(
+        cfg.twilight, selector="full", candidate_frac=1.0,
+        collect_run_stats=True))
+    ps = cfg.twilight.page_size
+    max_pages = 64 // ps
+    params = init_params(cfg, jax.random.PRNGKey(7))
+    prompts = [rng.integers(8, cfg.vocab_size, L).astype(np.int32)
+               for L in (24, 13)]
+    b, kw = 2, 3
+    forced = np.stack([rng.integers(8, cfg.vocab_size, kw).astype(np.int32)
+                       for _ in range(b)])
+
+    def setup():
+        alloc = PageAllocator(1 + b * max_pages)
+        state = init_paged_decode_state(cfg, b, alloc.num_pages)
+        pt = np.zeros((b, max_pages), np.int32)
+        lengths = np.zeros((b,), np.int32)
+        for s, pr in enumerate(prompts):
+            n_req = pages_for(len(pr), ps)
+            pages = alloc.alloc(n_req)
+            _, pstate = prefill(params, cfg,
+                                {"tokens": jnp.asarray(pr[None])},
+                                n_max=n_req * ps)
+            state = write_prefill_slot(cfg, state, pstate, s,
+                                       jnp.asarray(pages))
+            pt[s, :n_req] = pages
+            lengths[s] = len(pr)
+        return alloc, state, pt, lengths
+
+    # Path A: kw sequential teacher-forced single steps.
+    alloc, state, pt, lengths = setup()
+    live = np.ones((b,), bool)
+    seq = [[] for _ in range(b)]
+    for i in range(kw):
+        for s in range(b):
+            if lengths[s] % ps == 0:
+                pt[s, lengths[s] // ps] = alloc.alloc(1)[0]
+        lg, state, stats = decode_step_paged(
+            params, cfg, state, jnp.asarray(forced[:, i]), jnp.asarray(pt),
+            jnp.asarray(lengths), jnp.asarray(live))
+        for s in range(b):
+            seq[s].append(np.asarray(lg[s, :cfg.vocab_size], np.float32))
+        lengths += 1
+    assert stats["run_stats"].shape == (runs_lib.RUN_STATS_LEN,)
+
+    # Path B: one ragged window call (slot 1 only queues 2 of the kw).
+    alloc, state, pt, lengths = setup()
+    n_tok = np.asarray([kw, 2], np.int32)
+    for s in range(b):
+        for pos in range(lengths[s], lengths[s] + int(n_tok[s])):
+            if pos % ps == 0:
+                pt[s, pos // ps] = alloc.alloc(1)[0]
+    lg, _, wstats = decode_window_paged(
+        params, cfg, state, jnp.asarray(forced), jnp.asarray(pt),
+        jnp.asarray(lengths), jnp.ones((b,), bool), jnp.asarray(n_tok))
+    assert wstats["run_stats"].shape == (runs_lib.RUN_STATS_LEN,)
+    for s in range(b):
+        for j in range(int(n_tok[s])):
+            np.testing.assert_allclose(
+                np.asarray(lg[s, j, :cfg.vocab_size], np.float32),
+                seq[s][j], rtol=2e-4, atol=2e-4,
+                err_msg=f"slot {s} window pos {j}")

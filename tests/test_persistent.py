@@ -305,6 +305,82 @@ def test_forced_replay_matches_unpreempted(rng):
             assert got[0].tokens == want, (greedy, k)
 
 
+def test_window_engine_matches_plain(rng):
+    """``decode_window=4`` on a workload with no preemption: every step has
+    exactly one queued token per slot, so the window path must reproduce
+    the plain engine token for token (greedy AND sampled) — and its
+    run-stats accumulator must agree with the plain engine's."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    cfg = cfg.replace(twilight=dataclasses.replace(
+        cfg.twilight, collect_run_stats=True))
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(8, cfg.vocab_size, L
+                                        ).astype(np.int32),
+                    max_new_tokens=mn, greedy=greedy)
+            for i, (L, mn, greedy) in enumerate(
+                [(24, 6, True), (17, 4, False), (9, 3, True)])]
+    plain = DecodeEngine(cfg, batch_size=2, cache_capacity=64, seed=7,
+                         paged=True)
+    win = DecodeEngine(cfg, params=plain.params, batch_size=2,
+                       cache_capacity=64, seed=7, paged=True,
+                       decode_window=4)
+    want = {r.uid: r.tokens for r in plain.generate(reqs)}
+    got = {r.uid: r.tokens for r in win.generate(reqs)}
+    assert got == want
+    rs_p, rs_w = plain.session_run_stats(), win.session_run_stats()
+    assert rs_p is not None and rs_w is not None
+    assert rs_p == rs_w
+
+
+def test_window_engine_preemption_replay_token_exact(rng):
+    """The multi-token bugfix: a preemption victim's teacher-forced replay
+    goes through the k-token window path (up to ``decode_window`` queued
+    tokens per launch) and must stay token-exact vs the solo oracle —
+    while taking strictly fewer decode launches than one-per-token."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    cfg = cfg.replace(twilight=dataclasses.replace(
+        cfg.twilight, selector="full", candidate_frac=1.0))
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(8, cfg.vocab_size, 17
+                                        ).astype(np.int32),
+                    max_new_tokens=20, greedy=False)
+            for i in range(2)]
+    roomy = DecodeEngine(cfg, batch_size=2, cache_capacity=40, seed=7,
+                         paged=True)
+    want = {r.uid: r.tokens for r in roomy.generate(reqs)}
+
+    def run_tight(kw):
+        eng = DecodeEngine(cfg, params=roomy.params, batch_size=2,
+                           cache_capacity=40, seed=7, paged=True,
+                           num_pages=9, decode_window=kw)
+        eng.submit(reqs)
+        got, steps = {}, 0
+        while eng.busy():
+            eng.step()
+            steps += 1
+            for r in eng.drain():
+                got[r.uid] = r.tokens
+        return got, steps, eng
+
+    got1, steps1, eng1 = run_tight(1)
+    got4, steps4, eng4 = run_tight(4)
+    assert eng1.session_preemptions > 0, "pool sizing must force preemption"
+    assert eng4.session_preemptions > 0
+    assert got1 == want
+    assert got4 == want
+    assert steps4 < steps1, \
+        "window replay must batch teacher-forced tokens into fewer launches"
+
+
+def test_decode_window_requires_paged():
+    cfg = get_smoke_config("qwen2-1.5b")
+    with pytest.raises(ValueError, match="decode_window"):
+        DecodeEngine(cfg, batch_size=1, cache_capacity=64, decode_window=4)
+    with pytest.raises(ValueError, match="decode_window"):
+        DecodeEngine(cfg, batch_size=1, cache_capacity=64, paged=True,
+                     decode_window=0)
+
+
 def test_step_drain_require_paged():
     cfg = get_smoke_config("qwen2-1.5b")
     eng = DecodeEngine(cfg, batch_size=1, cache_capacity=64)
