@@ -418,6 +418,38 @@ def _fused_axis_rows(runner, prefix: str, batch: int, total_new: int,
             f"tok_s={mt_speed:.2f};launch_x=4.00")
     out.append({"name": f"{prefix}_fused_multitok_speedup_b{batch}",
                 "tok_s_speedup": mt_speed, "launch_x": 4.0})
+
+    # Hierarchical page-nucleus axis: the fused run re-priced with the
+    # page-level top-p on (page_top_p=0.9) — nucleus-dead pages' INT4
+    # codes are never scored, so the estimate stage shrinks to the
+    # surviving pages.  The ``_hier_*`` rows feed the CI perf gate.
+    import dataclasses
+    twh = dataclasses.replace(tw, page_top_p=0.9)
+
+    def attn_fn(ctx: int) -> float:
+        tr = twilight_pipeline_traffic(twh, ctx, hq, hkv, d, fused=True,
+                                       dma="run")
+        return n_layers * bytes_to_us(tr["total_eff"])
+
+    ttft_us, total = runner(attn_fn)
+    tok_s = total_new / (total * 1e-6)
+    ref_h = twilight_pipeline_traffic(twh, ref_n, hq, hkv, d, fused=True,
+                                      dma="run")
+    ref_f = twilight_pipeline_traffic(tw, ref_n, hq, hkv, d, fused=True,
+                                      dma="run")
+    est_x = ref_f["estimate"] / ref_h["estimate"]
+    out.append({"name": f"{prefix}_hier_fused_b{batch}",
+                "ttft_us": ttft_us, "total_us": total, "tok_s": tok_s,
+                "hier_estimate_bytes_32k": ref_h["estimate"],
+                "flat_estimate_bytes_32k": ref_f["estimate"]})
+    csv_row(f"{prefix}_hier_fused_b{batch}", total,
+            f"ttft_us={ttft_us:.1f};tok_s={tok_s:.1f};"
+            f"est_bytes_32k={ref_h['estimate']:.0f}")
+    hier_speed = totals["fused_dma_run"][1] / total
+    out.append({"name": f"{prefix}_hier_speedup_b{batch}",
+                "tok_s_speedup": hier_speed, "estimate_x": est_x})
+    csv_row(f"{prefix}_hier_speedup_b{batch}", 0.0,
+            f"tok_s={hier_speed:.2f};est_x={est_x:.2f}")
     return out
 
 

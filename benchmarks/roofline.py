@@ -256,6 +256,63 @@ def print_multitok_table(rows: list[dict]) -> None:
               f"{r['per_tok_x']:10.2f} {r['launch_x']:9.2f}")
 
 
+def hierarchical_table(contexts=(8192, 32768, 65536, 131072),
+                       ps=(0.8, 0.9, 0.95), *, hq=32, hkv=8,
+                       d=128) -> list[dict]:
+    """Hierarchical page→token top-p: adaptive-estimate traffic vs flat.
+
+    For each (context, ``page_top_p``) cell, price the fused pipeline with
+    the page nucleus on vs off.  ``est_x`` is the estimate-stage bytes
+    reduction the page-level early-out buys (dead pages' INT4 codes are
+    never scored); ``total_x``/``eff_x`` are the end-to-end payload /
+    effective (run-DMA) improvements, net of the extra ``page_topp``
+    scoring term.
+    """
+    import dataclasses
+
+    from repro.analysis.costs import (
+        hierarchical_page_survivors,
+        serving_pipeline_config,
+    )
+
+    tw = serving_pipeline_config()
+    rows = []
+    for n in contexts:
+        flat = twilight_pipeline_traffic(tw, n, hq, hkv, d, fused=True,
+                                         dma="run")
+        for p in ps:
+            twh = dataclasses.replace(tw, page_top_p=p)
+            hier = twilight_pipeline_traffic(twh, n, hq, hkv, d, fused=True,
+                                             dma="run")
+            n_pages = tw.candidate_budget(n) // tw.page_size
+            rows.append({
+                "n": n, "page_top_p": p,
+                "cand_pages": n_pages,
+                "live_pages": hierarchical_page_survivors(n_pages, p),
+                "flat_estimate": flat["estimate"],
+                "hier_estimate": hier["estimate"],
+                "page_topp_bytes": hier["page_topp"],
+                "est_x": flat["estimate"] / hier["estimate"],
+                "total_x": flat["total"] / hier["total"],
+                "eff_x": flat["total_eff"] / hier["total_eff"],
+            })
+    return rows
+
+
+def print_hierarchical_table(rows: list[dict]) -> None:
+    hdr = (f"{'context':>9s} {'p_page':>7s} {'pages':>11s} "
+           f"{'flat est MB':>12s} {'hier est MB':>12s} {'est_x':>6s} "
+           f"{'total_x':>8s} {'eff_x':>6s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['n']:9d} {r['page_top_p']:7.2f} "
+              f"{r['live_pages']:5d}/{r['cand_pages']:<5d} "
+              f"{r['flat_estimate'] / 1e6:12.3f} "
+              f"{r['hier_estimate'] / 1e6:12.3f} {r['est_x']:6.2f} "
+              f"{r['total_x']:8.2f} {r['eff_x']:6.2f}")
+
+
 def main() -> None:
     import argparse
 
@@ -268,10 +325,14 @@ def main() -> None:
     ap.add_argument("--multitok", action="store_true",
                     help="also print the multi-token fused decode table "
                          "(per-token effective bytes and launches vs k)")
+    ap.add_argument("--hierarchical", action="store_true",
+                    help="also print the hierarchical page-nucleus table "
+                         "(adaptive-estimate bytes vs the flat pipeline)")
     args = ap.parse_args()
-    if args.fused or args.multitok:
+    if args.fused or args.multitok or args.hierarchical:
         outdir = os.path.dirname(args.jsonl) or "."
         os.makedirs(outdir, exist_ok=True)
+        first = True
         if args.fused:
             rows = fused_table()
             print_fused_table(rows)
@@ -279,8 +340,9 @@ def main() -> None:
             with open(out, "w") as f:
                 json.dump(rows, f, indent=1)
             print(f"\nwrote {out}")
+            first = False
         if args.multitok:
-            if args.fused:
+            if not first:
                 print()
             mrows = multitok_table()
             print_multitok_table(mrows)
@@ -288,6 +350,16 @@ def main() -> None:
             with open(mout, "w") as f:
                 json.dump(mrows, f, indent=1)
             print(f"\nwrote {mout}")
+            first = False
+        if args.hierarchical:
+            if not first:
+                print()
+            hrows = hierarchical_table()
+            print_hierarchical_table(hrows)
+            hout = os.path.join(outdir, "roofline_hier.json")
+            with open(hout, "w") as f:
+                json.dump(hrows, f, indent=1)
+            print(f"\nwrote {hout}")
         return
     path = args.jsonl
     rows = full_table(path)

@@ -150,6 +150,33 @@ def train_step_flops(cfg: ModelConfig, batch: int, seq: int) -> float:
 # Twilight attention-operator cost model (per sequence, per attention layer)
 # ---------------------------------------------------------------------------
 
+def hierarchical_page_survivors(n_pages: int, page_top_p: float, *,
+                                concentration: float = 8.0) -> int:
+    """Modeled page-nucleus survivor count under exponential mass decay.
+
+    Sorted descending, per-page attention mass is modeled as an exponential
+    profile w_s ∝ exp(-concentration · s / P); the cumulative mass of the
+    first s pages is then 1 - exp(-concentration · s / P), so the nucleus
+    reaches mass ``page_top_p`` at s = -ln(1 - p) · P / concentration.
+    ``concentration=8`` reflects the paper's observation that attention
+    mass is heavily page-concentrated at long context (p = 0.9 keeps
+    ~29 % of candidate pages — a ~3.5× estimate-stage reduction).
+    """
+    if page_top_p >= 1.0:
+        return n_pages
+    frac = -math.log(max(1.0 - page_top_p, 1e-12)) / concentration
+    return max(1, min(n_pages, int(math.ceil(frac * n_pages))))
+
+
+def _hier_live_slots(tw: TwilightConfig, m: int) -> int:
+    """Live candidate slots after the page nucleus (== m when disabled)."""
+    if tw.page_top_p is None:
+        return m
+    n_pages = max(1, m // tw.page_size)
+    live = hierarchical_page_survivors(n_pages, tw.page_top_p)
+    return min(m, live * tw.page_size)
+
+
 def twilight_stage_flops(tw: TwilightConfig, n: int, hq: int, hkv: int,
                          d: int) -> dict[str, float]:
     """Per-stage FLOPs of one decode step's attention operator.
@@ -169,7 +196,9 @@ def twilight_stage_flops(tw: TwilightConfig, n: int, hq: int, hkv: int,
     sel = 2 * 2 * (n // tw.page_size) * hq * d  # Quest-style page UB scan
     if tw.compact:
         m = min(n, b0)  # index buffer (group-wise budget)
-        est_len = m
+        # Page nucleus: the estimate only scores tokens in surviving pages
+        # (the spgemv / fused stage-1 dead-block early-out).
+        est_len = _hier_live_slots(tw, m)
         topp_len = m
         # The B1 re-compaction is weight-ranked, so it only runs when the
         # pruner produced weights; base-algorithm-only configs attend over
@@ -203,7 +232,8 @@ def twilight_stage_bytes(tw: TwilightConfig, n: int, hq: int, hkv: int,
     sel = 2 * (n // tw.page_size) * hkv * d * bytes_kv  # Quest page metadata
     if tw.compact:
         m = min(n, b0)
-        est_len = m
+        # Page nucleus: only surviving pages' INT4 rows are read.
+        est_len = _hier_live_slots(tw, m)
         topp_len = m
         # Matches _compact_pipeline: re-compaction needs pruner weights.
         attn_len = tw.pruned_capacity(m) if tw.prune_enabled else m
@@ -280,6 +310,15 @@ def twilight_pipeline_traffic(tw: TwilightConfig, n: int, hq: int, hkv: int,
     ``union_growth`` per extra position).  K/V stream once for all ``k``
     accumulators; per-position kept/slot-weight outputs scale with ``k``.
     The staged pipeline has no window path — ``k`` just repeats it.
+
+    **Hierarchical page nucleus** (``tw.page_top_p``): the candidate
+    buffer's pages first pass a page-level top-p, so the estimate stage
+    only reads the INT4 codes of *surviving* pages
+    (:func:`hierarchical_page_survivors` models the survivor count) and
+    the post-top-p budget is capped by the live slots.  The extra
+    ``page_topp`` key prices the f32 page-weight rows the selector's
+    nucleus search reads.  At ``page_top_p=None`` the key is 0.0 and every
+    legacy key is bit-identical to the flat model.
     """
     def _finish(row: dict[str, float], txns: float, launches: float,
                 kk: int) -> dict[str, float]:
@@ -293,19 +332,28 @@ def twilight_pipeline_traffic(tw: TwilightConfig, n: int, hq: int, hkv: int,
         st = twilight_stage_bytes(tw, n, hq, hkv, d, bytes_kv=bytes_kv)
         st = {kk: v * k for kk, v in st.items()}
         return _finish({**st, "interstage": 0.0, "outputs": 0.0,
+                        "page_topp": 0.0,
                         "tail": st["total"] - st["select"]}, 0.0, 1.0 * k, k)
     b0 = tw.candidate_budget(n)
     m = min(n, b0)
+    m_live = _hier_live_slots(tw, m)
+    page_topp = 0.0
+    if tw.page_top_p is not None and tw.page_top_p < 1.0:
+        # The selector's page nucleus: softmax + binary search over the
+        # per-page score rows (f32, one row per query head).  At p = 1.0
+        # the selectors statically skip the nucleus, so the term vanishes
+        # and the whole row is bit-identical to ``page_top_p=None``.
+        page_topp = float((n // tw.page_size) * hq * BYTES_F32)
     if b1 is None:
         b1 = max(tw.min_candidate, int(0.02 * n))
-    b1 = min(b1, m)
+    b1 = min(b1, m_live)
     sel = 2 * (n // tw.page_size) * hkv * d * bytes_kv
-    codes = m * hkv * (d // 2 + 8)  # packed nibbles + f32 scale/zero
+    codes = m_live * hkv * (d // 2 + 8)  # packed nibbles + f32 scale/zero
     score_row = hq * m * BYTES_F32
     out_bytes = hq * d * bytes_kv
     if fused:
         # GQA-group union over the k window positions: K/V stream once.
-        b1_k = min(m, int(math.ceil(b1 * (1.0 + union_growth * (k - 1)))))
+        b1_k = min(m_live, int(math.ceil(b1 * (1.0 + union_growth * (k - 1)))))
         est = float(codes)
         interstage = 0.0
         attend = 2 * b1_k * hkv * d * bytes_kv
@@ -339,10 +387,10 @@ def twilight_pipeline_traffic(tw: TwilightConfig, n: int, hq: int, hkv: int,
         txns = 2.0 * hkv * attn_len * k if dma is not None else 0.0
     tail = est + interstage + attend + outputs
     return _finish(
-        {"select": float(sel), "estimate": est,
+        {"select": float(sel), "page_topp": page_topp, "estimate": est,
          "interstage": float(interstage), "attend": float(attend),
          "outputs": float(outputs), "tail": float(tail),
-         "total": float(sel + tail)}, txns, launches, k)
+         "total": float(sel + page_topp + tail)}, txns, launches, k)
 
 
 def decode_flops(cfg: ModelConfig, batch: int, ctx: int) -> float:

@@ -101,11 +101,19 @@ class TwilightPruner:
         indices: jax.Array,  # (b, hkv, m) i32 candidate positions
         keys: jax.Array | None = None,  # (b, n, hkv, d) fp K
         qkeys: quant_lib.QuantizedTensor | None = None,  # INT4 shadow cache
+        valid: jax.Array | None = None,  # (b, hkv, m) live candidate slots
     ) -> jax.Array:
         """q·K̃ / sqrt(d) on the gathered candidate buffer: (b, hkv, g, m).
 
         Only m rows of the shadow cache are touched (d/2+8 bytes each) — the
         compact analogue of :meth:`estimate_scores`.
+
+        ``valid`` (optional) marks the live candidate slots.  With the
+        hierarchical page nucleus, whole nucleus-pruned pages of slots are
+        dead; the spgemv kernel then early-outs those blocks so the
+        estimate's compute scales with the surviving count, not the static
+        buffer capacity.  Dead-slot scores are *unspecified* when ``valid``
+        is passed — every consumer masks on ``valid`` before the softmax.
         """
         b, hkv, m = indices.shape
         hq = q.shape[1]
@@ -117,7 +125,7 @@ class TwilightPruner:
                                                  qkeys=qkeys)
             if self.use_spgemv:
                 from repro.kernels.spgemv.ops import estimate_scores_gathered
-                return estimate_scores_gathered(q, gathered)
+                return estimate_scores_gathered(q, gathered, valid)
             k_est = quant_lib.dequantize_int4(gathered, dtype=jnp.bfloat16)
         else:
             if keys is None:
@@ -157,7 +165,8 @@ class TwilightPruner:
         hq = q.shape[1]
         p_val = self.p if p is None else p
 
-        scores = self.estimate_scores_at(q, indices, keys, qkeys)  # (b,hkv,g,m)
+        scores = self.estimate_scores_at(q, indices, keys, qkeys,
+                                         valid=valid)  # (b,hkv,g,m)
         valid_g = jnp.broadcast_to(valid[:, :, None, :], scores.shape)
         weights = topp_lib.masked_softmax(scores, valid_g)
         res = topp_lib.topp_mask(weights, p_val, iters=self.iters)
@@ -182,6 +191,7 @@ class TwilightPruner:
         qkeys: quant_lib.QuantizedTensor | None = None,
         p: jax.Array | float | None = None,
         page_size: int = 64,
+        hierarchical: bool = False,
     ) -> tuple[jax.Array, jax.Array, PrunerStats, jax.Array]:
         """Fused prune **and** attend: one Pallas launch for the whole
         estimate → top-p → sparse-attention tail of the pipeline
@@ -196,13 +206,17 @@ class TwilightPruner:
         ``indices`` are final cache coordinates (physical pool rows for a
         paged cache); ``page_size`` sets the kernel's block-run coalescing
         granularity (must match the pool's physical page size).
+        ``hierarchical`` marks the candidate buffer as carrying an adaptive
+        page-nucleus survivor set — the kernel's estimate stage then
+        early-outs whole dead pages instead of scoring the full capacity.
         """
         from repro.kernels.fused_decode.ops import fused_prune_attend
 
         p_val = self.p if p is None else p
         out, kept, slot_weights, thresh = fused_prune_attend(
             q, indices, valid, keys, values, qkeys, p=p_val,
-            iters=self.iters, page_size=page_size)
+            iters=self.iters, page_size=page_size,
+            hierarchical=hierarchical)
         stats = PrunerStats(
             candidate_budget=valid.sum(-1).astype(jnp.int32),
             pruned_budget=kept.sum(-1).astype(jnp.int32),
@@ -222,6 +236,7 @@ class TwilightPruner:
         qkeys: quant_lib.QuantizedTensor | None = None,
         p: jax.Array | float | None = None,
         page_size: int = 64,
+        hierarchical: bool = False,
     ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
         """Multi-token fused prune + attend: ONE launch per layer decodes
         all kw window positions against one shared candidate buffer
@@ -240,7 +255,8 @@ class TwilightPruner:
         p_val = self.p if p is None else p
         return fused_prune_attend_window(
             q, indices, valid, keys, values, qkeys, p=p_val,
-            iters=self.iters, page_size=page_size)
+            iters=self.iters, page_size=page_size,
+            hierarchical=hierarchical)
 
     def prune_window_at(
         self,
@@ -268,7 +284,10 @@ class TwilightPruner:
 
         q2 = q.reshape(b, kw, hkv, group, d).transpose(0, 2, 1, 3, 4)
         q2 = q2.reshape(b, hkv * kw * group, d)
-        scores = self.estimate_scores_at(q2, indices, keys, qkeys)
+        # A slot is live for the folded estimate if any window position sees
+        # it — the window union, matching the fused kernel's DMA set.
+        scores = self.estimate_scores_at(q2, indices, keys, qkeys,
+                                         valid=valid.any(axis=1))
         scores = scores.reshape(b, hkv, kw, group, m)
         valid_g = jnp.broadcast_to(
             valid.transpose(0, 2, 1, 3)[:, :, :, None, :], scores.shape)

@@ -33,8 +33,13 @@ __all__ = [
 
 # log2 histogram buckets: run length 1, 2-3, 4-7, ..., >= 2^(B-1).
 RUN_HIST_BUCKETS = 8
-# [hist(B) | n_runs | pages_touched | kept_rows]
-RUN_STATS_LEN = RUN_HIST_BUCKETS + 3
+# [hist(B) | n_runs | pages_touched | kept_rows
+#  | live_page_hist(B) | cand_pages | cand_rows]
+# The second section is the hierarchical page-nucleus telemetry: a log2
+# histogram of *live candidate pages per (batch, head) row* plus the summed
+# live page / live slot counts — all zero when no candidate validity is
+# supplied (flat pipeline), so legacy accumulators stay comparable.
+RUN_STATS_LEN = 2 * RUN_HIST_BUCKETS + 5
 
 
 def coalesced_runs(kept, indices, page_size: int) -> list[tuple[int, int]]:
@@ -67,15 +72,23 @@ def coalesced_runs(kept, indices, page_size: int) -> list[tuple[int, int]]:
 
 
 def run_length_stats(kept: jax.Array, indices: jax.Array, page_size: int,
-                     n_pages: int) -> jax.Array:
+                     n_pages: int,
+                     cand_valid: jax.Array | None = None) -> jax.Array:
     """Aggregate run structure of a batch of kept rows, jit-safe.
 
     ``kept``/``indices`` are (..., m) — typically (b, hkv, m) from one
     attention layer's pipeline output (``pruned_valid``/``indices``).
     Returns the (RUN_STATS_LEN,) f32 vector
-    ``[hist_0..hist_{B-1}, n_runs, pages_touched, kept_rows]`` summed over
+    ``[hist_0..hist_{B-1}, n_runs, pages_touched, kept_rows,
+    live_hist_0..live_hist_{B-1}, cand_pages, cand_rows]`` summed over
     every leading dim; vectors from different layers/steps add.
     ``n_pages`` bounds ``indices // page_size`` (logical pages per slot).
+
+    ``cand_valid`` (same shape as ``kept``) marks the live *candidate*
+    slots the pruner saw — under the hierarchical page nucleus this is the
+    adaptive page-survivor set, so the second section histograms how many
+    candidate pages actually survived per row (the ``--run-stats``
+    live-pages histogram).  ``None`` leaves the section zero.
     """
     kept = kept.astype(bool)
     m = kept.shape[-1]
@@ -109,15 +122,40 @@ def run_length_stats(kept: jax.Array, indices: jax.Array, page_size: int,
     pages = jnp.clip(indices // page_size, 0, n_pages - 1)
     flat_pages = pages.reshape(-1, m)
     flat_kept = kept.reshape(-1, m)
-    touched = jnp.zeros((flat_pages.shape[0], n_pages), jnp.float32)
-    touched = touched.at[
-        jnp.arange(flat_pages.shape[0])[:, None], flat_pages].max(
-        flat_kept.astype(jnp.float32))
+
+    def _touched(flat_bits):
+        grid = jnp.zeros((flat_pages.shape[0], n_pages), jnp.float32)
+        return grid.at[
+            jnp.arange(flat_pages.shape[0])[:, None], flat_pages].max(
+            flat_bits.astype(jnp.float32))
+
+    touched = _touched(flat_kept)
+
+    if cand_valid is None:
+        live_hist = jnp.zeros((RUN_HIST_BUCKETS,), jnp.float32)
+        cand_pages = jnp.zeros((), jnp.float32)
+        cand_rows = jnp.zeros((), jnp.float32)
+    else:
+        cand_valid = cand_valid.astype(bool)
+        live = _touched(cand_valid.reshape(-1, m))  # (rows, n_pages) 0/1
+        live_per_row = live.sum(axis=-1)  # live candidate pages per row
+        live_bucket = jnp.clip(
+            jnp.floor(jnp.log2(jnp.maximum(live_per_row, 1.0))),
+            0, RUN_HIST_BUCKETS - 1).astype(jnp.int32)
+        live_hist = jnp.sum(
+            jax.nn.one_hot(live_bucket, RUN_HIST_BUCKETS, dtype=jnp.float32),
+            axis=0)
+        cand_pages = jnp.sum(live)
+        cand_rows = jnp.sum(cand_valid).astype(jnp.float32)
+
     return jnp.concatenate([
         hist,
         jnp.sum(starts).astype(jnp.float32)[None],
         jnp.sum(touched)[None],
         jnp.sum(kept).astype(jnp.float32)[None],
+        live_hist,
+        cand_pages[None],
+        cand_rows[None],
     ])
 
 
@@ -125,7 +163,9 @@ def summarize_run_stats(total: np.ndarray, steps: int) -> dict:
     """Human-readable summary of summed :func:`run_length_stats` vectors."""
     total = np.asarray(total, np.float64)
     hist = total[:RUN_HIST_BUCKETS]
-    n_runs, pages, kept = total[RUN_HIST_BUCKETS:]
+    n_runs, pages, kept = total[RUN_HIST_BUCKETS:RUN_HIST_BUCKETS + 3]
+    live_hist = total[RUN_HIST_BUCKETS + 3:2 * RUN_HIST_BUCKETS + 3]
+    cand_pages, cand_rows = total[2 * RUN_HIST_BUCKETS + 3:]
     steps = max(steps, 1)
     return {
         "steps": int(steps),
@@ -134,4 +174,8 @@ def summarize_run_stats(total: np.ndarray, steps: int) -> dict:
         "pages_per_step": pages / steps,
         "kept_per_step": kept / steps,
         "mean_run_len": kept / max(n_runs, 1.0),
+        # Hierarchical page-nucleus telemetry (all zero on flat pipelines).
+        "live_page_hist": [int(x) for x in live_hist],
+        "cand_pages_per_step": cand_pages / steps,
+        "cand_rows_per_step": cand_rows / steps,
     }

@@ -47,6 +47,8 @@ from typing import NamedTuple, Protocol
 import jax
 import jax.numpy as jnp
 
+from repro.core.topp import masked_softmax, topp_threshold
+
 __all__ = [
     "PageMeta",
     "SelectionContext",
@@ -61,6 +63,7 @@ __all__ = [
     "gather_logical_rows",
     "group_union",
     "topk_mask",
+    "page_nucleus_mask",
     "indices_from_mask",
     "indices_to_mask",
     "physical_token_indices",
@@ -197,6 +200,32 @@ def topk_mask(scores: jax.Array, k: int) -> jax.Array:
     return scores >= kth
 
 
+def page_nucleus_mask(scores: jax.Array, participate: jax.Array | None,
+                      p: float, iters: int = 24) -> jax.Array:
+    """Adaptive page-survivor mask: the *page-level* nucleus pass (§3).
+
+    Softmaxes the page scores (b, hkv, n_pages) over the participating
+    pages, binary-searches the top-p threshold (Algorithm 1, same fixed
+    trip count as the token stage), and keeps every page whose weight
+    meets it.  Non-participating pages get weight 0, so they only survive
+    when the threshold degenerates to 0 — which is exactly the two
+    intended degenerate cases:
+
+    * the cumulative mass never reaches ``p`` (fp-rounded total < p, or an
+      all-zero score row, e.g. H2O before any mass accumulates): keep
+      everything, i.e. never prune on a signal that cannot express ``p``;
+    * ``p`` is so close to 1 that no positive threshold qualifies.
+
+    Callers intersect the result with their fixed top-k page mask, so the
+    static ``B0/page_size`` slot capacity is still the upper bound and the
+    nucleus only ever *shrinks* the live count.  Monotone in ``p``: a
+    larger ``p`` lowers the threshold and keeps a superset of pages.
+    """
+    weights = masked_softmax(scores, participate)
+    thresh = topp_threshold(weights, p, iters=iters)
+    return weights >= thresh[..., None]
+
+
 def _round_up(x: int, align: int) -> int:
     return -(-x // align) * align
 
@@ -279,12 +308,24 @@ class FullSelector:
 
 @dataclasses.dataclass(frozen=True)
 class QuestSelector:
-    """Quest [9]: page-granular upper bound max(q*kmax, q*kmin) summed over d."""
+    """Quest [9]: page-granular upper bound max(q*kmax, q*kmin) summed over d.
 
+    ``page_top_p`` turns on the hierarchical page-level nucleus (§3): the
+    per-page upper bounds are softmaxed over live pages and only the top-p
+    nucleus of pages stays a candidate — intersected with the fixed top-k
+    page set, so the compact buffer capacity (``B0/page_size`` page slots)
+    is unchanged while the *live* page count adapts to how peaked the page
+    distribution is.  ``page_top_p`` of ``None`` or ``1.0`` is the flat
+    fixed-B0 selector, bit for bit: at 1.0 the nucleus keeps every candidate
+    page by definition, so the intersection is the identity and the branch
+    is skipped statically.
+    """
+
+    page_top_p: float | None = None
+    nucleus_iters: int = 24
     name: str = "quest"
 
-    @staticmethod
-    def _page_mask(q: jax.Array, ctx: SelectionContext, budget: int
+    def _page_mask(self, q: jax.Array, ctx: SelectionContext, budget: int
                    ) -> tuple[jax.Array, int]:
         """Group-budget page mask (b, hkv, n_pages) and the pages budget."""
         if ctx.page_meta is None:
@@ -311,17 +352,21 @@ class QuestSelector:
         kmin = jnp.moveaxis(kmin_b, 1, 2)[:, :, None].astype(q.dtype)
         ub = jnp.sum(jnp.maximum(qg * kmax, qg * kmin), axis=-1)  # (b,hkv,g,p)
         ub = ub.max(axis=2)  # (b, hkv, n_pages) group-max
+        page_live = None
         if ctx.length is not None:
             # Rank only pages with at least one valid token: dead pages carry
             # stale (or, pooled, null-page) metadata and would otherwise
             # waste budget — and break paged/contiguous equivalence.
             n_pages = ub.shape[-1]
-            page_live = (jnp.arange(n_pages) * pm.page_size
-                         )[None, :] < ctx.length[:, None]
-            ub = jnp.where(page_live[:, None, :], ub,
-                           jnp.finfo(ub.dtype).min)
+            page_live = ((jnp.arange(n_pages) * pm.page_size
+                          )[None, :] < ctx.length[:, None])[:, None, :]
+            ub = jnp.where(page_live, ub, jnp.finfo(ub.dtype).min)
         pages_budget = max(1, budget // pm.page_size)
-        return topk_mask(ub, pages_budget), pages_budget
+        keep = topk_mask(ub, pages_budget)
+        if self.page_top_p is not None and self.page_top_p < 1.0:
+            keep &= page_nucleus_mask(ub.astype(jnp.float32), page_live,
+                                      self.page_top_p, self.nucleus_iters)
+        return keep, pages_budget
 
     def select(self, q: jax.Array, ctx: SelectionContext, budget: int) -> jax.Array:
         pm = ctx.page_meta
@@ -432,9 +477,23 @@ class H2OSelector:
       H2O runnable over a paged pool: the pool has nowhere to keep n-length
       per-token state, but per-page mass is O(num_pages) and survives page
       remapping because it is keyed by physical page.
+
+    ``page_top_p`` adds the hierarchical page nucleus on the page-mass path
+    (same contract as :class:`QuestSelector`): the recent window is kept
+    unconditionally (it outranks any mass in the flat ranking, and a fresh
+    page's mass says nothing about the current query), and the nucleus runs
+    over the accumulated mass of the *remaining* live pages.  The softmax
+    denominator excludes dead pages — including the null page every
+    unallocated page-table entry resolves to — and fresh zero-mass pages:
+    ``exp(0) = 1`` would hand each of them a full unit of denominator and
+    crush the heavy hitters' weights, so a long idle tail would effectively
+    disable the nucleus.  The flat top-k ranking is insensitive to all of
+    this (rank order ignores the denominator); a nucleus pass is not.
     """
 
     recent_frac: float = 0.5
+    page_top_p: float | None = None
+    nucleus_iters: int = 24
     name: str = "h2o"
 
     def _page_mask(self, q: jax.Array, ctx: SelectionContext, budget: int
@@ -476,7 +535,17 @@ class H2OSelector:
         b_idx = jnp.arange(b)[:, None, None]
         h_idx = jnp.arange(hkv)[None, :, None]
         mask = mask.at[b_idx, h_idx, keep].set(True)
-        return mask & live[:, None, :], pages_budget
+        mask &= live[:, None, :]
+        if self.page_top_p is not None and self.page_top_p < 1.0:
+            # Hierarchical nucleus over accumulated mass.  Participation
+            # excludes the recent window (kept unconditionally below), dead
+            # pages (incl. the null page unallocated table entries resolve
+            # to), and fresh zero-mass pages — see the class docstring.
+            participate = (live & ~recent)[:, None, :] & (mass > 0.0)
+            nucleus = page_nucleus_mask(mass.astype(jnp.float32), participate,
+                                        self.page_top_p, self.nucleus_iters)
+            mask &= recent[:, None, :] | nucleus
+        return mask, pages_budget
 
     def _select_pages(self, q: jax.Array, ctx: SelectionContext,
                       budget: int) -> jax.Array:

@@ -68,6 +68,17 @@ class TwilightConfig:
     p: float = 0.95
     candidate_frac: float = 0.25
     candidate_budget_cap: int = 65536
+    # Hierarchical page-level nucleus (the paper's *hierarchical* top-p):
+    # when set (and < 1.0), page-granular selectors (quest/h2o) softmax
+    # their per-page scores and keep only the top-``page_top_p`` nucleus of
+    # candidate pages *before* the token-level top-p runs inside them.  The
+    # candidate buffer keeps its static ``candidate_budget`` capacity — B0
+    # becomes the *cap*, not the count — while the live candidate count
+    # adapts per step, so the estimate stage only touches surviving pages
+    # (the fused kernel early-outs whole dead pages; see
+    # ``kernels/fused_decode``).  ``None`` or ``1.0`` is the flat fixed-B0
+    # pipeline, bit for bit.  Token-granular selectors ignore it.
+    page_top_p: float | None = None
     page_size: int = 64
     estimate_bits: int = 4
     topp_iters: int = 24
@@ -131,6 +142,8 @@ class TwilightConfig:
     collect_run_stats: bool = False
 
     def candidate_budget(self, n: int) -> int:
+        """Static candidate capacity B0.  With ``page_top_p`` set this is
+        the *cap* of the compact buffer; the live count adapts below it."""
         if self.fixed_budget:
             return min(self.fixed_budget, n)
         b0 = int(n * self.candidate_frac)
@@ -138,6 +151,9 @@ class TwilightConfig:
         return min(b0, n)
 
     def make_selector(self, **kwargs) -> TokenSelector:
+        if self.page_top_p is not None and self.selector in ("quest", "h2o"):
+            kwargs.setdefault("page_top_p", self.page_top_p)
+            kwargs.setdefault("nucleus_iters", self.topp_iters)
         return selector_from_name(self.selector, **kwargs)
 
     def make_pruner(self) -> TwilightPruner:
@@ -250,7 +266,8 @@ def _compact_pipeline(
                       page_size=cfg.page_size):
             out, kept, stats, slot_weights = cfg.make_pruner().prune_attend_at(
                 q, gather_idx, valid, keys=keys, values=values, qkeys=qkeys,
-                page_size=cfg.page_size)
+                page_size=cfg.page_size,
+                hierarchical=cfg.page_top_p is not None)
             return TwilightOutput(out=out, candidate_mask=None,
                                   pruned_mask=None, stats=stats,
                                   indices=indices, candidate_valid=valid,
@@ -489,7 +506,8 @@ def twilight_decode_window_attention(
             out, kept, slot_w, thresh = (
                 cfg.make_pruner().prune_attend_window_at(
                     q, gather_idx, valid_k, keys=keys, values=values,
-                    qkeys=qkeys, page_size=cfg.page_size))
+                    qkeys=qkeys, page_size=cfg.page_size,
+                    hierarchical=cfg.page_top_p is not None))
             stats = PrunerStats(
                 candidate_budget=anchor_row(
                     valid_k.sum(-1)).astype(jnp.int32),

@@ -122,6 +122,7 @@ def _fused_decode_kernel(
     valid_ref,  # (1, kw, m) int8 — per-position live candidate slots
     rows_ref,  # (1, m) i32 — cache rows (physical for paged pools)
     p_ref,  # (1,) f32 — top-p threshold
+    palive_ref,  # (1, nb) int8 — page-survivor mask at blk granularity
     k_hbm,  # ANY: (b, n, hkv, d) contiguous or (P, hkv, d) pooled
     v_hbm,  # ANY: same layout as k_hbm
     out_ref,  # (1, kw*group, d)
@@ -141,6 +142,7 @@ def _fused_decode_kernel(
     blk: int,
     page_size: int,
     coal_min: int,
+    hier: bool,
 ):
     i = pl.program_id(0)
     bi = i // hkv
@@ -149,23 +151,55 @@ def _fused_decode_kernel(
     qe = qe_ref[0].astype(jnp.float32)  # (kg, d2)
     qo = qo_ref[0].astype(jnp.float32)
     codes = packed_ref[0]  # (m, d2) uint8
-    low = (codes & 0x0F).astype(jnp.float32)
-    high = (codes >> 4).astype(jnp.float32)
     scale = scale_ref[0].astype(jnp.float32)  # (m,)
     zero = zero_ref[0].astype(jnp.float32)
     valid_k = valid_ref[0] != 0  # (kw, m) — causal window mask pre-folded
     p = p_ref[0]
+    palive = palive_ref[0] != 0  # (nb,) — blocks with >= 1 live slot
     kg, d = qf_ref.shape[1], qf_ref.shape[2]
+    d2 = codes.shape[1]
     group = kg // kw
     m = codes.shape[0]
 
     # --- Stage 1: INT4 score estimate (spgemv math, dequant in epilogue) ---
     # One codes read serves all kw positions — the estimate is amortized
     # across the window (Tactic: survivor sets are temporally stable).
-    dot = jnp.dot(qe, low.T, preferred_element_type=jnp.float32)
-    dot += jnp.dot(qo, high.T, preferred_element_type=jnp.float32)
     qsum = jnp.sum(qe + qo, axis=-1, keepdims=True)  # (kg, 1)
-    est = (dot * scale[None, :] + qsum * zero[None, :]) * sm_scale
+    if not hier:
+        # Flat pipeline: every candidate slot is live by construction, so
+        # one (kg, d2) x (d2, m) matmul pair keeps the MXU fully fed.
+        low = (codes & 0x0F).astype(jnp.float32)
+        high = (codes >> 4).astype(jnp.float32)
+        dot = jnp.dot(qe, low.T, preferred_element_type=jnp.float32)
+        dot += jnp.dot(qo, high.T, preferred_element_type=jnp.float32)
+        est = (dot * scale[None, :] + qsum * zero[None, :]) * sm_scale
+    else:
+        # Hierarchical page nucleus: the candidate staging loop walks the
+        # same blk-aligned blocks stage 4 streams and **early-outs whole
+        # dead pages** behind a cond — nucleus-pruned pages skip the nibble
+        # unpack, both matmuls, and the epilogue, so estimate compute
+        # scales with the *surviving* page count.  Dead blocks score 0;
+        # their slots are invalid, so stage 2 masks them to -inf anyway.
+        def est_block(j, acc):
+            def live_blk(_):
+                cb = jax.lax.dynamic_slice(codes, (j * blk, 0), (blk, d2))
+                low_b = (cb & 0x0F).astype(jnp.float32)
+                high_b = (cb >> 4).astype(jnp.float32)
+                sc = jax.lax.dynamic_slice(scale, (j * blk,), (blk,))
+                zr = jax.lax.dynamic_slice(zero, (j * blk,), (blk,))
+                dotb = jnp.dot(qe, low_b.T,
+                               preferred_element_type=jnp.float32)
+                dotb += jnp.dot(qo, high_b.T,
+                                preferred_element_type=jnp.float32)
+                return (dotb * sc[None, :] + qsum * zr[None, :]) * sm_scale
+
+            estb = jax.lax.cond(
+                palive[j], live_blk,
+                lambda _: jnp.zeros((kg, blk), jnp.float32), None)
+            return jax.lax.dynamic_update_slice(acc, estb, (0, j * blk))
+
+        est = jax.lax.fori_loop(0, m // blk, est_block,
+                                jnp.zeros((kg, m), jnp.float32))
 
     # Query row r = j * group + g sees position j's candidate validity.
     valid_q = jnp.broadcast_to(
@@ -210,7 +244,10 @@ def _fused_decode_kernel(
     nb = m // blk
     rows2 = rows.reshape(nb, blk)
     kept2 = kept.reshape(nb, blk)
-    blk_any = kept2.any(axis=1)  # (nb,)
+    # Page-survivor AND: a nucleus-dead page has no valid slot, so kept2 is
+    # already all-False there — the AND is semantically a no-op but makes
+    # the structural contract explicit: dead pages never issue DMA.
+    blk_any = kept2.any(axis=1) & palive  # (nb,)
     blk_cnt = kept2.sum(axis=1)  # (nb,)
     base = rows2[:, 0]
     span = jax.lax.broadcasted_iota(jnp.int32, (nb, blk), 1)
@@ -312,7 +349,7 @@ def _fused_decode_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("sm_scale", "iters", "hkv", "pooled", "page_size",
-                     "interpret"),
+                     "hierarchical", "interpret"),
 )
 def fused_decode_rows(
     qf: jax.Array,  # (B, kw*group, d) — B = batch * kv_heads
@@ -332,23 +369,35 @@ def fused_decode_rows(
     hkv: int,
     pooled: bool,
     page_size: int = 64,
+    hierarchical: bool = False,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """One launch per call: (out (B, kw*group, d), kept (B, kw, m) int8,
-    slot_weights (B, kw, m) f32, threshold (B, kw*group) f32)."""
+    slot_weights (B, kw, m) f32, threshold (B, kw*group) f32).
+
+    ``hierarchical`` switches stage 1 to the blocked page-survivor walk:
+    the (B, nb) page-alive mask is derived from ``valid`` (window union at
+    blk granularity) and whole dead pages skip estimate compute and DMA.
+    """
     interpret = resolve_interpret(interpret)
     B, kg, d = qf.shape
     kw = valid.shape[1]
     m = packed.shape[1]
     d2 = packed.shape[2]
     blk = coalesce_block(m, page_size)
+    nb = m // blk
     coal_min = coalesce_min_rows(blk, d, keys.dtype.itemsize)
     valid = valid.astype(jnp.int8)
+    # Window union at block granularity — equals the selector's page
+    # survivor set (nucleus-dead pages carry valid=False in every slot).
+    palive = ((valid != 0).any(axis=1)
+              .reshape(B, nb, blk).any(axis=-1).astype(jnp.int8))
     p_arr = jnp.broadcast_to(jnp.asarray(p, jnp.float32), (1,))
     return pl.pallas_call(
         functools.partial(_fused_decode_kernel, sm_scale=sm_scale,
                           iters=iters, hkv=hkv, pooled=pooled, kw=kw,
-                          blk=blk, page_size=page_size, coal_min=coal_min),
+                          blk=blk, page_size=page_size, coal_min=coal_min,
+                          hier=hierarchical),
         grid=(B,),
         in_specs=[
             pl.BlockSpec((1, kg, d), lambda i: (i, 0, 0)),
@@ -360,6 +409,7 @@ def fused_decode_rows(
             pl.BlockSpec((1, kw, m), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, m), lambda i: (i, 0)),
             pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1, nb), lambda i: (i, 0)),
             pl.BlockSpec(memory_space=pltpu.ANY),  # K cache/pool, HBM
             pl.BlockSpec(memory_space=pltpu.ANY),  # V cache/pool, HBM
         ],
@@ -382,5 +432,5 @@ def fused_decode_rows(
             pltpu.SemaphoreType.DMA((2,)),
         ],
         interpret=interpret,
-    )(qf, q_even, q_odd, packed, scale, zero, valid, rows, p_arr,
+    )(qf, q_even, q_odd, packed, scale, zero, valid, rows, p_arr, palive,
       keys, values)

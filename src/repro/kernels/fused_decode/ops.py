@@ -45,7 +45,9 @@ def fused_vmem_bytes(m: int, d: int, group: int, kv_bytes: int = 2, *,
     scale/zero + i32 rows); per-position valid/kept bitmaps and the f32
     group-max weight rows (×k); ~3 live (k·group, m) f32 score/weight
     rows; the whole + nibble-split queries; the k-token online-softmax
-    accumulator (m/l/acc per query row); and the double-buffered K and V
+    accumulator (m/l/acc per query row); the int8 page-survivor mask
+    (m / blk blocks — carried unconditionally so the budget is one
+    number for both stage-1 modes); and the double-buffered K and V
     block staging scratch (2 buffers × 2 streams × blk rows).
     """
     blk = coalesce_block(m, page_size)
@@ -55,8 +57,10 @@ def fused_vmem_bytes(m: int, d: int, group: int, kv_bytes: int = 2, *,
     score_rows = 3 * kg * m * 4
     queries = 3 * kg * d * 4
     accum = kg * (d + 2) * 4
+    page_mask = m // blk
     staging = 2 * 2 * blk * d * kv_bytes
-    return codes + per_pos + score_rows + queries + accum + staging
+    return codes + per_pos + score_rows + queries + accum + page_mask \
+        + staging
 
 
 def fused_fits(m: int, d: int, group: int, kv_bytes: int = 2, *,
@@ -85,6 +89,7 @@ def fused_prune_attend_window(
     iters: int = 24,
     sm_scale: float | None = None,
     page_size: int = 64,
+    hierarchical: bool = False,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Single-launch multi-token prune + attend.
@@ -93,6 +98,11 @@ def fused_prune_attend_window(
     upstream); per-position causal masking arrives through ``valid``.
     The kernel streams the *window union* of per-position survivor sets
     from HBM once and runs kw online-softmax accumulations against it.
+
+    ``hierarchical=True`` tells the kernel the candidate buffer carries an
+    adaptive page-nucleus survivor set (whole pages of slots may be dead):
+    stage 1 walks blk-aligned blocks and early-outs dead pages instead of
+    running one flat matmul, so estimate compute tracks the live count.
 
     Returns ``(out (b, kw, hq, d), kept (b, kw, hkv, m) bool,
     slot_weights (b, kw, hkv, m) f32, threshold (b, kw, hq) f32)``.
@@ -126,7 +136,8 @@ def fused_prune_attend_window(
         jnp.asarray(p, jnp.float32),
         keys, values,
         sm_scale=float(sm_scale), iters=iters, hkv=hkv,
-        pooled=keys.ndim == 3, page_size=page_size, interpret=interpret,
+        pooled=keys.ndim == 3, page_size=page_size,
+        hierarchical=hierarchical, interpret=interpret,
     )
     out = out.reshape(b, hkv, kw, group, d).transpose(0, 2, 1, 3, 4)
     thresh = thresh.reshape(b, hkv, kw, group).transpose(0, 2, 1, 3)
@@ -148,6 +159,7 @@ def fused_prune_attend(
     iters: int = 24,
     sm_scale: float | None = None,
     page_size: int = 64,
+    hierarchical: bool = False,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Single-launch prune + attend (the kw = 1 window special case).
@@ -159,5 +171,5 @@ def fused_prune_attend(
     out, kept, slot_w, thresh = fused_prune_attend_window(
         q[:, None], indices, valid[:, None], keys, values, qkeys,
         p=p, iters=iters, sm_scale=sm_scale, page_size=page_size,
-        interpret=interpret)
+        hierarchical=hierarchical, interpret=interpret)
     return out[:, 0], kept[:, 0], slot_w[:, 0], thresh[:, 0]

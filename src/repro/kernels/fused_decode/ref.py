@@ -14,6 +14,21 @@ import jax.numpy as jnp
 from repro.core import topp as topp_lib
 from repro.core.attention import compact_decode_attention, gather_kv_heads
 from repro.core.quant import QuantizedTensor
+from repro.kernels.fused_decode.kernel import coalesce_block
+
+
+def page_survivor_blocks(valid: jax.Array, m: int,
+                         page_size: int) -> jax.Array:
+    """Block-granularity page-survivor mask, (..., m // blk) bool.
+
+    The shared derivation the fused kernel's hierarchical stage 1 uses:
+    a block is alive iff any of its ``blk = coalesce_block(m, page_size)``
+    candidate slots is valid.  Because the selectors mark every slot of a
+    nucleus-pruned page invalid, this equals the page-nucleus survivor set
+    at block granularity.
+    """
+    blk = coalesce_block(m, page_size)
+    return valid.reshape(*valid.shape[:-1], m // blk, blk).any(axis=-1)
 
 
 def fused_prune_attend_ref(
@@ -26,6 +41,7 @@ def fused_prune_attend_ref(
     *,
     p: jax.Array | float,
     iters: int = 24,
+    page_size: int | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     b, hq, d = q.shape
     hkv, m = indices.shape[1], indices.shape[2]
@@ -44,6 +60,17 @@ def fused_prune_attend_ref(
     dot += jnp.einsum("bhgc,bhmc->bhgm", qo, high)
     qsum = jnp.sum(qg, axis=-1)[..., None]  # (b, hkv, g, 1)
     est = (dot * scale[:, :, None, :] + qsum * zero[:, :, None, :]) * sm_scale
+
+    if page_size is not None:
+        # Hierarchical contract pin: dead-block estimates are zero (the
+        # kernel's stage-1 early-out never computes them).  A no-op for
+        # the outputs — every dead-block slot is invalid, so the masked
+        # softmax drops it either way — but it keeps the oracle
+        # bit-for-bit comparable to the kernel's raw estimate stage.
+        palive = page_survivor_blocks(valid, m, page_size)  # (b, hkv, nb)
+        blk = m // palive.shape[-1]
+        slot_live = jnp.repeat(palive, blk, axis=-1)  # (b, hkv, m)
+        est = jnp.where(slot_live[:, :, None, :], est, 0.0)
 
     valid_g = jnp.broadcast_to(valid[:, :, None, :], est.shape)
     w = topp_lib.masked_softmax(est, valid_g)
@@ -66,6 +93,7 @@ def fused_prune_attend_window_ref(
     *,
     p: jax.Array | float,
     iters: int = 24,
+    page_size: int | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Window oracle: kw independent single-token prune-attends that share
     one candidate buffer — exactly the semantic contract of the multi-token
@@ -74,7 +102,7 @@ def fused_prune_attend_window_ref(
     for j in range(q.shape[1]):
         o, k, w, t = fused_prune_attend_ref(
             q[:, j], indices, valid[:, j], keys, values, qkeys,
-            p=p, iters=iters)
+            p=p, iters=iters, page_size=page_size)
         outs.append(o)
         kepts.append(k)
         ws.append(w)

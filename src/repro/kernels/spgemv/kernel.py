@@ -16,6 +16,14 @@ paper's ≤1/4 data-access claim.
 
 Grid: (B, n // block_n) where B = batch * kv_heads; each grid step stages a
 (block_n, d/2) uint8 tile of the packed cache into VMEM.
+
+Hierarchical page nucleus (``TwilightConfig.page_top_p``): the optional
+per-block ``live`` operand marks blocks with at least one live candidate
+slot.  A dead block — a whole block of nucleus-pruned pages — skips both
+matmuls and the epilogue behind ``pl.when`` and writes zeros, so the
+estimate's compute scales with the *surviving* candidate count, not the
+static buffer capacity.  Dead-slot scores are unspecified by contract
+(consumers mask on ``valid`` before the softmax), so zeros are safe.
 """
 
 from __future__ import annotations
@@ -29,21 +37,27 @@ from jax.experimental import pallas as pl
 from repro.kernels.common import resolve_interpret
 
 
-def _spgemv_kernel(qe_ref, qo_ref, packed_ref, scale_ref, zero_ref, out_ref,
-                   *, sm_scale: float):
-    qe = qe_ref[0].astype(jnp.float32)  # (group, d2)
-    qo = qo_ref[0].astype(jnp.float32)
-    codes = packed_ref[0]  # (block_n, d2) uint8
-    low = (codes & 0x0F).astype(jnp.float32)
-    high = (codes >> 4).astype(jnp.float32)
-    scale = scale_ref[0].astype(jnp.float32)  # (block_n,)
-    zero = zero_ref[0].astype(jnp.float32)
-    # MXU: (group, d2) x (d2, block_n)
-    dot = jnp.dot(qe, low.T, preferred_element_type=jnp.float32)
-    dot += jnp.dot(qo, high.T, preferred_element_type=jnp.float32)
-    qsum = jnp.sum(qe + qo, axis=-1, keepdims=True)  # (group, 1)
-    scores = dot * scale[None, :] + qsum * zero[None, :]
-    out_ref[0] = scores * sm_scale
+def _spgemv_kernel(qe_ref, qo_ref, packed_ref, scale_ref, zero_ref, live_ref,
+                   out_ref, *, sm_scale: float):
+    @pl.when(live_ref[0, 0] != 0)
+    def _compute():
+        qe = qe_ref[0].astype(jnp.float32)  # (group, d2)
+        qo = qo_ref[0].astype(jnp.float32)
+        codes = packed_ref[0]  # (block_n, d2) uint8
+        low = (codes & 0x0F).astype(jnp.float32)
+        high = (codes >> 4).astype(jnp.float32)
+        scale = scale_ref[0].astype(jnp.float32)  # (block_n,)
+        zero = zero_ref[0].astype(jnp.float32)
+        # MXU: (group, d2) x (d2, block_n)
+        dot = jnp.dot(qe, low.T, preferred_element_type=jnp.float32)
+        dot += jnp.dot(qo, high.T, preferred_element_type=jnp.float32)
+        qsum = jnp.sum(qe + qo, axis=-1, keepdims=True)  # (group, 1)
+        scores = dot * scale[None, :] + qsum * zero[None, :]
+        out_ref[0] = scores * sm_scale
+
+    @pl.when(live_ref[0, 0] == 0)
+    def _dead():
+        out_ref[0] = jnp.zeros_like(out_ref[0])
 
 
 @functools.partial(
@@ -55,19 +69,30 @@ def spgemv_scores(
     packed: jax.Array,  # (B, n, d//2) uint8 — INT4 K codes
     scale: jax.Array,  # (B, n) f32
     zero: jax.Array,  # (B, n) f32
+    valid: jax.Array | None = None,  # (B, n) bool — live candidate slots
     *,
     sm_scale: float,
     block_n: int = 512,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Estimated attention scores (B, group, n) in f32."""
+    """Estimated attention scores (B, group, n) in f32.
+
+    ``valid`` enables the dead-block early-out: blocks of ``block_n`` slots
+    with no live candidate write zeros without touching the MXU.  ``None``
+    scores every slot (the flat pipeline).
+    """
     interpret = resolve_interpret(interpret)
     B, group, d2 = q_even.shape
     n = packed.shape[1]
     block_n = min(block_n, n)
     while n % block_n:
         block_n -= 1
-    grid = (B, n // block_n)
+    nb = n // block_n
+    if valid is None:
+        live = jnp.ones((B, nb), jnp.int32)
+    else:
+        live = valid.reshape(B, nb, block_n).any(axis=-1).astype(jnp.int32)
+    grid = (B, nb)
     return pl.pallas_call(
         functools.partial(_spgemv_kernel, sm_scale=sm_scale),
         grid=grid,
@@ -77,8 +102,9 @@ def spgemv_scores(
             pl.BlockSpec((1, block_n, d2), lambda i, j: (i, j, 0)),
             pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
             pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
         ],
         out_specs=pl.BlockSpec((1, group, block_n), lambda i, j: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((B, group, n), jnp.float32),
         interpret=interpret,
-    )(q_even, q_odd, packed, scale, zero)
+    )(q_even, q_odd, packed, scale, zero, live)

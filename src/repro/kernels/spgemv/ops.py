@@ -46,6 +46,7 @@ def estimate_scores(
 def estimate_scores_gathered(
     q: jax.Array,  # (b, hq, d)
     qkeys: QuantizedTensor,  # gathered candidate rows: packed (b, hkv, m, d//2)
+    valid: jax.Array | None = None,  # (b, hkv, m) bool — live candidate slots
     *,
     sm_scale: float | None = None,
     block_n: int = 512,
@@ -57,6 +58,11 @@ def estimate_scores_gathered(
     bytes each) are touched, and the dequantization runs in the kernel
     epilogue.  Returns (b, hkv, group, m) f32, matching the layout of
     ``TwilightPruner.estimate_scores_at``.
+
+    ``valid`` turns on the kernel's dead-block early-out (the hierarchical
+    page nucleus leaves whole pages of slots invalid): blocks with no live
+    slot skip their matmuls and return zeros.  Dead-slot scores are
+    unspecified either way — consumers mask on ``valid`` before softmax.
     """
     b, hkv, m, d2 = qkeys.packed.shape
     hq, d = q.shape[1], q.shape[2]
@@ -70,6 +76,7 @@ def estimate_scores_gathered(
         qkeys.packed.reshape(b * hkv, m, d2),
         qkeys.scale[..., 0].reshape(b * hkv, m),
         qkeys.zero[..., 0].reshape(b * hkv, m),
+        None if valid is None else valid.reshape(b * hkv, m),
         sm_scale=float(sm_scale), block_n=block_n, interpret=interpret,
     )  # (b*hkv, group, m)
     return scores.reshape(b, hkv, group, m)

@@ -17,8 +17,12 @@ overrides the Twilight selector — ``h2o`` now runs paged, backed by the
 pool's per-physical-page accumulated attention mass.  ``--fused``
 overrides ``TwilightConfig.fused_backend`` — ``fused`` runs the whole
 estimate/top-p/attend tail as one Pallas launch per layer per decode
-step.  ``--run-stats`` collects survivor-run telemetry (contiguous-run
-histogram, pages touched per step) and prints the session summary;
+step.  ``--page-top-p P`` turns on the hierarchical page→token nucleus: the
+selector keeps the smallest set of candidate pages reaching page-score
+mass P before the token-level top-p prunes inside them.
+``--run-stats`` collects survivor-run telemetry (contiguous-run
+histogram, pages touched per step, and — under ``--page-top-p`` — the
+live-candidate-pages histogram) and prints the session summary;
 ``--decode-window K`` lets the paged engine decode up to K queued
 tokens per slot in one fused launch (speeds preemption replay).
 ``--compare`` runs
@@ -121,6 +125,12 @@ def _run(cfg, args, reqs, *, paged: bool, prefix_share: bool = False,
                   f"{rs['steps']} steps")
             print(f"[serve] run-length histogram (log2 buckets 1,2-3,4-7,"
                   f"...): {rs['run_hist']}")
+            if rs["cand_rows_per_step"] > 0:
+                print(f"[serve] page nucleus: "
+                      f"{rs['cand_pages_per_step']:.1f} live candidate "
+                      f"pages/step, {rs['cand_rows_per_step']:.1f} live "
+                      f"slots/step; live-pages histogram (log2): "
+                      f"{rs['live_page_hist']}")
     return total_tokens / wall
 
 
@@ -162,8 +172,14 @@ def main() -> None:
                          "(with --prefix-share: share-on vs share-off)")
     ap.add_argument("--run-stats", action="store_true",
                     help="collect survivor-run telemetry per decode step "
-                         "(contiguous-run histogram, pages touched) and "
-                         "print the session summary (paged only)")
+                         "(contiguous-run histogram, pages touched, live "
+                         "candidate pages) and print the session summary "
+                         "(paged only)")
+    ap.add_argument("--page-top-p", type=float, default=None,
+                    help="hierarchical page nucleus: keep the smallest set "
+                         "of candidate pages whose softmaxed page scores "
+                         "reach this mass before the token-level top-p "
+                         "(1.0 = keep all, identical to the flat pipeline)")
     ap.add_argument("--decode-window", type=int, default=1,
                     help="decode up to K queued tokens per slot per fused "
                          "launch (paged, attention-only stacks; >1 "
@@ -172,7 +188,8 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.selector or args.fused or args.run_stats:
+    if (args.selector or args.fused or args.run_stats
+            or args.page_top_p is not None):
         import dataclasses
         tw = cfg.twilight
         if args.selector:
@@ -181,6 +198,8 @@ def main() -> None:
             tw = dataclasses.replace(tw, fused_backend=args.fused)
         if args.run_stats:
             tw = dataclasses.replace(tw, collect_run_stats=True)
+        if args.page_top_p is not None:
+            tw = dataclasses.replace(tw, page_top_p=args.page_top_p)
         cfg = cfg.replace(twilight=tw)
     rng = np.random.default_rng(args.seed)
     reqs = _build_requests(cfg, args, rng)

@@ -421,8 +421,11 @@ def _run_stats_vec(tw, tw_out, page_table: jax.Array) -> jax.Array:
     kept = tw_out.pruned_valid
     if kept.ndim == 4:
         kept = kept.any(axis=1)
+    cand = tw_out.candidate_valid
+    if cand is not None and cand.ndim == 4:
+        cand = cand.any(axis=1)  # window union — the staged candidate set
     return runs_lib.run_length_stats(kept, tw_out.indices, tw.page_size,
-                                     page_table.shape[1])
+                                     page_table.shape[1], cand_valid=cand)
 
 
 def _attn_decode(bp: Params, cfg: ModelConfig, x: jax.Array, cache: Params,

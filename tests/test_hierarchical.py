@@ -1,0 +1,362 @@
+"""Hierarchical page→token top-p: the adaptive page nucleus.
+
+Contracts pinned here, mirroring how the feature is layered:
+
+* selector — ``page_top_p=1.0`` is *bit-for-bit* the fixed-B0 selector
+  (the nucleus branch is statically skipped, so the reduction is by
+  construction); survivor sets grow monotonically in ``page_top_p``; the
+  H2O nucleus never prunes the recent window and excludes zero-mass pages
+  from the softmax denominator.
+* pipeline — hierarchical fused output is allclose-exact vs the staged
+  oracle for quest and h2o at ragged lengths, contiguous and paged.
+* kernel — the fused stage-1 page early-out matches the pure-jnp
+  reference on the degenerate survivor patterns (all pages dead, all
+  live, a single live page).
+* cost model — legacy keys bit-identical when the nucleus is off; the
+  modeled estimate-stage reduction meets the ≥3× acceptance bar at 64k
+  context and ``page_top_p=0.9``; survivor counts are monotone in p.
+* telemetry — the run-stats vector's live-pages section is exact
+  arithmetic and zero when no candidate validity is supplied.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SelectionContext,
+    build_page_meta,
+    quantize_int4,
+    twilight_decode_attention,
+)
+from repro.core import runs as runs_lib
+from repro.core.selectors import H2OSelector
+from repro.kernels.fused_decode.ops import fused_prune_attend
+from repro.kernels.fused_decode.ref import (
+    fused_prune_attend_ref,
+    page_survivor_blocks,
+)
+from tests.test_fused_decode import _cfg, _ctx, _setup
+from tests.test_paged_cache import _paged_fixture
+
+HIER_SELECTORS = ("quest", "h2o")
+
+
+def _hcfg(selector, fused="staged", page_top_p=None, **kw):
+    return dataclasses.replace(_cfg(selector, fused, **kw),
+                               page_top_p=page_top_p)
+
+
+def _h2o_page_ctx(ctx):
+    """Swap token-level ``accum_scores`` for page-granular mass.
+
+    Token-level ``accum_scores`` takes precedence in the context and routes
+    H2O down the paper-formulation path, which has no page nucleus; the
+    nucleus lives on the serving-formulation page-mass path.  Derive the
+    page mass from the same scores so the fixture's data still drives the
+    ranking.
+    """
+    acc = ctx.accum_scores  # (b, hkv, n)
+    ps = ctx.page_meta.page_size
+    b, hkv, n = acc.shape
+    mass = acc.reshape(b, hkv, n // ps, ps).sum(-1)  # (b, hkv, n_pages)
+    if ctx.page_table is not None:
+        # Pool mass is keyed by *physical* page: scatter through the table.
+        pt = np.asarray(ctx.page_table)
+        num_pages = ctx.page_meta.kmax.shape[0]
+        pool = np.zeros((num_pages, hkv), np.float32)
+        m = np.asarray(jnp.moveaxis(mass, 1, 2))  # (b, n_pages, hkv)
+        for bb in range(pt.shape[0]):
+            for p in range(pt.shape[1]):
+                pool[pt[bb, p]] = m[bb, p]
+        page_mass = jnp.asarray(pool)
+    else:
+        page_mass = jnp.moveaxis(mass, 1, 2)  # (b, n_pages, hkv)
+    return ctx._replace(accum_scores=None, page_mass=page_mass)
+
+
+def _hier_ctx(selector, ctx):
+    return _h2o_page_ctx(ctx) if selector == "h2o" else ctx
+
+
+# ---------------------------------------------------------------------------
+# Selector level: p = 1.0 reduction and monotonicity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("selector", HIER_SELECTORS)
+@pytest.mark.parametrize("ragged", [False, True])
+def test_page_top_p_one_is_fixed_b0(rng, selector, ragged):
+    """page_top_p=1.0 must be *bit-for-bit* the flat selector: the nucleus
+    branch is statically skipped, so masks, indices, and weights agree
+    exactly — not just allclose."""
+    q, K, V = _setup(rng)
+    length = jnp.asarray([512, 300]) if ragged else None
+    ctx = _hier_ctx(selector, _ctx(rng, K, length=length))
+    flat = twilight_decode_attention(
+        q, K, V, _hcfg(selector, "staged", None), ctx=ctx, length=length)
+    one = twilight_decode_attention(
+        q, K, V, _hcfg(selector, "staged", 1.0), ctx=ctx, length=length)
+    np.testing.assert_array_equal(np.asarray(flat.indices),
+                                  np.asarray(one.indices))
+    np.testing.assert_array_equal(np.asarray(flat.candidate_valid),
+                                  np.asarray(one.candidate_valid))
+    np.testing.assert_array_equal(np.asarray(flat.pruned_valid),
+                                  np.asarray(one.pruned_valid))
+    np.testing.assert_array_equal(np.asarray(flat.out), np.asarray(one.out))
+
+
+@pytest.mark.parametrize("selector", HIER_SELECTORS)
+def test_page_top_p_one_is_fixed_b0_paged(rng, selector):
+    fx = _paged_fixture(rng)
+    length = jnp.asarray([256, 180])
+    kw = dict(candidate_frac=0.5, min_candidate=64)
+    ctx = _hier_ctx(selector, fx["ctx_paged"](length))
+    flat = twilight_decode_attention(
+        fx["q"], fx["k_pool"], fx["v_pool"],
+        _hcfg(selector, "staged", None, **kw),
+        ctx=ctx, qkeys=fx["qkeys_pool"], length=length)
+    one = twilight_decode_attention(
+        fx["q"], fx["k_pool"], fx["v_pool"],
+        _hcfg(selector, "staged", 1.0, **kw),
+        ctx=ctx, qkeys=fx["qkeys_pool"], length=length)
+    np.testing.assert_array_equal(np.asarray(flat.indices),
+                                  np.asarray(one.indices))
+    np.testing.assert_array_equal(np.asarray(flat.candidate_valid),
+                                  np.asarray(one.candidate_valid))
+    np.testing.assert_array_equal(np.asarray(flat.out), np.asarray(one.out))
+
+
+@pytest.mark.parametrize("selector", HIER_SELECTORS)
+def test_survivors_monotone_in_page_top_p(rng, selector):
+    """A larger nucleus mass can only ADD pages: the candidate survivor
+    count is non-decreasing in page_top_p (up to the fixed-B0 cap at 1.0)."""
+    q, K, V = _setup(rng)
+    length = jnp.asarray([512, 300])
+    ctx = _hier_ctx(selector, _ctx(rng, K, length=length))
+    prev = None
+    for p in (0.5, 0.8, 0.95, 1.0):
+        out = twilight_decode_attention(
+            q, K, V, _hcfg(selector, "staged", p), ctx=ctx, length=length)
+        count = np.asarray(out.candidate_valid).sum()
+        if prev is not None:
+            assert count >= prev, f"survivors shrank at p={p}"
+        prev = count
+
+
+def test_h2o_nucleus_keeps_recent_and_heavy(rng):
+    """The H2O page nucleus (a) never prunes the recent window, and (b)
+    with mass concentrated on a few pages prunes the zero-mass rest —
+    which requires the zero-mass pages to be excluded from the softmax
+    denominator (exp(0)=1 terms from a dozen empty pages would flatten
+    the heavy pages' weights toward zero and keep everything)."""
+    b, n, hkv, d, page = 1, 256, 1, 64, 16
+    n_pages = n // page
+    K = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    # All mass on pages 2 and 5; every other page exactly zero.
+    mass = np.zeros((b, n_pages, hkv), np.float32)
+    mass[:, 2] = 4.0
+    mass[:, 5] = 2.0
+    sel = H2OSelector(recent_frac=0.25, page_top_p=0.9)
+    ctx = SelectionContext(keys=K, page_meta=build_page_meta(K, page),
+                           accum_scores=None, length=jnp.asarray([n]),
+                           ds_channels=None, page_mass=jnp.asarray(mass))
+    mask = np.asarray(sel.select(
+        jnp.zeros((b, hkv * 8, d), jnp.float32), ctx, budget=192))
+    pages = mask.reshape(b, hkv, n_pages, page).any(-1)[0, 0]
+    assert pages[2] and pages[5], "heavy-hitter pages must survive"
+    # budget 192 -> 12 pages, recent_frac 0.25 -> the 3 newest pages.
+    assert pages[n_pages - 3:].all(), "recent window must survive"
+    # The nucleus must actually prune: zero-mass, non-recent pages die.
+    dead = [i for i in range(n_pages - 3) if i not in (2, 5)]
+    assert not pages[dead].any()
+
+
+# ---------------------------------------------------------------------------
+# Pipeline level: hierarchical fused vs staged oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("selector", HIER_SELECTORS)
+@pytest.mark.parametrize("ragged", [False, True])
+def test_hier_fused_matches_staged(rng, selector, ragged):
+    from tests.test_fused_decode import _assert_fused_matches_staged
+    q, K, V = _setup(rng)
+    length = jnp.asarray([512, 300]) if ragged else None
+    ctx = _hier_ctx(selector, _ctx(rng, K, length=length))
+    staged = twilight_decode_attention(
+        q, K, V, _hcfg(selector, "staged", 0.85), ctx=ctx, length=length)
+    fused = twilight_decode_attention(
+        q, K, V, _hcfg(selector, "fused", 0.85), ctx=ctx, length=length)
+    _assert_fused_matches_staged(fused, staged)
+
+
+@pytest.mark.parametrize("selector", HIER_SELECTORS)
+def test_hier_fused_matches_staged_paged(rng, selector):
+    from tests.test_fused_decode import _assert_fused_matches_staged
+    fx = _paged_fixture(rng)
+    length = jnp.asarray([256, 180])
+    kw = dict(candidate_frac=0.5, min_candidate=64)
+    ctx = _hier_ctx(selector, fx["ctx_paged"](length))
+    staged = twilight_decode_attention(
+        fx["q"], fx["k_pool"], fx["v_pool"],
+        _hcfg(selector, "staged", 0.85, **kw),
+        ctx=ctx, qkeys=fx["qkeys_pool"], length=length)
+    fused = twilight_decode_attention(
+        fx["q"], fx["k_pool"], fx["v_pool"],
+        _hcfg(selector, "fused", 0.85, **kw),
+        ctx=ctx, qkeys=fx["qkeys_pool"], length=length)
+    _assert_fused_matches_staged(fused, staged)
+
+
+# ---------------------------------------------------------------------------
+# Kernel level: page early-out vs the reference on degenerate patterns
+# ---------------------------------------------------------------------------
+
+def _op_setup(rng, b=2, hq=8, hkv=2, n=256, m=128, d=64):
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    idx = jnp.broadcast_to(jnp.arange(m), (b, hkv, m)).astype(jnp.int32)
+    return q, K, V, idx
+
+
+@pytest.mark.parametrize("pattern", ["all_dead", "all_live", "single_page"])
+def test_hier_kernel_matches_ref_patterns(rng, pattern):
+    """Stage-1 page early-out vs the reference, on the survivor patterns
+    where the cond either never or always takes the live branch."""
+    page = 16
+    q, K, V, idx = _op_setup(rng)
+    b, hkv, m = idx.shape
+    valid = np.zeros((b, hkv, m), bool)
+    if pattern == "all_live":
+        valid[:] = True
+    elif pattern == "single_page":
+        valid[:, :, 3 * page:4 * page] = True
+    valid = jnp.asarray(valid)
+    qkeys = quantize_int4(K)
+    got = fused_prune_attend(q, idx, valid, K, V, qkeys, p=0.9,
+                             page_size=page, hierarchical=True)
+    want = fused_prune_attend_ref(q, idx, valid, K, V, qkeys, p=0.9,
+                                  page_size=page)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_allclose(np.asarray(got[2]), np.asarray(want[2]),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-4, atol=1e-4)
+    if pattern == "all_dead":
+        # Fully dead buffer: exact zeros everywhere, no DMA issued.
+        np.testing.assert_array_equal(np.asarray(got[0]), 0.0)
+        np.testing.assert_array_equal(np.asarray(got[2]), 0.0)
+
+
+def test_hier_kernel_flat_equivalence(rng):
+    """hierarchical=True with an arbitrary (page-aligned) survivor set is
+    numerically identical to the flat stage 1 — the blocked cond loop is a
+    pure compute-elision, never a semantics change."""
+    page = 16
+    q, K, V, idx = _op_setup(rng)
+    b, hkv, m = idx.shape
+    valid = np.ones((b, hkv, m), bool)
+    valid[:, :, 1 * page:3 * page] = False
+    valid[:, 1:, 5 * page:6 * page] = False
+    valid = jnp.asarray(valid)
+    qkeys = quantize_int4(K)
+    flat = fused_prune_attend(q, idx, valid, K, V, qkeys, p=0.9,
+                              page_size=page, hierarchical=False)
+    hier = fused_prune_attend(q, idx, valid, K, V, qkeys, p=0.9,
+                              page_size=page, hierarchical=True)
+    np.testing.assert_array_equal(np.asarray(flat[1]), np.asarray(hier[1]))
+    np.testing.assert_allclose(np.asarray(flat[0]), np.asarray(hier[0]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(flat[2]), np.asarray(hier[2]),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_page_survivor_blocks_derivation():
+    m, page = 64, 16
+    valid = np.zeros((1, 1, m), bool)
+    valid[0, 0, 17] = True  # one live slot in page 1
+    out = np.asarray(page_survivor_blocks(jnp.asarray(valid), m, page))
+    np.testing.assert_array_equal(out[0, 0], [False, True, False, False])
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+def test_cost_model_off_is_bit_identical():
+    """page_top_p=None and page_top_p=1.0 must price exactly like the flat
+    pipeline — every shared key equal, page_topp = 0."""
+    from repro.analysis.costs import (
+        serving_pipeline_config,
+        twilight_pipeline_traffic,
+    )
+    tw = serving_pipeline_config()
+    for n in (8192, 65536):
+        for fused in (False, True):
+            base = twilight_pipeline_traffic(tw, n, 32, 8, 128, fused=fused)
+            one = twilight_pipeline_traffic(
+                dataclasses.replace(tw, page_top_p=1.0), n, 32, 8, 128,
+                fused=fused)
+            assert base["page_topp"] == 0.0 and one["page_topp"] == 0.0
+            assert base == one
+
+
+def test_cost_model_estimate_reduction_meets_bar():
+    """Acceptance: ≥3× modeled estimate-stage bytes at 64k, p_page=0.9."""
+    from repro.analysis.costs import (
+        serving_pipeline_config,
+        twilight_pipeline_traffic,
+    )
+    tw = serving_pipeline_config()
+    flat = twilight_pipeline_traffic(tw, 65536, 32, 8, 128, fused=True)
+    hier = twilight_pipeline_traffic(
+        dataclasses.replace(tw, page_top_p=0.9), 65536, 32, 8, 128,
+        fused=True)
+    assert flat["estimate"] / hier["estimate"] >= 3.0
+    assert hier["total"] < flat["total"]  # net win despite page_topp term
+
+
+def test_cost_model_survivors_monotone():
+    from repro.analysis.costs import hierarchical_page_survivors
+    prev = 0
+    for p in (0.5, 0.8, 0.9, 0.95, 0.99, 1.0):
+        s = hierarchical_page_survivors(256, p)
+        assert s >= prev
+        prev = s
+    assert hierarchical_page_survivors(256, 1.0) == 256
+    assert 1 <= hierarchical_page_survivors(256, 0.5) < 256
+
+
+# ---------------------------------------------------------------------------
+# Telemetry
+# ---------------------------------------------------------------------------
+
+def test_run_stats_live_pages_arithmetic():
+    m, page = 64, 16
+    kept = np.zeros((1, 1, m), bool)
+    kept[0, 0, :4] = True
+    idx = jnp.broadcast_to(jnp.arange(m), (1, 1, m)).astype(jnp.int32)
+    cand = np.zeros((1, 1, m), bool)
+    cand[0, 0, 0:page] = True
+    cand[0, 0, 2 * page:3 * page] = True  # 2 live pages -> log2 bucket 1
+    vec = np.asarray(runs_lib.run_length_stats(
+        jnp.asarray(kept), idx, page, m // page,
+        cand_valid=jnp.asarray(cand)))
+    assert vec.shape == (runs_lib.RUN_STATS_LEN,)
+    B = runs_lib.RUN_HIST_BUCKETS
+    live_hist = vec[B + 3:2 * B + 3]
+    np.testing.assert_array_equal(live_hist,
+                                  [0, 1, 0, 0, 0, 0, 0, 0])
+    assert vec[2 * B + 3] == 2.0  # cand_pages
+    assert vec[2 * B + 4] == 2.0 * page  # cand_rows
+    # Without cand_valid the hierarchical section is exactly zero.
+    vec0 = np.asarray(runs_lib.run_length_stats(
+        jnp.asarray(kept), idx, page, m // page))
+    np.testing.assert_array_equal(vec0[B + 3:], 0.0)
+    np.testing.assert_array_equal(vec0[:B + 3], vec[:B + 3])
+    summ = runs_lib.summarize_run_stats(vec, steps=1)
+    assert summ["cand_pages_per_step"] == 2.0
+    assert summ["cand_rows_per_step"] == 32.0
+    assert summ["live_page_hist"][1] == 1
