@@ -267,9 +267,11 @@ def serve_shared_prefix_workload(batch: int = 8, n_requests: int = 64,
             s = e
         return us
 
-    def run(share: bool, attn_fn=attn_us) -> tuple[float, float]:
+    def run(share: bool, attn_fn=attn_us,
+            prefill_fn=None) -> tuple[float, float]:
         """Serial engine queue: admissions prefill (suffix or full prompt),
         then every live slot decodes.  Returns (mean TTFT us, total us)."""
+        prefill_fn = prefill_fn or prefill_us
         ttft, total_us = [], 0.0
         queue = list(range(n_requests))
         slots: list[list[int] | None] = [None] * batch  # [ctx, remaining]
@@ -280,7 +282,7 @@ def serve_shared_prefix_workload(batch: int = 8, n_requests: int = 64,
                     i = queue.pop(0)
                     s_total = prefix_len + int(suffixes[i])
                     start = prefix_len if (share and cached) else 0
-                    p_us = prefill_us(start, s_total)
+                    p_us = prefill_fn(start, s_total)
                     cached = True
                     total_us += p_us  # chunks stall the shared queue
                     ttft.append(total_us)
@@ -313,6 +315,9 @@ def serve_shared_prefix_workload(batch: int = 8, n_requests: int = 64,
         rows.extend(_fused_axis_rows(lambda fn: run(True, fn),
                                      "shared_prefix", batch, total_new,
                                      n_layers, hkv, d))
+        rows.extend(_sparse_prefill_axis_rows(
+            lambda fn: run(False, prefill_fn=fn), "shared_prefix", batch,
+            total_new, n_layers, hkv, d, chunk, w_us))
     if json_path:
         import json
         with open(json_path, "w") as f:
@@ -453,6 +458,70 @@ def _fused_axis_rows(runner, prefix: str, batch: int, total_new: int,
     return out
 
 
+def _sparse_prefill_axis_rows(runner, prefix: str, batch: int,
+                              total_new: int, n_layers: int, hkv: int,
+                              d: int, chunk: int,
+                              w_us: float) -> list[dict]:
+    """Re-price one scheduler run's prefill under the TTFT-path model.
+
+    ``runner(prefill_fn) -> (mean TTFT us, total us)`` replays the
+    workload's scheduler with a per-admission prefill cost function —
+    sharing *off*, the full-prompt-prefill regime where the TTFT is
+    attention-dominated (with sharing on, admissions prefill only their
+    suffix and the kernel has little left to prune).  Two variants are
+    priced from
+    ``analysis.costs.prefill_attention_traffic``: the dense flash oracle
+    (every query tile streams its whole causal context) and the
+    page-nucleus sparse prefill kernel (``kernels/sparse_prefill``,
+    ``prefill_top_p=0.9`` — survivor pages only).  Emits
+    ``{prefix}_dense_prefill`` / ``{prefix}_sparse_prefill`` rows plus
+    the ``{prefix}_prefill_speedup`` row the CI perf-trajectory gate
+    tracks; ``prefill_bytes_x_64k`` is the modeled per-layer prefill
+    byte reduction at the 64k reference context.
+    """
+    import dataclasses
+
+    from repro.analysis.costs import (
+        prefill_attention_traffic,
+        serving_pipeline_config,
+    )
+
+    tw = serving_pipeline_config()
+    hq = 4 * hkv
+    ref_n = 65536
+    out, totals = [], {}
+    for tag, p in (("dense_prefill", None), ("sparse_prefill", 0.9)):
+        twp = dataclasses.replace(tw, prefill_top_p=p)
+
+        def prefill_fn(start: int, end: int, twp=twp) -> float:
+            us, s = 0.0, start
+            while s < end:
+                e = min(s + chunk, end)
+                tr = prefill_attention_traffic(twp, e - s, hq, hkv, d, n=e)
+                us += w_us + n_layers * bytes_to_us(tr["total"])
+                s = e
+            return us
+
+        ttft_us, total = runner(prefill_fn)
+        totals[tag] = (ttft_us, total)
+        tok_s = total_new / (total * 1e-6)
+        out.append({"name": f"{prefix}_{tag}_b{batch}", "ttft_us": ttft_us,
+                    "total_us": total, "tok_s": tok_s})
+        csv_row(f"{prefix}_{tag}_b{batch}", total,
+                f"ttft_us={ttft_us:.1f};tok_s={tok_s:.1f}")
+    speed = totals["dense_prefill"][1] / totals["sparse_prefill"][1]
+    ttft_speed = totals["dense_prefill"][0] / totals["sparse_prefill"][0]
+    ref = prefill_attention_traffic(
+        dataclasses.replace(tw, prefill_top_p=0.9), ref_n, hq, hkv, d)
+    out.append({"name": f"{prefix}_prefill_speedup_b{batch}",
+                "ttft_speedup": ttft_speed, "tok_s_speedup": speed,
+                "prefill_bytes_x_64k": ref["bytes_x"]})
+    csv_row(f"{prefix}_prefill_speedup_b{batch}", 0.0,
+            f"ttft={ttft_speed:.2f};tok_s={speed:.2f};"
+            f"bytes_x_64k={ref['bytes_x']:.2f}")
+    return out
+
+
 def serve_persistent_workload(batch: int = 8, n_batches: int = 4,
                               requests_per_batch: int = 8,
                               prefix_len: int = 8192, suffix_len: int = 512,
@@ -501,9 +570,11 @@ def serve_persistent_workload(batch: int = 8, n_batches: int = 4,
             s = e
         return us
 
-    def run(persistent: bool, attn_fn=attn_us) -> tuple[float, float, float]:
+    def run(persistent: bool, attn_fn=attn_us,
+            prefill_fn=None) -> tuple[float, float, float]:
         """Serve the batches serially.  Returns (hit rate, mean TTFT us,
         total us)."""
+        prefill_fn = prefill_fn or prefill_us
         ttft, total_us, hits = [], 0.0, 0
         cached = False  # radix tree holds the prefix
         for b0_idx in range(n_batches):
@@ -522,7 +593,7 @@ def serve_persistent_workload(batch: int = 8, n_batches: int = 4,
                             start = prefix_len
                         else:
                             start = 0
-                        p_us = prefill_us(start, s_total)
+                        p_us = prefill_fn(start, s_total)
                         cached = True
                         total_us += p_us  # chunks stall the shared queue
                         # Queue-inclusive TTFT, same semantics as the
@@ -559,6 +630,9 @@ def serve_persistent_workload(batch: int = 8, n_batches: int = 4,
         rows.extend(_fused_axis_rows(lambda fn: run(True, fn)[1:],
                                      "persistent", batch, total_new,
                                      n_layers, hkv, d))
+        rows.extend(_sparse_prefill_axis_rows(
+            lambda fn: run(False, prefill_fn=fn)[1:], "persistent", batch,
+            total_new, n_layers, hkv, d, chunk, w_us))
     if json_path:
         import json
         with open(json_path, "w") as f:

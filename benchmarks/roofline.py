@@ -313,6 +313,57 @@ def print_hierarchical_table(rows: list[dict]) -> None:
               f"{r['total_x']:8.2f} {r['eff_x']:6.2f}")
 
 
+def prefill_table(contexts=(8192, 32768, 65536, 131072),
+                  ps=(0.8, 0.9, 0.95), *, hq=32, hkv=8, d=128) -> list[dict]:
+    """Hierarchical top-p sparse prefill: TTFT-path attention bytes.
+
+    For each (context, ``prefill_top_p``) cell, the modeled per-layer
+    K/V HBM bytes of a from-scratch prefill: the dense flash oracle
+    (every query tile streams its whole causal context) vs the
+    page-nucleus sparse kernel (``kernels/sparse_prefill`` — survivor
+    pages only, plus the page-metadata read and per-tile page-score
+    rows).  ``bytes_x`` is the end-to-end prefill traffic reduction.
+    """
+    import dataclasses
+
+    from repro.analysis.costs import (
+        prefill_attention_traffic,
+        serving_pipeline_config,
+    )
+
+    tw = serving_pipeline_config()
+    rows = []
+    for n in contexts:
+        dense = prefill_attention_traffic(tw, n, hq, hkv, d)
+        for p in ps:
+            twp = dataclasses.replace(tw, prefill_top_p=p)
+            sp = prefill_attention_traffic(twp, n, hq, hkv, d)
+            rows.append({
+                "n": n, "prefill_top_p": p,
+                "dense_bytes": dense["total"],
+                "sparse_bytes": sp["total"],
+                "attend_bytes": sp["attend"],
+                "meta_bytes": sp["meta"],
+                "page_topp_bytes": sp["page_topp"],
+                "bytes_x": sp["bytes_x"],
+            })
+    return rows
+
+
+def print_prefill_table(rows: list[dict]) -> None:
+    hdr = (f"{'context':>9s} {'p_prefill':>10s} {'dense MB':>10s} "
+           f"{'sparse MB':>10s} {'attend MB':>10s} {'meta MB':>8s} "
+           f"{'bytes_x':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['n']:9d} {r['prefill_top_p']:10.2f} "
+              f"{r['dense_bytes'] / 1e6:10.1f} "
+              f"{r['sparse_bytes'] / 1e6:10.1f} "
+              f"{r['attend_bytes'] / 1e6:10.1f} "
+              f"{r['meta_bytes'] / 1e6:8.2f} {r['bytes_x']:8.2f}")
+
+
 def main() -> None:
     import argparse
 
@@ -328,8 +379,11 @@ def main() -> None:
     ap.add_argument("--hierarchical", action="store_true",
                     help="also print the hierarchical page-nucleus table "
                          "(adaptive-estimate bytes vs the flat pipeline)")
+    ap.add_argument("--prefill", action="store_true",
+                    help="also print the sparse-prefill TTFT table "
+                         "(page-nucleus prefill bytes vs dense flash)")
     args = ap.parse_args()
-    if args.fused or args.multitok or args.hierarchical:
+    if args.fused or args.multitok or args.hierarchical or args.prefill:
         outdir = os.path.dirname(args.jsonl) or "."
         os.makedirs(outdir, exist_ok=True)
         first = True
@@ -360,6 +414,16 @@ def main() -> None:
             with open(hout, "w") as f:
                 json.dump(hrows, f, indent=1)
             print(f"\nwrote {hout}")
+            first = False
+        if args.prefill:
+            if not first:
+                print()
+            prows = prefill_table()
+            print_prefill_table(prows)
+            pout = os.path.join(outdir, "roofline_prefill.json")
+            with open(pout, "w") as f:
+                json.dump(prows, f, indent=1)
+            print(f"\nwrote {pout}")
         return
     path = args.jsonl
     rows = full_table(path)

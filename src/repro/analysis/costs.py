@@ -393,6 +393,60 @@ def twilight_pipeline_traffic(tw: TwilightConfig, n: int, hq: int, hkv: int,
          "total": float(sel + page_topp + tail)}, txns, launches, k)
 
 
+def prefill_attention_traffic(tw: TwilightConfig, s: int, hq: int, hkv: int,
+                              d: int, *, n: int | None = None,
+                              bytes_kv: int = BYTES_BF16,
+                              q_block: int = 256,
+                              recent_pages: int = 1) -> dict[str, float]:
+    """Per-layer HBM K/V bytes of one sequence's prefill attention.
+
+    Dense flash streams, per ``q_block``-query tile, the tile's whole
+    causal context — O(s·n) K/V bytes over the prefill.  The sparse
+    prefill kernel (``kernels/sparse_prefill``) instead reads the Quest
+    page metadata, runs the per-tile page-nucleus search, and DMAs only
+    surviving pages: per tile the live count is the modeled nucleus
+    survivor count (:func:`hierarchical_page_survivors` — the same decay
+    profile the decode model uses) plus the unconditionally-kept causal
+    frontier (``q_block//page_size + 1`` pages a tile's own queries span)
+    and ``recent_pages`` window.
+
+    ``n`` is the resident context the queries attend (defaults to ``s``:
+    a from-scratch prefill; chunked prefill against a cached prefix passes
+    ``n > s``).  Keys: ``dense_attend`` (the dense oracle's bytes),
+    ``attend`` (survivor K/V bytes), ``meta`` (page min/max read),
+    ``page_topp`` (per-tile f32 page-score rows), ``total`` and
+    ``bytes_x`` (dense/total).  With ``tw.prefill_top_p`` None or >= 1.0
+    the sparse terms vanish and ``total == dense_attend`` exactly, so
+    consumers see bit-identical numbers when the feature is off.
+    """
+    if n is None:
+        n = s
+    ps = tw.page_size
+    p = tw.prefill_top_p
+    nqb = -(-s // q_block)
+    off = n - s
+    n_pages = -(-n // ps)
+    forced = (q_block // ps + 1) + recent_pages
+    dense = 0.0
+    attend = 0.0
+    for i in range(nqb):
+        ctx = min(n, off + (i + 1) * q_block)
+        dense += 2.0 * ctx * hkv * d * bytes_kv
+        cand = -(-ctx // ps)
+        live = min(cand, hierarchical_page_survivors(cand, p) + forced) \
+            if (p is not None and p < 1.0) else cand
+        attend += 2.0 * live * ps * hkv * d * bytes_kv
+    if p is None or p >= 1.0:
+        return {"dense_attend": dense, "attend": dense, "meta": 0.0,
+                "page_topp": 0.0, "total": dense, "bytes_x": 1.0}
+    meta = 2.0 * n_pages * hkv * d * bytes_kv
+    page_topp = float(nqb * n_pages * hkv * BYTES_F32)
+    total = attend + meta + page_topp
+    return {"dense_attend": dense, "attend": attend, "meta": meta,
+            "page_topp": page_topp, "total": total,
+            "bytes_x": dense / total}
+
+
 def decode_flops(cfg: ModelConfig, batch: int, ctx: int) -> float:
     """One decode step: forward over `batch` tokens with full context `ctx`,
     including the Twilight estimate (q·K̃ over the candidate set) and the

@@ -27,6 +27,7 @@ __all__ = [
     "RUN_HIST_BUCKETS",
     "RUN_STATS_LEN",
     "coalesced_runs",
+    "prefill_page_stats",
     "run_length_stats",
     "summarize_run_stats",
 ]
@@ -34,12 +35,19 @@ __all__ = [
 # log2 histogram buckets: run length 1, 2-3, 4-7, ..., >= 2^(B-1).
 RUN_HIST_BUCKETS = 8
 # [hist(B) | n_runs | pages_touched | kept_rows
-#  | live_page_hist(B) | cand_pages | cand_rows]
+#  | live_page_hist(B) | cand_pages | cand_rows
+#  | prefill_pages_live | prefill_pages_cand | prefill_qblocks]
 # The second section is the hierarchical page-nucleus telemetry: a log2
 # histogram of *live candidate pages per (batch, head) row* plus the summed
 # live page / live slot counts — all zero when no candidate validity is
-# supplied (flat pipeline), so legacy accumulators stay comparable.
-RUN_STATS_LEN = 2 * RUN_HIST_BUCKETS + 5
+# supplied (flat pipeline), so legacy accumulators stay comparable.  The
+# third section is the sparse-prefill twin (``prefill_page_stats``):
+# surviving / candidate (query-block, kv-head, page) triples and the query
+# block count, summed over chunks and layers — all zero when
+# ``prefill_top_p`` is off.
+RUN_STATS_LEN = 2 * RUN_HIST_BUCKETS + 8
+# Offset of the prefill section inside the vector.
+_PREFILL_BASE = 2 * RUN_HIST_BUCKETS + 5
 
 
 def coalesced_runs(kept, indices, page_size: int) -> list[tuple[int, int]]:
@@ -156,7 +164,26 @@ def run_length_stats(kept: jax.Array, indices: jax.Array, page_size: int,
         live_hist,
         cand_pages[None],
         cand_rows[None],
+        jnp.zeros((3,), jnp.float32),  # prefill section (decode emits none)
     ])
+
+
+def prefill_page_stats(survivors: jax.Array,
+                       participate: jax.Array) -> jax.Array:
+    """Sparse-prefill live-page telemetry as a (RUN_STATS_LEN,) vector.
+
+    ``survivors``/``participate`` are the (b, nqb, hkv, n_pages) bool masks
+    ``sparse_prefill_attend`` returns as aux: surviving vs causally visible
+    pages per (query block, kv head).  Only the prefill slots are set, so
+    the vector adds directly into the same session accumulator as the
+    decode :func:`run_length_stats` vectors.
+    """
+    live = jnp.sum(survivors & participate).astype(jnp.float32)
+    cand = jnp.sum(participate).astype(jnp.float32)
+    qblocks = jnp.asarray(
+        survivors.shape[0] * survivors.shape[1], jnp.float32)
+    vec = jnp.zeros((RUN_STATS_LEN,), jnp.float32)
+    return vec.at[_PREFILL_BASE:].set(jnp.stack([live, cand, qblocks]))
 
 
 def summarize_run_stats(total: np.ndarray, steps: int) -> dict:
@@ -165,7 +192,8 @@ def summarize_run_stats(total: np.ndarray, steps: int) -> dict:
     hist = total[:RUN_HIST_BUCKETS]
     n_runs, pages, kept = total[RUN_HIST_BUCKETS:RUN_HIST_BUCKETS + 3]
     live_hist = total[RUN_HIST_BUCKETS + 3:2 * RUN_HIST_BUCKETS + 3]
-    cand_pages, cand_rows = total[2 * RUN_HIST_BUCKETS + 3:]
+    cand_pages, cand_rows = total[2 * RUN_HIST_BUCKETS + 3:_PREFILL_BASE]
+    pf_live, pf_cand, pf_qblocks = total[_PREFILL_BASE:]
     steps = max(steps, 1)
     return {
         "steps": int(steps),
@@ -178,4 +206,9 @@ def summarize_run_stats(total: np.ndarray, steps: int) -> dict:
         "live_page_hist": [int(x) for x in live_hist],
         "cand_pages_per_step": cand_pages / steps,
         "cand_rows_per_step": cand_rows / steps,
+        # Sparse-prefill live-page telemetry (zero when prefill_top_p off).
+        "prefill_pages_live": pf_live,
+        "prefill_pages_cand": pf_cand,
+        "prefill_qblocks": pf_qblocks,
+        "prefill_live_frac": pf_live / max(pf_cand, 1.0),
     }

@@ -79,6 +79,18 @@ class TwilightConfig:
     # ``kernels/fused_decode``).  ``None`` or ``1.0`` is the flat fixed-B0
     # pipeline, bit for bit.  Token-granular selectors ignore it.
     page_top_p: float | None = None
+    # Prefill-side hierarchical top-p (the TTFT counterpart of
+    # ``page_top_p``): when set (and < 1.0), prefill attention — both the
+    # dense contiguous path and the chunked paged walker — runs the
+    # block-sparse flash kernel in ``kernels/sparse_prefill``: per query
+    # block the Quest page min/max upper bound is max-reduced over the
+    # block, passed through the same ``page_nucleus_mask`` search, and
+    # only *surviving* pages are streamed and attended (causal-frontier
+    # and recent pages are always kept, so every query row sees its own
+    # page).  ``None`` or ``1.0`` is the dense prefill, bit for bit; the
+    # kernel falls back to the dense path when the tile would overflow
+    # VMEM (``sparse_prefill.ops.sparse_prefill_fits``).
+    prefill_top_p: float | None = None
     page_size: int = 64
     estimate_bits: int = 4
     topp_iters: int = 24

@@ -1,15 +1,19 @@
 """Pallas TPU kernels for the Twilight hot path (§4.2).
 
-Four kernels, each a subpackage with ``kernel.py`` (pl.pallas_call +
+Each kernel is a subpackage with ``kernel.py`` (pl.pallas_call +
 BlockSpec), ``ops.py`` (jit'd public wrapper) and ``ref.py`` (pure-jnp
 oracle used by the tests):
 
-* ``quant``       — INT4 asymmetric quantization + nibble packing of K.
-* ``spgemv``      — q · K̃ᵀ score estimation over the packed INT4 cache,
-                    dequantization folded into the matmul epilogue.
-* ``topp``        — Algorithm 1 binary-search threshold over weight rows.
-* ``sparse_attn`` — single-query flash-decode attention with top-p mask and
-                    page-granular early-out.
+* ``quant``          — INT4 asymmetric quantization + nibble packing of K.
+* ``spgemv``         — q · K̃ᵀ score estimation over the packed INT4 cache,
+                       dequantization folded into the matmul epilogue.
+* ``topp``           — Algorithm 1 binary-search threshold over weight rows.
+* ``sparse_attn``    — single-query flash-decode attention with top-p mask
+                       and page-granular early-out.
+* ``fused_decode``   — estimate→top-p→attend in one launch per decode step
+                       (run-coalesced, double-buffered survivor DMA).
+* ``sparse_prefill`` — page-nucleus block-sparse flash prefill for the
+                       TTFT path (per-query-block survivor sets).
 
 All kernels run under ``interpret=True`` on CPU (how this container
 validates them) and compile for TPU with MXU/VPU-aligned tiles.

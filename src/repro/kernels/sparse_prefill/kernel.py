@@ -1,0 +1,231 @@
+"""Pallas kernel: page-nucleus block-sparse flash prefill.
+
+Decode went survivor-only in PRs 5-7; this kernel is the prefill-side
+counterpart for the TTFT path.  Per ``(slot, kv-head, query-block)`` grid
+step it flash-attends one ``q_block``-query tile against **only the kv
+blocks its query block kept** — the page-level top-p survivor set is
+computed upstream (``ops.prefill_page_survivors``: Quest min/max scores
+max-reduced over the query block, ``page_nucleus_mask``, causal frontier
++ recent window forced) and arrives as a per-query-block ``(1, 1, nb)``
+int8 operand, the prefill twin of the fused decode kernel's ``(1, nb)``
+page-survivor mask.
+
+Streaming reuses the fused decode kernel's machinery wholesale:
+
+* kv blocks have static length ``blk = coalesce_block(page_size,
+  page_size)`` (page_size halved to ``MAX_BLOCK_ROWS``), so a block never
+  straddles a physical page boundary and ``n`` reshapes to ``(nb, blk)``
+  with no remainder;
+* each surviving block is **one coalesced blk-row async copy** per
+  stream through two ping-ponged VMEM staging buffers — the copy of
+  block j+1 overlaps block j's online-softmax update.  Unlike decode
+  (where token-level pruning can hollow a block out), prefill prunes at
+  page granularity, so a surviving block is always dense and the fused
+  kernel's per-row sparse fallback is structurally unnecessary here;
+* **pruned blocks are never read from HBM**, and the kv-block loop stops
+  at the query block's causal frontier (a traced bound), so compute and
+  traffic both scale with the survivor count.
+
+Layout contract (see ``src/repro/kernels/README.md``):
+
+* grid = (B, nqb) with B = batch * kv_heads; query rows are GQA-group-
+  major inside the tile: row r = t * group + g is query t, group member g
+  (so the whole group shares its query's survivor row, Appendix B.2).
+* ``rows`` are *final* HBM start rows per kv block: physical pool rows
+  (page_table translated in the wrapper) for chunked paged prefill,
+  ``j * blk`` for the contiguous fallback.
+* masking is finite (``NEG_INF``), kv rows at or beyond ``kv_len`` are
+  zeroed before the matmul (a partially-filled boundary page DMAs stale
+  pool rows), and fully-masked query rows emit exact zeros.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import NEG_INF, resolve_interpret
+from repro.kernels.fused_decode.kernel import coalesce_block
+
+
+def _sparse_prefill_kernel(
+    q_ref,  # (1, 1, qr, d) — qr = q_block * group, group-major rows
+    surv_ref,  # (1, 1, nb) int8 — this query block's kv-block survivors
+    rows_ref,  # (1, nb) i32 — HBM start row of each kv block
+    len_ref,  # (1, 1) i32 — resident prefix length (keys < kv_len live)
+    off_ref,  # (1, 1) i32 — position of this slot's first query row
+    k_hbm,  # ANY: (b, n, hkv, d) contiguous or (P, hkv, d) pooled
+    v_hbm,  # ANY: same layout as k_hbm
+    out_ref,  # (1, 1, qr, d)
+    k_scr,  # VMEM (2, blk, 1, d) double-buffered block staging
+    v_scr,  # VMEM (2, blk, 1, d)
+    sem_k,  # DMA semaphores, one per buffer slot
+    sem_v,
+    *,
+    sm_scale: float,
+    hkv: int,
+    group: int,
+    q_block: int,
+    blk: int,
+    pooled: bool,
+):
+    i = pl.program_id(0)
+    qb = pl.program_id(1)
+    bi = i // hkv
+    hi = i % hkv
+
+    qf = q_ref[0, 0].astype(jnp.float32)  # (qr, d)
+    surv = surv_ref[0, 0] != 0  # (nb,)
+    rows = rows_ref[0]  # (nb,)
+    kv_len = len_ref[0, 0]
+    off = off_ref[0, 0]
+    qr, d = qf.shape
+    nb = surv.shape[0]
+
+    # Query row r = t * group + g sits at absolute position
+    # off + qb * q_block + t; the whole GQA group shares that position.
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (qr, blk), 0)
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (qr, blk), 1)
+    qpos = off + qb * q_block + row_iota // group  # (qr, blk)
+
+    # Causal frontier: kv blocks wholly past this tile's last query (or
+    # past the resident prefix) can never participate — the loop bound is
+    # traced, so trailing dead blocks cost neither DMA nor compute.
+    frontier = jnp.minimum(kv_len, off + (qb + 1) * q_block)
+    nb_live = jnp.minimum((frontier + blk - 1) // blk, nb)
+
+    def src_rows(start):
+        if pooled:
+            return (k_hbm.at[pl.ds(start, blk), pl.ds(hi, 1)],
+                    v_hbm.at[pl.ds(start, blk), pl.ds(hi, 1)])
+        return (k_hbm.at[bi, pl.ds(start, blk), pl.ds(hi, 1)],
+                v_hbm.at[bi, pl.ds(start, blk), pl.ds(hi, 1)])
+
+    def dma_block(j, ok, start):
+        # Start and wait share this predicate expression (a pure function
+        # of j), so every started copy is waited exactly once.  Page-level
+        # pruning keeps surviving blocks dense, so the copy is always the
+        # single coalesced blk-row form.
+        slot = j % 2
+
+        @pl.when(ok & surv[j])
+        def _():
+            ks, vs = src_rows(rows[j])
+            ck = pltpu.make_async_copy(ks, k_scr.at[slot], sem_k.at[slot])
+            cv = pltpu.make_async_copy(vs, v_scr.at[slot], sem_v.at[slot])
+            if start:
+                ck.start()
+                cv.start()
+            else:
+                ck.wait()
+                cv.wait()
+
+    def attend_block(j, carry):
+        slot = j % 2
+        dma_block(j, True, start=False)  # block j landed in buffer slot
+        # Prefetch block j+1 into the other buffer before touching j's
+        # data — the copy runs during this block's flash update.
+        dma_block(jnp.minimum(j + 1, nb - 1), j + 1 < nb_live, start=True)
+
+        kb = k_scr[slot, :, 0].astype(jnp.float32)  # (blk, d)
+        vb = v_scr[slot, :, 0].astype(jnp.float32)
+        # Rows at or beyond kv_len hold stale pool data (a partially
+        # filled boundary page, or a dead block's untouched buffer) —
+        # zero them so garbage can never reach the accumulator through
+        # a 0*NaN product.
+        live_row = (j * blk + jax.lax.broadcasted_iota(
+            jnp.int32, (blk, d), 0)) < kv_len
+        kb = jnp.where(live_row, kb, 0.0)
+        vb = jnp.where(live_row, vb, 0.0)
+
+        s = jnp.dot(qf, kb.T, preferred_element_type=jnp.float32) * sm_scale
+        kpos = j * blk + col_iota
+        mask = (kpos <= qpos) & (kpos < kv_len)
+        s = jnp.where(mask, s, NEG_INF)  # finite mask — no inf-inf NaNs
+
+        m_run, l_run, acc = carry
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_run - m_new)
+        p_t = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_new = l_run * alpha + jnp.sum(p_t, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.dot(p_t, vb,
+                                        preferred_element_type=jnp.float32)
+        new = (m_new, l_new, acc_new)
+        # Dead blocks skip the carry entirely — the stale buffer's zeroed
+        # rows are still masked, but the select makes it structural.
+        return jax.tree_util.tree_map(
+            lambda n, c: jnp.where(surv[j], n, c), new, carry)
+
+    init = (jnp.full((qr, 1), NEG_INF, jnp.float32),
+            jnp.zeros((qr, 1), jnp.float32),
+            jnp.zeros((qr, d), jnp.float32))
+    dma_block(0, nb_live > 0, start=True)  # warm the first buffer
+    _, l_run, acc = jax.lax.fori_loop(0, nb_live, attend_block, init)
+    out = acc / jnp.maximum(l_run, 1e-30)
+    out = jnp.where(l_run > 0.0, out, 0.0)  # fully-masked rows emit zeros
+    out_ref[0, 0] = out.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sm_scale", "hkv", "group", "q_block", "pooled",
+                     "page_size", "interpret"),
+)
+def sparse_prefill_rows(
+    q: jax.Array,  # (B, nqb, qr, d) — B = batch * kv_heads
+    survivors: jax.Array,  # (B, nqb, nb) bool/int8 kv-block survivors
+    rows: jax.Array,  # (B, nb) i32 HBM start row per kv block
+    kv_len: jax.Array,  # (B, 1) i32
+    q_offset: jax.Array,  # (B, 1) i32
+    keys: jax.Array,  # (b, n, hkv, d) or (P, hkv, d) — stays in HBM
+    values: jax.Array,  # same layout as keys
+    *,
+    sm_scale: float,
+    hkv: int,
+    group: int,
+    q_block: int,
+    pooled: bool,
+    page_size: int = 64,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One launch per prefill (or prefill chunk): (B, nqb, qr, d) output.
+
+    ``survivors`` is the per-query-block page-survivor operand at ``blk``
+    granularity (``blk = coalesce_block(page_size, page_size)``); the
+    wrapper expands page survivors to sub-blocks, exactly as the fused
+    decode wrapper derives its ``(1, nb)`` mask from candidate validity.
+    """
+    interpret = resolve_interpret(interpret)
+    B, nqb, qr, d = q.shape
+    nb = survivors.shape[-1]
+    blk = coalesce_block(page_size, page_size)
+    survivors = survivors.astype(jnp.int8)
+    return pl.pallas_call(
+        functools.partial(_sparse_prefill_kernel, sm_scale=sm_scale,
+                          hkv=hkv, group=group, q_block=q_block, blk=blk,
+                          pooled=pooled),
+        grid=(B, nqb),
+        in_specs=[
+            pl.BlockSpec((1, 1, qr, d), lambda i, qb: (i, qb, 0, 0)),
+            pl.BlockSpec((1, 1, nb), lambda i, qb: (i, qb, 0)),
+            pl.BlockSpec((1, nb), lambda i, qb: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, qb: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, qb: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # K cache/pool, HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),  # V cache/pool, HBM
+        ],
+        out_specs=pl.BlockSpec((1, 1, qr, d), lambda i, qb: (i, qb, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nqb, qr, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, blk, 1, d), keys.dtype),
+            pltpu.VMEM((2, blk, 1, d), values.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(q, survivors, rows, kv_len.astype(jnp.int32),
+      q_offset.astype(jnp.int32), keys, values)

@@ -1,0 +1,307 @@
+"""Public wrapper: hierarchical top-p block-sparse prefill attention.
+
+``sparse_prefill_attend`` adapts both prefill layouts to the kernel's
+``(B = b*hkv, nqb, q_block*group, d)`` tiling:
+
+* **contiguous** — dense ``prefill``'s (b, n, hkv, d) K/V with per-batch
+  Quest page metadata (b, n_pages, hkv, d); ``n`` must be padded to a
+  page multiple (mask the tail via ``kv_len``);
+* **pooled** — ``prefill_chunk``'s shared page pool (P, hkv, d) with the
+  pool-resident metadata (num_pages, hkv, d) and a per-slot page table;
+  ``kv_len``/``q_offset`` may be traced (the chunk walker's running
+  position).
+
+Selection happens here, not in the kernel: ``prefill_page_survivors``
+max-reduces the Quest min/max upper bound over each query block (and its
+GQA group), runs the existing ``page_nucleus_mask`` top-p search per
+(query block, kv head), and forces the causal-frontier pages plus a
+``recent_pages`` window — so every valid query row always keeps its own
+page and the survivor set is monotone in ``p``.  The kernel then streams
+only surviving pages (``kernel.sparse_prefill_rows``).
+
+``top_p >= 1.0`` statically bypasses the whole machinery and runs the
+dense oracle — **bit-for-bit** the model's plain ``mha_attention``
+prefill, the same convention as ``page_top_p=1.0`` in the decode
+pipeline.  Below budget (``sparse_prefill_fits``, the prefill twin of
+``fused_fits``) or off-TPU, the jnp fallback applies the identical
+survivor mask as an additive bias, so mask semantics never depend on the
+backend.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import mha_attention
+from repro.core.selectors import gather_logical_rows, page_nucleus_mask
+from repro.kernels.common import NEG_INF, resolve_interpret
+from repro.kernels.fused_decode.kernel import coalesce_block
+from repro.kernels.sparse_prefill.kernel import sparse_prefill_rows
+
+# Per-core VMEM is ~16 MB; leave headroom for the compiler's own buffers.
+SPARSE_PREFILL_VMEM_BUDGET = 12 << 20
+
+# Queries per kernel tile.  256 keeps the (qr, blk) score tile MXU-shaped
+# at group=4 and bounds the survivor-selection intermediate in the
+# wrapper; chunk sizes and pad amounts are derived from it.
+DEFAULT_Q_BLOCK = 256
+
+
+def sparse_prefill_vmem_bytes(n: int, d: int, group: int,
+                              kv_bytes: int = 2, *,
+                              q_block: int = DEFAULT_Q_BLOCK,
+                              page_size: int = 64) -> int:
+    """Analytic VMEM working set of one (slot, kv-head, query-block) step.
+
+    Terms, in kernel order: the f32 query tile; the survivor/row operands
+    (nb = n/blk blocks); ~3 live (qr, blk) f32 score/mask tiles; the
+    online-softmax accumulator (m/l/acc per query row); and the
+    double-buffered K and V block staging scratch (2 buffers x 2 streams
+    x blk rows).  Unlike the fused decode budget there is no O(m)
+    candidate-codes term — the whole point of the query-block grid is
+    that only one kv block is ever resident.
+    """
+    blk = coalesce_block(page_size, page_size)
+    qr = q_block * group
+    nb = -(-n // blk)
+    queries = qr * d * 4
+    operands = nb * (1 + 4) + 8
+    score_tiles = 3 * qr * blk * 4
+    accum = qr * (d + 2) * 4
+    staging = 2 * 2 * blk * d * kv_bytes
+    return queries + operands + score_tiles + accum + staging
+
+
+def sparse_prefill_fits(n: int, d: int, group: int, kv_bytes: int = 2, *,
+                        q_block: int = DEFAULT_Q_BLOCK,
+                        page_size: int = 64,
+                        interpret: bool | None = None) -> bool:
+    """Static go/no-go for the sparse prefill kernel at this context.
+
+    ``interpret=False`` forces the real budget check (interpret mode has
+    no VMEM ceiling, so the default tri-state always fits off-TPU).
+    """
+    if resolve_interpret(interpret):
+        return True
+    return sparse_prefill_vmem_bytes(
+        n, d, group, kv_bytes, q_block=q_block,
+        page_size=page_size) <= SPARSE_PREFILL_VMEM_BUDGET
+
+
+def prefill_page_survivors(
+    q: jax.Array,  # (b, s_pad, hq, d) — s_pad a q_block multiple
+    kmax: jax.Array,  # (b, n_pages, hkv, d) — Quest page maxima
+    kmin: jax.Array,  # (b, n_pages, hkv, d)
+    *,
+    top_p: float,
+    page_size: int,
+    kv_len: jax.Array,  # (b,) i32 — resident prefix length (traced ok)
+    q_offset: jax.Array,  # (b,) i32 — position of the first query row
+    n_valid: jax.Array | None = None,  # (b,) true query count (pad excl.)
+    q_block: int = DEFAULT_Q_BLOCK,
+    iters: int = 24,
+    recent_pages: int = 1,
+) -> tuple[jax.Array, jax.Array]:
+    """Page-survivor masks per query block: (survivors, participate),
+    both (b, nqb, hkv, n_pages) bool.
+
+    Per query block the Quest score upper bound ``relu(q)@kmax +
+    min(q,0)@kmin`` is max-reduced over the block's queries and GQA group
+    (block-union: a page any group member wants, the whole block keeps),
+    then passed through ``page_nucleus_mask``.  Causal-frontier pages
+    (those overlapping the block's own query positions) and the
+    ``recent_pages`` window before them are kept unconditionally, so the
+    nucleus can only prune the *prefix interior*.  ``participate``
+    restricts everything to causally visible, resident pages; pad query
+    rows (``>= n_valid``) are excluded from the block max.
+    """
+    b, s, hq, d = q.shape
+    n_pages = kmax.shape[1]
+    hkv = kmax.shape[2]
+    group = hq // hkv
+    nqb = s // q_block
+    kmaxf = kmax.astype(jnp.float32)
+    kminf = kmin.astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(b, nqb, q_block, hkv, group, d)
+    if n_valid is None:
+        row_valid = jnp.ones((b, s), bool)
+    else:
+        row_valid = jnp.arange(s, dtype=jnp.int32)[None, :] < n_valid[:, None]
+    rv = row_valid.reshape(b, nqb, q_block)
+
+    # One query block at a time: the (b, q_block, hq, n_pages) upper-bound
+    # tile is the only O(s * n_pages) intermediate, and lax.map keeps it
+    # to a single block's worth of memory.
+    def block_scores(args):
+        qb, rvb = args  # (b, q_block, hkv, group, d), (b, q_block)
+        ub = jnp.einsum("btkgd,bpkd->btkgp", jnp.maximum(qb, 0.0), kmaxf)
+        ub += jnp.einsum("btkgd,bpkd->btkgp", jnp.minimum(qb, 0.0), kminf)
+        ub = jnp.where(rvb[:, :, None, None, None], ub, NEG_INF)
+        return ub.max(axis=(1, 3))  # (b, hkv, n_pages)
+
+    scores = jax.lax.map(
+        block_scores,
+        (qf.transpose(1, 0, 2, 3, 4, 5), rv.transpose(1, 0, 2)))
+    scores = scores.transpose(1, 0, 2, 3)  # (b, nqb, hkv, n_pages)
+
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+    q_offset = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+    qlo = q_offset[:, None] + jnp.arange(nqb, dtype=jnp.int32) * q_block
+    qhi = qlo + q_block - 1  # (b, nqb)
+    pstart = jnp.arange(n_pages, dtype=jnp.int32) * page_size
+    participate = ((pstart[None, None, :] <= qhi[..., None])
+                   & (pstart[None, None, :] < kv_len[:, None, None]))
+    # Frontier pages (overlapping this block's own queries, clamped to
+    # the resident prefix) + the recent window are kept unconditionally.
+    flo = jnp.maximum(qlo // page_size - recent_pages, 0)
+    fhi = jnp.minimum(qhi, kv_len[:, None] - 1) // page_size
+    pidx = jnp.arange(n_pages, dtype=jnp.int32)
+    forced = ((pidx[None, None, :] >= flo[..., None])
+              & (pidx[None, None, :] <= fhi[..., None]))
+
+    part_h = jnp.broadcast_to(
+        participate[:, :, None, :], (b, nqb, hkv, n_pages))
+    keep = page_nucleus_mask(scores, part_h, top_p, iters=iters)
+    survivors = (keep | forced[:, :, None, :]) & part_h
+    return survivors, part_h
+
+
+def sparse_prefill_attend(
+    q: jax.Array,  # (b, s, hq, d)
+    keys: jax.Array,  # (b, n, hkv, d) contiguous or (P, hkv, d) pooled
+    values: jax.Array,  # same layout as keys
+    kmax: jax.Array,  # (b, n_pages, hkv, d) or pool meta (num_pages, hkv, d)
+    kmin: jax.Array,  # same layout as kmax
+    *,
+    top_p: float,
+    page_size: int,
+    kv_len: jax.Array | int | None = None,
+    q_offset: jax.Array | int = 0,
+    n_valid: jax.Array | None = None,
+    page_table: jax.Array | None = None,  # (b, max_pages) i32 — pooled
+    q_block: int = DEFAULT_Q_BLOCK,
+    iters: int = 24,
+    recent_pages: int = 1,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    return_aux: bool = False,
+):
+    """Hierarchical top-p sparse prefill: (b, s, hq, d) output.
+
+    ``use_kernel=None`` resolves to the Pallas kernel on a real TPU and
+    the jnp bias path elsewhere; either way the kernel falls back when
+    ``sparse_prefill_fits`` says the tile would overflow VMEM.  With
+    ``return_aux=True`` also returns ``{"survivors", "participate"}``
+    (both (b, nqb, hkv, n_pages) bool) for live-page telemetry.
+    """
+    b, s, hq, d = q.shape
+    pooled = keys.ndim == 3
+    if pooled:
+        if page_table is None:
+            raise ValueError("pooled K/V need a page_table")
+        n = page_table.shape[1] * page_size
+        kmaxg = jnp.take(kmax, page_table, axis=0)  # (b, max_pages, hkv, d)
+        kming = jnp.take(kmin, page_table, axis=0)
+    else:
+        n = keys.shape[1]
+        if n % page_size:
+            raise ValueError(f"n={n} not a page_size={page_size} multiple")
+        kmaxg, kming = kmax, kmin
+    hkv = kmaxg.shape[2]
+    group = hq // hkv
+    n_pages = n // page_size
+    if kv_len is None:
+        kv_len = n
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+    off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+
+    if top_p >= 1.0:
+        # Statically dense: bit-for-bit the plain mha_attention prefill
+        # (the decode pipeline's page_top_p=1.0 convention).  Both call
+        # sites have a uniform query offset across the batch (contiguous
+        # prefill: 0; the chunk walker runs one slot at a time), so
+        # off[0] is exact here.
+        if pooled:
+            k_log = gather_logical_rows(keys, page_table, page_size)
+            v_log = gather_logical_rows(values, page_table, page_size)
+        else:
+            k_log, v_log = keys, values
+        out = mha_attention(q, k_log, v_log, causal=True, q_offset=off[0])
+        if return_aux:
+            part = ((jnp.arange(n_pages) * page_size)[None, None, None, :]
+                    < kv_len[:, None, None, None])
+            part = jnp.broadcast_to(part, (b, 1, hkv, n_pages))
+            return out, {"survivors": part, "participate": part}
+        return out
+
+    pad = (-s) % q_block
+    q_pad = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_pad = s + pad
+    nqb = s_pad // q_block
+    if n_valid is None:
+        n_valid = jnp.full((b,), s, jnp.int32)
+    else:
+        n_valid = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (b,))
+    survivors, participate = prefill_page_survivors(
+        q_pad, kmaxg, kming, top_p=top_p, page_size=page_size,
+        kv_len=kv_len, q_offset=off, n_valid=n_valid, q_block=q_block,
+        iters=iters, recent_pages=recent_pages)
+
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    use_kernel = use_kernel and sparse_prefill_fits(
+        n, d, group, keys.dtype.itemsize, q_block=q_block,
+        page_size=page_size, interpret=interpret)
+
+    if use_kernel:
+        blk = coalesce_block(page_size, page_size)
+        sub = page_size // blk
+        nb = n_pages * sub
+        surv_b = jnp.repeat(survivors, sub, axis=3)  # page -> sub-blocks
+        surv_b = surv_b.transpose(0, 2, 1, 3).reshape(b * hkv, nqb, nb)
+        if pooled:
+            base = page_table.astype(jnp.int32) * page_size  # (b, max_pages)
+            rows = (base[..., None]
+                    + jnp.arange(0, page_size, blk, dtype=jnp.int32))
+            rows = rows.reshape(b, nb)
+        else:
+            rows = jnp.broadcast_to(
+                jnp.arange(nb, dtype=jnp.int32) * blk, (b, nb))
+        rows = jnp.broadcast_to(rows[:, None], (b, hkv, nb)).reshape(-1, nb)
+        kv_b = jnp.broadcast_to(
+            kv_len[:, None], (b, hkv)).reshape(-1, 1)
+        off_b = jnp.broadcast_to(off[:, None], (b, hkv)).reshape(-1, 1)
+        qk = q_pad.reshape(b, nqb, q_block, hkv, group, d)
+        qk = qk.transpose(0, 3, 1, 2, 4, 5)
+        qk = qk.reshape(b * hkv, nqb, q_block * group, d)
+        out = sparse_prefill_rows(
+            qk, surv_b, rows, kv_b, off_b, keys, values,
+            sm_scale=1.0 / math.sqrt(d), hkv=hkv, group=group,
+            q_block=q_block, pooled=pooled, page_size=page_size,
+            interpret=interpret)
+        out = out.reshape(b, hkv, nqb, q_block, group, d)
+        out = out.transpose(0, 2, 3, 1, 4, 5).reshape(b, s_pad, hq, d)
+    else:
+        # jnp fallback: identical survivor mask, applied as an additive
+        # finite bias through the dense prefill attention.
+        if pooled:
+            k_log = gather_logical_rows(keys, page_table, page_size)
+            v_log = gather_logical_rows(values, page_table, page_size)
+        else:
+            k_log, v_log = keys, values
+        allow = jnp.repeat(survivors, q_block, axis=1)  # (b, s_pad, hkv, np)
+        allow = jnp.repeat(allow, page_size, axis=3)  # (b, s_pad, hkv, n)
+        bias = jnp.where(allow.transpose(0, 2, 1, 3), 0.0, NEG_INF)
+        bias = jnp.repeat(bias, group, axis=1)  # (b, hq, s_pad, n)
+        klive = jnp.arange(n, dtype=jnp.int32)[None, :] < kv_len[:, None]
+        bias = jnp.where(klive[:, None, None, :], bias, NEG_INF)
+        out = mha_attention(q_pad, k_log, v_log, causal=True,
+                            q_offset=off[0], bias=bias)
+
+    out = out[:, :s]
+    if return_aux:
+        return out, {"survivors": survivors, "participate": participate}
+    return out

@@ -1,0 +1,69 @@
+"""Pure-jnp oracle for the block-sparse flash-prefill kernel.
+
+Dense f32 masked attention honoring exactly the kernel's mask algebra:
+a query row attends key position ``t`` iff
+
+* ``t <= q_offset + row_position``  (causal, chunk-offset aware),
+* ``t < kv_len``                    (resident prefix only), and
+* the row's query block kept ``t``'s kv block in the survivor operand.
+
+The kernel's numerics are an online-softmax reordering of this closed
+form, so tests compare with fp tolerances; the *mask* semantics — which
+(query, key) pairs participate at all — are bit-identical by
+construction, which is what the all-dead / all-live / single-page edge
+tests pin.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF
+
+
+def sparse_prefill_ref(
+    q: jax.Array,  # (B, nqb, qr, d) — kernel layout, qr = q_block * group
+    keys: jax.Array,  # (B, n, d) — pre-gathered, logical key order
+    values: jax.Array,  # (B, n, d)
+    survivors: jax.Array,  # (B, nqb, nb) bool/int8 — kv-block keep mask
+    *,
+    kv_len: jax.Array,  # (B,) i32 — resident prefix length per slot
+    q_offset: jax.Array,  # (B,) i32 — position of each block's first query
+    group: int,
+    q_block: int,
+    sm_scale: float,
+) -> jax.Array:
+    """Dense reference: (B, nqb, qr, d) output in the kernel's layout.
+
+    Fully-masked query rows (every key dead or acausal) emit exact zeros,
+    matching the kernel's ``l == 0`` contract.
+    """
+    B, nqb, qr, d = q.shape
+    n = keys.shape[1]
+    nb = survivors.shape[-1]
+    blk = n // nb
+
+    qf = q.astype(jnp.float32)
+    kf = keys.astype(jnp.float32)
+    vf = values.astype(jnp.float32)
+
+    # Query row r in block qb sits at position q_offset + qb*q_block + r//group.
+    qpos = (q_offset[:, None, None]
+            + jnp.arange(nqb, dtype=jnp.int32)[None, :, None] * q_block
+            + jnp.arange(qr, dtype=jnp.int32)[None, None, :] // group)
+    kpos = jnp.arange(n, dtype=jnp.int32)
+
+    scores = jnp.einsum("bqrd,bnd->bqrn", qf, kf) * sm_scale
+    keep = (survivors != 0)[:, :, None, :]  # (B, nqb, 1, nb)
+    keep = jnp.broadcast_to(
+        keep[..., None], (B, nqb, 1, nb, blk)).reshape(B, nqb, 1, n)
+    mask = (kpos[None, None, None, :] <= qpos[..., None]) & keep
+    mask &= kpos[None, None, None, :] < kv_len[:, None, None, None]
+
+    scores = jnp.where(mask, scores, NEG_INF)
+    mx = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(scores - mx), 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bqrn,bnd->bqrd", p, vf) / jnp.maximum(denom, 1e-30)
+    return jnp.where(denom > 0.0, out, 0.0)

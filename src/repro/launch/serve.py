@@ -20,9 +20,13 @@ estimate/top-p/attend tail as one Pallas launch per layer per decode
 step.  ``--page-top-p P`` turns on the hierarchical page→token nucleus: the
 selector keeps the smallest set of candidate pages reaching page-score
 mass P before the token-level top-p prunes inside them.
+``--prefill-top-p P`` applies the same page nucleus to the *prefill*
+path: each query block attends only the pages whose Quest upper-bound
+scores reach mass P (1.0 is the dense-oracle mode, bit-exact vs flash).
 ``--run-stats`` collects survivor-run telemetry (contiguous-run
 histogram, pages touched per step, and — under ``--page-top-p`` — the
-live-candidate-pages histogram) and prints the session summary;
+live-candidate-pages histogram; under ``--prefill-top-p`` — live vs
+candidate prefill pages) and prints the session summary;
 ``--decode-window K`` lets the paged engine decode up to K queued
 tokens per slot in one fused launch (speeds preemption replay).
 ``--compare`` runs
@@ -131,6 +135,12 @@ def _run(cfg, args, reqs, *, paged: bool, prefix_share: bool = False,
                       f"pages/step, {rs['cand_rows_per_step']:.1f} live "
                       f"slots/step; live-pages histogram (log2): "
                       f"{rs['live_page_hist']}")
+            if rs["prefill_qblocks"] > 0:
+                print(f"[serve] sparse prefill: "
+                      f"{rs['prefill_pages_live']:.0f} of "
+                      f"{rs['prefill_pages_cand']:.0f} candidate pages "
+                      f"attended ({100 * rs['prefill_live_frac']:.1f}%) "
+                      f"across {rs['prefill_qblocks']:.0f} query blocks")
     return total_tokens / wall
 
 
@@ -180,6 +190,11 @@ def main() -> None:
                          "of candidate pages whose softmaxed page scores "
                          "reach this mass before the token-level top-p "
                          "(1.0 = keep all, identical to the flat pipeline)")
+    ap.add_argument("--prefill-top-p", type=float, default=None,
+                    help="hierarchical top-p sparse prefill: per query "
+                         "block, attend only the smallest set of pages "
+                         "whose Quest upper-bound scores reach this mass "
+                         "(1.0 = dense-oracle mode, bit-exact vs flash)")
     ap.add_argument("--decode-window", type=int, default=1,
                     help="decode up to K queued tokens per slot per fused "
                          "launch (paged, attention-only stacks; >1 "
@@ -189,7 +204,8 @@ def main() -> None:
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if (args.selector or args.fused or args.run_stats
-            or args.page_top_p is not None):
+            or args.page_top_p is not None
+            or args.prefill_top_p is not None):
         import dataclasses
         tw = cfg.twilight
         if args.selector:
@@ -200,6 +216,8 @@ def main() -> None:
             tw = dataclasses.replace(tw, collect_run_stats=True)
         if args.page_top_p is not None:
             tw = dataclasses.replace(tw, page_top_p=args.page_top_p)
+        if args.prefill_top_p is not None:
+            tw = dataclasses.replace(tw, prefill_top_p=args.prefill_top_p)
         cfg = cfg.replace(twilight=tw)
     rng = np.random.default_rng(args.seed)
     reqs = _build_requests(cfg, args, rng)

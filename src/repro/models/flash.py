@@ -26,6 +26,26 @@ def _blockify(x: jax.Array, block: int) -> jax.Array:
     return jnp.moveaxis(x.reshape(b, s // block, block, h, d), 1, 0)
 
 
+def _choose_block(s: int, q_block: int) -> int:
+    """Query tile size: the preferred block, capped at the sequence.
+
+    Ragged sequences are padded up to a block multiple and the tail rows
+    sliced away — the block size never degrades to tiny divisors (the old
+    ``while s % q_block: q_block -= 1`` collapsed to 1 for prime lengths
+    like 8191, serializing the whole scan).
+    """
+    return max(1, min(q_block, s))
+
+
+def _pad_rows(x: jax.Array, pad: int, axis: int = 1,
+              value: float = 0.0) -> jax.Array:
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
 def _scores(qb, k, hkv, sm_scale):
     """qb: (b, blk, hq, d), k: (b, n, hkv, d) -> (b, hkv, g, blk, n) f32."""
     b, blk, hq, d = qb.shape
@@ -53,11 +73,11 @@ def _flash_fwd_impl(q, k, v, causal, q_block, q_offset):
     b, s, hq, d = q.shape
     n, hkv = k.shape[1], k.shape[2]
     g = hq // hkv
-    q_block = min(q_block, s)
-    while s % q_block:
-        q_block -= 1
+    q_block = _choose_block(s, q_block)
+    pad = (-s) % q_block
+    sp = s + pad
     sm_scale = d ** -0.5
-    qb_all = _blockify(q, q_block)  # (nb, b, blk, hq, d)
+    qb_all = _blockify(_pad_rows(q, pad), q_block)  # (nb, b, blk, hq, d)
 
     def one_block(blk_idx, qb):
         sc = _scores(qb, k, hkv, sm_scale)  # (b, hkv, g, blk, n)
@@ -76,14 +96,15 @@ def _flash_fwd_impl(q, k, v, causal, q_block, q_offset):
         blk_idx, qb = inp
         return None, one_block(blk_idx, qb)
 
-    nb = s // q_block
+    nb = sp // q_block
     _, (ob, lse) = jax.lax.scan(
         scan_body, None, (jnp.arange(nb), qb_all))
-    # ob: (nb, b, hkv, g, blk, d) -> (b, s, hq, d)
+    # ob: (nb, b, hkv, g, blk, d) -> (b, s, hq, d); pad rows sliced away.
     o = jnp.moveaxis(ob, 0, 3)  # (b, hkv, g, nb, blk, d)
-    o = o.reshape(b, hkv, g, s, d)
-    o = jnp.moveaxis(o.reshape(b, hq, s, d), 1, 2).astype(q.dtype)
-    lse = jnp.moveaxis(lse, 0, 3).reshape(b, hkv, g, s)  # (b,hkv,g,s)
+    o = o.reshape(b, hkv, g, sp, d)
+    o = jnp.moveaxis(o.reshape(b, hq, sp, d), 1, 2).astype(q.dtype)
+    o = o[:, :s]
+    lse = jnp.moveaxis(lse, 0, 3).reshape(b, hkv, g, sp)[..., :s]
     return o, lse
 
 
@@ -97,18 +118,21 @@ def _flash_bwd(causal, q_block, q_offset, res, do):
     b, s, hq, d = q.shape
     n, hkv = k.shape[1], k.shape[2]
     g = hq // hkv
-    q_block = min(q_block, s)
-    while s % q_block:
-        q_block -= 1
+    q_block = _choose_block(s, q_block)
+    pad = (-s) % q_block
+    sp = s + pad
     sm_scale = d ** -0.5
-    nb = s // q_block
+    nb = sp // q_block
 
-    qb_all = _blockify(q, q_block)
-    do_all = _blockify(do.astype(jnp.float32), q_block)
-    o_all = _blockify(o.astype(jnp.float32), q_block)
-    # lse (b, hkv, g, s) -> (nb, b, hkv, g, blk)
+    qb_all = _blockify(_pad_rows(q, pad), q_block)
+    do_all = _blockify(_pad_rows(do.astype(jnp.float32), pad), q_block)
+    o_all = _blockify(_pad_rows(o.astype(jnp.float32), pad), q_block)
+    # lse (b, hkv, g, s) -> (nb, b, hkv, g, blk).  Pad rows carry +inf so
+    # p = exp(sc - inf) = 0 exactly: they contribute nothing to dk/dv and
+    # their dq rows (sliced below) stay finite.
     lse_all = jnp.moveaxis(
-        lse.reshape(b, hkv, g, nb, q_block), 3, 0)
+        _pad_rows(lse, pad, axis=3, value=jnp.inf
+                  ).reshape(b, hkv, g, nb, q_block), 3, 0)
 
     kf = k.astype(jnp.float32)
     vf = v.astype(jnp.float32)
@@ -139,7 +163,7 @@ def _flash_bwd(causal, q_block, q_offset, res, do):
     (dk, dv), dq_blocks = jax.lax.scan(
         scan_body, (dk0, dv0),
         (jnp.arange(nb), qb_all, do_all, o_all, lse_all))
-    dq = jnp.moveaxis(dq_blocks, 0, 1).reshape(b, s, hq, d)
+    dq = jnp.moveaxis(dq_blocks, 0, 1).reshape(b, sp, hq, d)[:, :s]
     return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
 

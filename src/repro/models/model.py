@@ -40,6 +40,7 @@ from repro.core.attention import full_decode_attention, mha_attention
 from repro.core.selectors import PageMeta, SelectionContext
 from repro.core.twilight import (twilight_decode_attention,
                                  twilight_decode_window_attention)
+from repro.kernels.sparse_prefill.ops import sparse_prefill_attend
 from repro.models import layers as ly
 from repro.models import ssm as ssm_lib
 from repro.models import xlstm as xlstm_lib
@@ -562,13 +563,35 @@ def _attn_prefill(bp: Params, cfg: ModelConfig, h: jax.Array,
                   positions: jax.Array, n_max: int) -> tuple[jax.Array, Params]:
     b, s, _ = h.shape
     q, k, v = ly.attn_qkv(bp, cfg, h, positions)
-    out = mha_attention(q, k, v, causal=True)
+    tw = cfg.twilight
+    if tw.enabled and tw.prefill_top_p is not None:
+        # Hierarchical top-p sparse prefill: per query block the Quest
+        # page upper bound picks a page nucleus and only surviving pages
+        # are attended (kernels/sparse_prefill).  The page min/max here
+        # equal what the decode cache stores below (tail pages reduce
+        # over their resident rows only).  top_p=1.0 statically takes the
+        # dense mha_attention bypass inside the wrapper — the bit-exact
+        # oracle mode.
+        ps = tw.page_size
+        n_pad = -(-s // ps) * ps
+        kpad = jnp.pad(k, ((0, 0), (0, n_pad - s), (0, 0), (0, 0)))
+        vpad = jnp.pad(v, ((0, 0), (0, n_pad - s), (0, 0), (0, 0)))
+        neg = jnp.finfo(jnp.float32).min
+        live = (jnp.arange(n_pad) < s)[None, :, None, None]
+        k32 = kpad.astype(jnp.float32)
+        kgrid = (b, n_pad // ps, ps, cfg.n_kv_heads, cfg.d_head)
+        kmax = jnp.where(live, k32, neg).reshape(kgrid).max(axis=2)
+        kmin = jnp.where(live, k32, -neg).reshape(kgrid).min(axis=2)
+        out = sparse_prefill_attend(q, kpad, vpad, kmax, kmin,
+                                    top_p=tw.prefill_top_p, page_size=ps,
+                                    kv_len=s)
+    else:
+        out = mha_attention(q, k, v, causal=True)
     out = out.reshape(b, s, cfg.n_heads * cfg.d_head) @ bp["wo"]
 
     cache = _attn_cache_init(cfg, b, n_max)
     cache["k"] = cache["k"].at[:, :s].set(k)
     cache["v"] = cache["v"].at[:, :s].set(v)
-    tw = cfg.twilight
     if tw.enabled:
         qt = quant_lib.quantize_int4(k.astype(jnp.float32))
         cache["qk_packed"] = cache["qk_packed"].at[:, :s].set(qt.packed)
@@ -828,7 +851,7 @@ def _attn_prefill_chunk(bp: Params, cfg: ModelConfig, h: jax.Array,
                         cache: Params, page_table: jax.Array,
                         slot: jax.Array, start: jax.Array,
                         n_valid: jax.Array, is_last: jax.Array
-                        ) -> tuple[jax.Array, Params]:
+                        ) -> tuple[jax.Array, Params, jax.Array]:
     """One attention layer over one prefill chunk, writing pool pages.
 
     h: (1, C, d_model) — C is the (static, bucketed) chunk length, a
@@ -836,7 +859,10 @@ def _attn_prefill_chunk(bp: Params, cfg: ModelConfig, h: jax.Array,
     real; the rest is padding whose K/V rows are routed to the null page.
     Attention gathers the slot's whole logical view through its page
     table, so the chunk attends to the already-resident prefix (cached or
-    written by earlier chunks) plus itself, causally.
+    written by earlier chunks) plus itself, causally — or, with
+    ``prefill_top_p`` set, block-sparsely against the page-nucleus
+    survivors only.  Also returns the (RUN_STATS_LEN,) prefill telemetry
+    vector (zeros on the dense path).
     """
     from repro.core.selectors import gather_logical_rows
 
@@ -866,8 +892,11 @@ def _attn_prefill_chunk(bp: Params, cfg: ModelConfig, h: jax.Array,
         # Quest metadata for every page the chunk touches.  A page whose
         # first row lies inside the chunk is fresh (overwrite); a page
         # partially filled before this chunk (COW append) merges with its
-        # existing stats.  Pages with no valid contribution write junk to
-        # the null page — never trusted.
+        # existing stats.  Only j = 0 can be such a boundary page — for
+        # j >= 1 the page's first row ``lp * ps = (start // ps + j) * ps``
+        # is always >= start, so the merge gathers are skipped statically
+        # and the chunk's own reduction overwrites.  Pages with no valid
+        # contribution write junk to the null page — never trusted.
         neg = jnp.finfo(jnp.float32).min
         k32 = k1.astype(jnp.float32)
         for j in range(C // ps + 1):
@@ -880,13 +909,18 @@ def _attn_prefill_chunk(bp: Params, cfg: ModelConfig, h: jax.Array,
             phys_p = jnp.where(
                 any_c, jnp.take(page_table, jnp.minimum(lp, max_pages - 1)),
                 _NULL_PAGE)
-            fresh = (lp * ps) >= start
-            old_max = jnp.take(cache["pmax"], phys_p, axis=0
-                               ).astype(jnp.float32)
-            old_min = jnp.take(cache["pmin"], phys_p, axis=0
-                               ).astype(jnp.float32)
-            new_max = jnp.where(fresh, kmax_c, jnp.maximum(old_max, kmax_c))
-            new_min = jnp.where(fresh, kmin_c, jnp.minimum(old_min, kmin_c))
+            if j == 0:
+                fresh = start % ps == 0
+                old_max = jnp.take(cache["pmax"], phys_p, axis=0
+                                   ).astype(jnp.float32)
+                old_min = jnp.take(cache["pmin"], phys_p, axis=0
+                                   ).astype(jnp.float32)
+                new_max = jnp.where(fresh, kmax_c,
+                                    jnp.maximum(old_max, kmax_c))
+                new_min = jnp.where(fresh, kmin_c,
+                                    jnp.minimum(old_min, kmin_c))
+            else:
+                new_max, new_min = kmax_c, kmin_c
             cache["pmax"] = cache["pmax"].at[phys_p].set(
                 new_max.astype(cache["pmax"].dtype))
             cache["pmin"] = cache["pmin"].at[phys_p].set(
@@ -894,14 +928,34 @@ def _attn_prefill_chunk(bp: Params, cfg: ModelConfig, h: jax.Array,
             if "h2o_mass" in cache:
                 # Pages the chunk starts fresh drop any recycled mass; a
                 # partially-resident page (COW append) keeps the mass
-                # ``copy_page`` carried over from its source.
-                old_mass = jnp.take(cache["h2o_mass"], phys_p, axis=0)
-                cache["h2o_mass"] = cache["h2o_mass"].at[phys_p].set(
-                    jnp.where(fresh, 0.0, old_mass))
+                # ``copy_page`` carried over from its source.  Same
+                # static split: only j = 0 can be partially resident.
+                if j == 0:
+                    old_mass = jnp.take(cache["h2o_mass"], phys_p, axis=0)
+                    cache["h2o_mass"] = cache["h2o_mass"].at[phys_p].set(
+                        jnp.where(fresh, 0.0, old_mass))
+                else:
+                    cache["h2o_mass"] = cache["h2o_mass"].at[phys_p].set(0.0)
 
-    k_log = gather_logical_rows(cache["k"], page_table[None], ps)
-    v_log = gather_logical_rows(cache["v"], page_table[None], ps)
-    out = mha_attention(q, k_log, v_log, causal=True, q_offset=start)
+    rs = jnp.zeros((runs_lib.RUN_STATS_LEN,), jnp.float32)
+    if tw.enabled and tw.prefill_top_p is not None:
+        # Sparse chunked prefill: the chunk's query blocks attend only
+        # their page-nucleus survivors, streamed straight from the pool
+        # through the page table — the O(n) logical K/V gather below is
+        # skipped entirely on this path.  top_p=1.0 is the oracle mode:
+        # the wrapper's static bypass runs exactly the dense gather +
+        # mha_attention of the else branch, bit for bit.
+        out, aux = sparse_prefill_attend(
+            q, cache["k"], cache["v"], cache["pmax"], cache["pmin"],
+            top_p=tw.prefill_top_p, page_size=ps,
+            kv_len=start + n_valid, q_offset=start, n_valid=n_valid,
+            page_table=page_table[None], return_aux=True)
+        rs = runs_lib.prefill_page_stats(aux["survivors"],
+                                         aux["participate"])
+    else:
+        k_log = gather_logical_rows(cache["k"], page_table[None], ps)
+        v_log = gather_logical_rows(cache["v"], page_table[None], ps)
+        out = mha_attention(q, k_log, v_log, causal=True, q_offset=start)
     out = out.reshape(1, C, cfg.n_heads * cfg.d_head) @ bp["wo"]
 
     if tw.enabled and "ds_channels" in cache:
@@ -914,23 +968,24 @@ def _attn_prefill_chunk(bp: Params, cfg: ModelConfig, h: jax.Array,
             n_cap = max_pages * ps
             tot = start + n_valid
             live_rows = (jnp.arange(n_cap) < tot)[:, None, None]
+            k_cal = gather_logical_rows(cache["k"], page_table[None], ps)
             stat = jnp.sum(
                 jnp.where(live_rows,
-                          jnp.abs(k_log[0].astype(jnp.float32)), 0.0),
+                          jnp.abs(k_cal[0].astype(jnp.float32)), 0.0),
                 axis=0) / tot.astype(jnp.float32)
             return jax.lax.top_k(stat, 16)[1].astype(jnp.int32)
 
         old_row = jnp.take(cache["ds_channels"], slot, axis=0)
         new_row = jax.lax.cond(is_last, _calibrate, lambda _: old_row, None)
         cache["ds_channels"] = cache["ds_channels"].at[slot].set(new_row)
-    return out.astype(h.dtype), cache
+    return out.astype(h.dtype), cache, rs
 
 
 def prefill_chunk(params: Params, cfg: ModelConfig, state: Params,
                   tokens: jax.Array, page_table: jax.Array, slot: jax.Array,
                   start: jax.Array, n_valid: jax.Array,
                   is_last: jax.Array | bool = True
-                  ) -> tuple[jax.Array, Params]:
+                  ) -> tuple[jax.Array, Params, dict[str, jax.Array]]:
     """Prefill one fixed-size chunk of one slot's prompt into pool pages.
 
     tokens: (C,) i32 (C static, a multiple of page_size — the engine
@@ -941,8 +996,11 @@ def prefill_chunk(params: Params, cfg: ModelConfig, state: Params,
     engine slot (for per-slot calibration state); start/n_valid: () i32;
     is_last: () bool — the prompt's final chunk (runs the per-slot
     Double-Sparsity calibration, skipped as dead work on earlier chunks).
-    Returns (logits (1, C, padded_vocab), state).  Attention-only stacks
-    only — see :func:`supports_chunked_prefill`.
+    Returns (logits (1, C, padded_vocab), state, stats) where stats
+    carries ``prefill_run_stats``: the (RUN_STATS_LEN,) sparse-prefill
+    live-page telemetry summed over layers (zeros when ``prefill_top_p``
+    is off).  Attention-only stacks only — see
+    :func:`supports_chunked_prefill`.
     """
     specs, repeats = layer_schedule(cfg)
     if not supports_chunked_prefill(cfg):
@@ -951,16 +1009,18 @@ def prefill_chunk(params: Params, cfg: ModelConfig, state: Params,
                          "cross-attention, or modality frontend)")
     x = jnp.take(params["embed"], tokens, axis=0)[None]  # (1, C, d)
 
-    def period_body(x, xs_slice):
+    def period_body(carry, xs_slice):
+        x, rs_sum = carry
         bp_slice, st_slice = xs_slice
         new_states = []
         for p_idx, spec in enumerate(specs):
             bp, st = bp_slice[p_idx], st_slice[p_idx]
             h = ly.rms_norm(x, bp["norm1"], cfg.norm_eps)
-            mix, st = _attn_prefill_chunk(bp["mixer"], cfg, h, st,
-                                          page_table, slot, start, n_valid,
-                                          jnp.asarray(is_last))
+            mix, st, rs = _attn_prefill_chunk(bp["mixer"], cfg, h, st,
+                                              page_table, slot, start,
+                                              n_valid, jnp.asarray(is_last))
             x = x + mix
+            rs_sum = rs_sum + rs
             if "ffn" in bp:
                 h2 = ly.rms_norm(x, bp["norm2"], cfg.norm_eps)
                 if spec.is_moe:
@@ -969,15 +1029,16 @@ def prefill_chunk(params: Params, cfg: ModelConfig, state: Params,
                     y = ly.mlp_apply(bp["ffn"], h2)
                 x = x + y
             new_states.append(st)
-        return x, new_states
+        return (x, rs_sum), new_states
 
-    x, new_blocks = jax.lax.scan(period_body, x,
-                                 (params["blocks"], state["blocks"]),
-                                 length=repeats)
+    (x, rs_sum), new_blocks = jax.lax.scan(
+        period_body,
+        (x, jnp.zeros((runs_lib.RUN_STATS_LEN,), jnp.float32)),
+        (params["blocks"], state["blocks"]), length=repeats)
     x = ly.rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = x @ head
-    return logits, {"blocks": new_blocks}
+    return logits, {"blocks": new_blocks}, {"prefill_run_stats": rs_sum}
 
 
 def _selection_ctx_paged(cfg: ModelConfig, cache: Params,

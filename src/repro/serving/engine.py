@@ -840,11 +840,17 @@ class DecodeEngine:
         toks = np.zeros((c,), np.int32)
         toks[:n_valid] = run.prompt[start:start + n_valid]
         is_last = run.sfx_done + n_valid >= run.suffix_len
-        logits, self._state = self._chunk(
+        logits, self._state, pstats = self._chunk(
             self.params, self._state, jnp.asarray(toks),
             jnp.asarray(self._pt[slot]), jnp.int32(slot), jnp.int32(start),
             jnp.int32(n_valid), jnp.asarray(is_last))
         self._bump("prefill_chunks")
+        if self.cfg.twilight.collect_run_stats:
+            # Sparse-prefill live-page telemetry accumulates into the same
+            # session vector as the decode run stats (disjoint slots, so
+            # the decode summaries are unchanged); chunks do not count as
+            # decode steps.
+            self._rs_sum = self._rs_sum + pstats["prefill_run_stats"]
         run.sfx_done += n_valid
         if run.sfx_done >= run.suffix_len:
             if run.tok0 is None:

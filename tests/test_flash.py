@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core.attention import mha_attention
-from repro.models.flash import flash_attention
+from repro.models.flash import _choose_block, flash_attention
 
 
 @pytest.mark.parametrize("s,n,q_block", [(256, 256, 64), (128, 384, 128),
@@ -28,6 +28,46 @@ def test_flash_forward(rng, s, n, q_block, hq, hkv, causal):
 
 def test_flash_gradients(rng):
     b, s, hq, hkv, d = 2, 192, 8, 2, 32
+    q = jnp.asarray(rng.normal(size=(b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+
+    def loss_flash(q, k, v):
+        return jnp.sum(jnp.tanh(flash_attention(q, k, v, True, 64, 0)))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.tanh(mha_attention(q, k, v, causal=True)))
+
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_flash_block_choice_prime_length():
+    # Regression: the old divisor search (`while s % q_block: q_block -= 1`)
+    # collapsed the tile to 1 for prime lengths like 8191, serializing the
+    # whole scan.  Pad-and-mask keeps the preferred block.
+    assert _choose_block(8191, 512) == 512
+    assert _choose_block(257, 64) == 64
+    assert _choose_block(16, 64) == 16  # short seq: cap at s
+
+
+@pytest.mark.parametrize("s", [257, 191])
+def test_flash_odd_length_forward(rng, s):
+    d, hq, hkv = 32, 4, 2
+    q = jnp.asarray(rng.normal(size=(2, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, s, hkv, d)), jnp.float32)
+    out = flash_attention(q, k, v, True, 64, 0)
+    ref = mha_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_odd_length_gradients(rng):
+    b, s, hq, hkv, d = 1, 131, 4, 2, 32
     q = jnp.asarray(rng.normal(size=(b, s, hq, d)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)

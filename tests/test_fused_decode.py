@@ -410,7 +410,8 @@ def test_run_length_stats_matches_rle_reference(rng):
 def test_summarize_run_stats_arithmetic():
     vec = np.zeros(runs_lib.RUN_STATS_LEN)
     vec[:3] = [4, 2, 1]  # 7 runs in the histogram
-    vec[runs_lib.RUN_HIST_BUCKETS:] = [7, 5, 21]
+    hb = runs_lib.RUN_HIST_BUCKETS
+    vec[hb:hb + 3] = [7, 5, 21]
     s = runs_lib.summarize_run_stats(vec, steps=7)
     assert s["steps"] == 7
     assert s["run_hist"][:3] == [4, 2, 1]
@@ -418,6 +419,10 @@ def test_summarize_run_stats_arithmetic():
     assert s["pages_per_step"] == 5 / 7
     assert s["kept_per_step"] == 3.0
     assert s["mean_run_len"] == 3.0
+    # Sections past the legacy triple stay zeroed on a flat decode vector.
+    assert s["cand_pages_per_step"] == 0.0
+    assert s["prefill_pages_live"] == 0.0
+    assert s["prefill_live_frac"] == 0.0
 
 
 # ---------------------------------------------------------------------------

@@ -226,9 +226,9 @@ def test_cow_write_leaves_source_page_intact(rng):
     pt = np.zeros((max_pages,), np.int32)
     pt[:2] = pages
     prompt = rng.integers(8, cfg.vocab_size, 2 * ps).astype(np.int32)
-    _, state = prefill_chunk(params, cfg, state, jnp.asarray(prompt),
-                             jnp.asarray(pt), jnp.int32(0), jnp.int32(0),
-                             jnp.int32(len(prompt)))
+    _, state, _ = prefill_chunk(params, cfg, state, jnp.asarray(prompt),
+                                jnp.asarray(pt), jnp.int32(0), jnp.int32(0),
+                                jnp.int32(len(prompt)))
 
     src = pages[-1]
     snap = {}
@@ -245,10 +245,10 @@ def test_cow_write_leaves_source_page_intact(rng):
     pt2 = pt.copy()
     pt2[1] = dst
     other = (prompt[-1] + 1) % cfg.vocab_size
-    _, state = prefill_chunk(params, cfg, state,
-                             jnp.asarray(np.full((ps,), other, np.int32)),
-                             jnp.asarray(pt2), jnp.int32(1),
-                             jnp.int32(len(prompt) - 1), jnp.int32(1))
+    _, state, _ = prefill_chunk(params, cfg, state,
+                                jnp.asarray(np.full((ps,), other, np.int32)),
+                                jnp.asarray(pt2), jnp.int32(1),
+                                jnp.int32(len(prompt) - 1), jnp.int32(1))
 
     for li, blk in enumerate(state["blocks"]):
         for n in ("k", "v", "qk_packed"):

@@ -1,0 +1,394 @@
+"""Hierarchical top-p sparse prefill: kernel, wrapper, model, engine.
+
+Levels, mirroring how the feature is layered:
+
+* kernel — ``sparse_prefill_rows`` (interpret mode) vs the dense masked
+  oracle ``sparse_prefill_ref`` on adversarial survivor patterns
+  (all-live / all-dead / single-page / random), contiguous and pooled
+  (shuffled physical pages must be bit-identical to contiguous);
+* wrapper — ``top_p=1.0`` is bit-exact vs the dense ``mha_attention``
+  oracle in both layouts at ragged lengths; the page-survivor set is
+  monotone in p with the causal frontier always forced; the kernel and
+  the jnp bias fallback agree; ``sparse_prefill_fits`` falls back
+  automatically when the tile would overflow VMEM;
+* model — chunked prefill across a partial page boundary leaves the
+  pool's Quest min/max metadata bit-equal to ground truth recomputed
+  from the pool rows (the freshly-full-page merge skip is invisible);
+* engine — ``prefill_top_p=1.0`` is token-exact vs the dense engine for
+  every paged selector under prefix sharing + COW at ragged lengths
+  (prefix-cache insertion unchanged), and ``prefill_top_p=0.9`` serves
+  the same workload end to end with live-page telemetry flowing through
+  ``session_run_stats``.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.attention import mha_attention
+from repro.core.selectors import gather_logical_rows
+from repro.kernels.fused_decode.kernel import coalesce_block
+from repro.kernels.sparse_prefill.ops import (
+    SPARSE_PREFILL_VMEM_BUDGET,
+    prefill_page_survivors,
+    sparse_prefill_attend,
+    sparse_prefill_fits,
+    sparse_prefill_vmem_bytes,
+)
+from repro.kernels.sparse_prefill.kernel import sparse_prefill_rows
+from repro.kernels.sparse_prefill.ref import sparse_prefill_ref
+from repro.serving import DecodeEngine
+from repro.serving.paged_cache import PageAllocator
+from tests.test_prefix_cache import PAGED_SELECTORS, _shared_requests
+
+
+def _page_meta(k, kv_len, page_size):
+    """Quest min/max per page, rows >= kv_len excluded (model convention)."""
+    b, n, hkv, d = k.shape
+    neg = jnp.finfo(jnp.float32).min
+    live = (jnp.arange(n)[None, :] < kv_len[:, None])[..., None, None]
+    k32 = k.astype(jnp.float32)
+    grid = (b, n // page_size, page_size, hkv, d)
+    kmax = jnp.where(live, k32, neg).reshape(grid).max(axis=2)
+    kmin = jnp.where(live, k32, -neg).reshape(grid).min(axis=2)
+    return kmax, kmin
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs dense masked oracle
+# ---------------------------------------------------------------------------
+
+def _kernel_setup(rng, *, b=2, hkv=2, group=2, nqb=2, q_block=32, n=128,
+                  ps=16, d=32):
+    B = b * hkv
+    qr = q_block * group
+    q = jnp.asarray(rng.normal(size=(B, nqb, qr, d)), jnp.float32)
+    keys = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    values = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    blk = coalesce_block(ps, ps)
+    nb = n // blk
+    # Ragged: slot 0 full, slot 1 mid-page; queries end at the prefix end.
+    lens = np.array([n, n - 21], np.int32)[:b]
+    kv_b = np.repeat(lens, hkv).astype(np.int32)  # (B,) slot-major
+    off_b = kv_b - nqb * q_block
+    rows = np.broadcast_to(np.arange(nb, dtype=np.int32) * blk, (B, nb))
+    return (q, keys, values, jnp.asarray(rows), jnp.asarray(kv_b),
+            jnp.asarray(off_b), blk, nb)
+
+
+def _gather_heads(x, hkv):
+    """(b, n, hkv, d) -> kernel-slot-major (b*hkv, n, d)."""
+    b, n, _, d = x.shape
+    return jnp.moveaxis(x, 2, 1).reshape(b * hkv, n, d)
+
+
+@pytest.mark.parametrize("pattern",
+                         ["all_live", "all_dead", "single_page", "random"])
+def test_kernel_vs_ref_survivor_patterns(rng, pattern):
+    (q, keys, values, rows, kv_b, off_b, blk, nb) = _kernel_setup(rng)
+    B, nqb, qr, d = q.shape
+    if pattern == "all_live":
+        surv = np.ones((B, nqb, nb), np.int8)
+    elif pattern == "all_dead":
+        surv = np.zeros((B, nqb, nb), np.int8)
+    elif pattern == "single_page":
+        surv = np.zeros((B, nqb, nb), np.int8)
+        surv[:, :, 3] = 1
+    else:
+        surv = (rng.random((B, nqb, nb)) < 0.5).astype(np.int8)
+    surv = jnp.asarray(surv)
+    out = sparse_prefill_rows(
+        q, surv, rows, kv_b[:, None], off_b[:, None], keys, values,
+        sm_scale=d ** -0.5, hkv=2, group=2, q_block=32,
+        pooled=False, page_size=16, interpret=True)
+    ref = sparse_prefill_ref(
+        q, _gather_heads(keys, 2), _gather_heads(values, 2), surv,
+        kv_len=kv_b, q_offset=off_b, group=2, q_block=32, sm_scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    if pattern == "all_dead":
+        assert not np.any(np.asarray(out)), "fully-masked rows emit zeros"
+
+
+def test_kernel_pooled_bitexact_vs_contiguous(rng):
+    """Shuffled physical pages addressed through `rows` reproduce the
+    contiguous kernel bit for bit — the DMA source moves, nothing else."""
+    (q, keys, values, rows, kv_b, off_b, blk, nb) = _kernel_setup(rng, b=1)
+    B, nqb, qr, d = q.shape
+    surv = jnp.asarray((rng.random((B, nqb, nb)) < 0.6).astype(np.int8))
+    out_c = sparse_prefill_rows(
+        q, surv, rows, kv_b[:, None], off_b[:, None], keys, values,
+        sm_scale=d ** -0.5, hkv=2, group=2, q_block=32,
+        pooled=False, page_size=16, interpret=True)
+
+    # Scatter the logical pages into a shuffled pool (pool row layout:
+    # (P, hkv, d), page p_phys holds rows p_phys*ps..).
+    ps, n = 16, keys.shape[1]
+    n_pages = n // ps
+    perm = rng.permutation(n_pages + 2)[:n_pages]  # spare physical pages
+    pool_k = np.zeros(((n_pages + 2) * ps, 2, d), np.float32)
+    pool_v = np.zeros_like(pool_k)
+    for lp, pp in enumerate(perm):
+        pool_k[pp * ps:(pp + 1) * ps] = np.asarray(keys[0, lp * ps:(lp + 1) * ps])
+        pool_v[pp * ps:(pp + 1) * ps] = np.asarray(values[0, lp * ps:(lp + 1) * ps])
+    prow = (perm.astype(np.int32) * ps)[:, None] + np.arange(0, ps, blk,
+                                                             dtype=np.int32)
+    prow = np.broadcast_to(prow.reshape(-1), (B, nb))
+    out_p = sparse_prefill_rows(
+        q, surv, jnp.asarray(prow), kv_b[:, None], off_b[:, None],
+        jnp.asarray(pool_k), jnp.asarray(pool_v),
+        sm_scale=d ** -0.5, hkv=2, group=2, q_block=32,
+        pooled=True, page_size=16, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out_p))
+
+
+# ---------------------------------------------------------------------------
+# Wrapper: p=1.0 oracle, monotonicity, kernel-vs-fallback, VMEM gate
+# ---------------------------------------------------------------------------
+
+def test_p1_bitexact_contiguous_ragged(rng):
+    b, n, ps, hq, hkv, d = 2, 96, 16, 4, 2, 32
+    s = 83  # ragged: not a page multiple; keys padded to one
+    q = jnp.asarray(rng.normal(size=(b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    kmax, kmin = _page_meta(k, jnp.full((b,), s, jnp.int32), ps)
+    out = sparse_prefill_attend(q, k, v, kmax, kmin, top_p=1.0,
+                                page_size=ps, kv_len=s)
+    oracle = mha_attention(q, k, v, causal=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+
+
+@pytest.mark.parametrize("selector", PAGED_SELECTORS)
+def test_p1_bitexact_all_selectors(rng, selector):
+    """The oracle bypass is selector-independent — pin it anyway, since
+    the acceptance bar names every selector at ragged lengths."""
+    b, n, ps, hq, hkv, d = 1, 80, 16, 4, 2, 32
+    s = 71
+    q = jnp.asarray(rng.normal(size=(b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    kmax, kmin = _page_meta(k, jnp.full((b,), s, jnp.int32), ps)
+    out = sparse_prefill_attend(q, k, v, kmax, kmin, top_p=1.0,
+                                page_size=ps, kv_len=s)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(mha_attention(q, k, v, causal=True)))
+
+
+def test_p1_bitexact_pooled(rng):
+    ps, hq, hkv, d, max_pages = 16, 4, 2, 32, 6
+    s, off = 23, 41
+    kv_len = off + s
+    pool_pages = 12
+    q = jnp.asarray(rng.normal(size=(1, s, hq, d)), jnp.float32)
+    pool_k = jnp.asarray(rng.normal(size=(pool_pages * ps, hkv, d)),
+                         jnp.float32)
+    pool_v = jnp.asarray(rng.normal(size=(pool_pages * ps, hkv, d)),
+                         jnp.float32)
+    pt = jnp.asarray(rng.permutation(pool_pages)[:max_pages].astype(np.int32)
+                     )[None]
+    meta_k = pool_k.reshape(pool_pages, ps, hkv, d)
+    out = sparse_prefill_attend(
+        q, pool_k, pool_v, meta_k.max(axis=1), meta_k.min(axis=1),
+        top_p=1.0, page_size=ps, kv_len=kv_len, q_offset=off, page_table=pt)
+    k_log = gather_logical_rows(pool_k, pt, ps)
+    v_log = gather_logical_rows(pool_v, pt, ps)
+    oracle = mha_attention(q, k_log, v_log, causal=True, q_offset=off)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+
+
+def test_survivors_monotone_in_p_and_frontier_forced(rng):
+    b, s, hq, hkv, d, ps = 1, 256, 4, 2, 32, 16
+    q_block = 64
+    n = 256
+    q = jnp.asarray(rng.normal(size=(b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, n, hkv, d)) * 2.0, jnp.float32)
+    kv_len = jnp.full((b,), n, jnp.int32)
+    kmax, kmin = _page_meta(k, kv_len, ps)
+    off = jnp.zeros((b,), jnp.int32)
+    prev = None
+    for p in (0.2, 0.5, 0.8, 0.95):
+        surv, part = prefill_page_survivors(
+            q, kmax, kmin, top_p=p, page_size=ps, kv_len=kv_len,
+            q_offset=off, q_block=q_block)
+        surv = np.asarray(surv)
+        assert not np.any(surv & ~np.asarray(part))
+        if prev is not None:
+            assert np.all(~prev | surv), f"survivors not monotone at p={p}"
+        prev = surv
+        # Every query block keeps the page holding its own queries.
+        nqb = s // q_block
+        for qb in range(nqb):
+            own = (qb * q_block) // ps
+            assert surv[:, qb, :, own:own + q_block // ps].all(), \
+                f"frontier page pruned at p={p}, block {qb}"
+
+
+def test_attend_kernel_matches_bias_fallback(rng):
+    b, n, ps, hq, hkv, d = 2, 128, 16, 4, 2, 32
+    s = 97
+    q = jnp.asarray(rng.normal(size=(b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    kv_len = jnp.asarray([s, s - 30], jnp.int32)
+    kmax, kmin = _page_meta(k, kv_len, ps)
+    kw = dict(top_p=0.8, page_size=ps, kv_len=kv_len, q_block=32,
+              return_aux=True)
+    out_k, aux_k = sparse_prefill_attend(q, k, v, kmax, kmin,
+                                         use_kernel=True, interpret=True,
+                                         **kw)
+    out_j, aux_j = sparse_prefill_attend(q, k, v, kmax, kmin,
+                                         use_kernel=False, **kw)
+    np.testing.assert_array_equal(np.asarray(aux_k["survivors"]),
+                                  np.asarray(aux_j["survivors"]))
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_j),
+                               rtol=2e-5, atol=2e-5)
+    surv = np.asarray(aux_k["survivors"])
+    part = np.asarray(aux_k["participate"])
+    assert surv.sum() < part.sum(), "p=0.8 must actually prune pages"
+
+
+def test_vmem_gate_and_automatic_fallback(rng):
+    # Arithmetic pins: the budget is dominated by per-tile terms, so a
+    # serving-shaped tile fits at any context …
+    assert sparse_prefill_fits(65536, 64, 4, 2, interpret=False)
+    assert (sparse_prefill_vmem_bytes(8192, 64, 4, 2)
+            <= sparse_prefill_vmem_bytes(65536, 64, 4, 2))
+    # … while an oversized (q_block × group × d) tile does not.
+    big = dict(q_block=1024)
+    assert not sparse_prefill_fits(65536, 256, 8, 2, interpret=False, **big)
+    assert (sparse_prefill_vmem_bytes(65536, 256, 8, 2, **big)
+            > SPARSE_PREFILL_VMEM_BUDGET)
+
+    # Automatic fallback: use_kernel=True + interpret=False + a tile that
+    # fails the gate must take the jnp bias path (a real pallas_call
+    # would abort on CPU), and match the explicit fallback exactly.
+    b, s, n, ps, hq, hkv, d = 1, 1024, 2048, 64, 8, 1, 256
+    q = jnp.asarray(rng.normal(size=(b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, n, hkv, d)), jnp.float32)
+    kmax, kmin = _page_meta(k, jnp.full((b,), s, jnp.int32), ps)
+    kw = dict(top_p=0.9, page_size=ps, kv_len=s, q_block=1024)
+    out = sparse_prefill_attend(q, k, v, kmax, kmin, use_kernel=True,
+                                interpret=False, **kw)
+    ref = sparse_prefill_attend(q, k, v, kmax, kmin, use_kernel=False, **kw)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Model: chunked-prefill Quest metadata stays ground-truth exact
+# ---------------------------------------------------------------------------
+
+def test_chunk_metadata_bitexact_across_partial_boundary(rng):
+    """Two chunks meeting mid-page: page 1 is written by both (the j==0
+    merge path), pages 0 and 2 are single-writer (page 2 freshly full in
+    chunk 2, page 0 skipped entirely by the fresh-page merge skip).  The
+    pool metadata must equal min/max recomputed from the pool rows."""
+    from repro.models import init_paged_decode_state, init_params, prefill_chunk
+    cfg = get_smoke_config("qwen2-1.5b")
+    ps = cfg.twilight.page_size
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    alloc = PageAllocator(9)
+    state = init_paged_decode_state(cfg, 1, alloc.num_pages)
+    pages = alloc.alloc(3)
+    pt = np.zeros((4,), np.int32)
+    pt[:3] = pages
+    total = 2 * ps + ps // 2  # 2.5 pages
+    prompt = rng.integers(8, cfg.vocab_size, total).astype(np.int32)
+    c1 = ps + ps // 2  # chunk 1 ends mid-page-1
+    buf1 = np.zeros((2 * ps,), np.int32)
+    buf1[:c1] = prompt[:c1]
+    _, state, _ = prefill_chunk(params, cfg, state, jnp.asarray(buf1),
+                                jnp.asarray(pt), jnp.int32(0), jnp.int32(0),
+                                jnp.int32(c1), False)
+    buf2 = np.zeros((2 * ps,), np.int32)
+    buf2[:total - c1] = prompt[c1:]
+    _, state, _ = prefill_chunk(params, cfg, state, jnp.asarray(buf2),
+                                jnp.asarray(pt), jnp.int32(0), jnp.int32(c1),
+                                jnp.int32(total - c1), True)
+
+    resident = [ps, ps, ps // 2]  # live rows per logical page
+    for li, blk in enumerate(state["blocks"]):
+        if "pmax" not in blk:
+            continue
+        k = np.asarray(blk["k"], np.float32)
+        for lp, phys in enumerate(pages):
+            rows = k[:, phys * ps:phys * ps + resident[lp]]
+            np.testing.assert_array_equal(
+                np.asarray(blk["pmax"][:, phys]), rows.max(axis=1),
+                err_msg=f"layer {li} page {lp}: pmax drifted")
+            np.testing.assert_array_equal(
+                np.asarray(blk["pmin"][:, phys]), rows.min(axis=1),
+                err_msg=f"layer {li} page {lp}: pmin drifted")
+
+
+def test_contiguous_prefill_sparse_branch_close_to_dense(rng):
+    """Small prompt: the causal frontier + recent window force every page,
+    so the sparse contiguous prefill reproduces the dense logits."""
+    from repro.models import init_params, prefill
+    cfg = get_smoke_config("qwen2-1.5b")
+    sp = cfg.replace(twilight=dataclasses.replace(cfg.twilight,
+                                                  prefill_top_p=0.5))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.asarray(
+        rng.integers(8, cfg.vocab_size, (2, 19)).astype(np.int32))}
+    lg_dense, _ = prefill(params, cfg, batch, n_max=32)
+    lg_sparse, _ = prefill(params, sp, batch, n_max=32)
+    np.testing.assert_allclose(np.asarray(lg_sparse), np.asarray(lg_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Engine: oracle token-exactness + approximate serving with telemetry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("selector", PAGED_SELECTORS)
+def test_engine_prefill_oracle_token_exact(rng, selector):
+    """prefill_top_p=1.0 routes chunked prefill through the sparse
+    wrapper's dense bypass — token-exact vs the dense engine under prefix
+    sharing + COW at ragged lengths, so prefix-cache insertion (and the
+    decode that follows) is provably unchanged."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    cfg = cfg.replace(twilight=dataclasses.replace(
+        cfg.twilight, selector=selector))
+    sp_cfg = cfg.replace(twilight=dataclasses.replace(
+        cfg.twilight, prefill_top_p=1.0))
+    reqs = _shared_requests(rng, cfg)
+    base = DecodeEngine(cfg, batch_size=2, cache_capacity=64, seed=7,
+                        paged=True, prefix_share=True)
+    sp = DecodeEngine(sp_cfg, params=base.params, batch_size=2,
+                      cache_capacity=64, seed=7, paged=True,
+                      prefix_share=True)
+    want = {r.uid: r.tokens for r in base.generate(reqs)}
+    got = {r.uid: r.tokens for r in sp.generate(reqs)}
+    assert got == want
+    assert sp.last_prefix_hits >= 2
+    assert sp.last_cow_copies >= 1
+
+
+def test_engine_sparse_prefill_serves_with_telemetry(rng):
+    """prefill_top_p=0.9 end to end: the shared-prefix + COW workload
+    serves, and the live-page counters flow into session_run_stats."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    cfg = cfg.replace(twilight=dataclasses.replace(
+        cfg.twilight, prefill_top_p=0.9, collect_run_stats=True))
+    reqs = _shared_requests(rng, cfg)
+    engine = DecodeEngine(cfg, batch_size=2, cache_capacity=64, seed=7,
+                          paged=True, prefix_share=True)
+    results = {r.uid: r for r in engine.generate(reqs)}
+    assert set(results) == {r.uid for r in reqs}
+    for r in reqs:
+        got = results[r.uid]
+        assert len(got.tokens) == r.max_new_tokens
+        assert all(0 <= t < cfg.vocab_size for t in got.tokens)
+    assert engine.last_prefix_hits >= 2
+    stats = engine.session_run_stats()
+    assert stats is not None
+    assert stats["prefill_qblocks"] > 0
+    assert stats["prefill_pages_cand"] > 0
+    assert 0 < stats["prefill_pages_live"] <= stats["prefill_pages_cand"]
+    assert 0.0 < stats["prefill_live_frac"] <= 1.0

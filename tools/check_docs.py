@@ -24,6 +24,10 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# Fenced blocks and inline code spans: excluded from the *link* pass —
+# `buf[_slice](arg=)` in prose about APIs is not a markdown link.  The
+# repo-path pass below still scans them (that is its whole point).
+CODE_RE = re.compile(r"```.*?```|`[^`\n]*`", re.S)
 # Repo paths mentioned in prose/code blocks: a known top-level dir followed
 # by a concrete file with an extension (directories get a trailing /).
 PATH_RE = re.compile(
@@ -46,7 +50,7 @@ def check_file(relpath: str) -> list[str]:
     with open(path, encoding="utf-8") as f:
         text = f.read()
     base = os.path.dirname(path)
-    for m in LINK_RE.finditer(text):
+    for m in LINK_RE.finditer(CODE_RE.sub("", text)):
         target = m.group(1)
         if target.startswith(SKIP_SCHEMES):
             continue
